@@ -1,0 +1,83 @@
+"""§Perf hillclimb driver: run baseline + variants for the three chosen
+cells, record hypothesis -> change -> before -> after.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate [--out experiments/perf.jsonl]
+
+Cells (per the assignment: worst roofline fraction, most collective-bound,
+most paper-representative):
+  A. aspen-stream/update_2m   — the paper's own streaming batch-union
+  B. qwen3-moe-30b-a3b/prefill_32k — most collective-bound assigned cell
+  C. smollm-360m/train_4k     — worst useful-compute fraction (dense LM)
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+ITERATIONS = [
+    # (cell tag, arch, shape, build_kw, hypothesis)
+    ("A0", "aspen-stream", "update_2m", {},
+     "baseline: global rank-merge; searchsorted across the sharded pool "
+     "forces all-gathers -> collective-bound (predicted x ~ pool_bytes/links)"),
+    ("A1", "aspen-stream", "update_2m", {"variant": "shardmap", "extrapolate": False},
+     "range-shard the pool; shard-local merge; only the 16MB batch crosses "
+     "links -> predict collective drops ~400x, memory term becomes dominant"),
+    ("A2", "aspen-stream", "update_2m", {"variant": "overlay", "extrapolate": False},
+     "LSM overlay: merge batch into an 8x-batch overlay instead of the "
+     "pool -> predict memory term drops ~16x vs A1 (traffic O(overlay), "
+     "amortized compaction), at +1 probe per query"),
+    ("B0", "qwen3-moe-30b-a3b", "prefill_32k", {},
+     "baseline MoE dispatch: scatter into (E*C, D) buffer makes GSPMD "
+     "all-gather token activations -> collective-bound"),
+    ("B1", "qwen3-moe-30b-a3b", "prefill_32k",
+     {"overrides": {"moe_shard_dispatch": True}},
+     "pin dispatch shardings (tokens batch-sharded, expert buffer "
+     "model-sharded) -> GSPMD should emit all-to-alls; predict collective "
+     "term falls by ~E_shards, compute unchanged"),
+    ("C0", "smollm-360m", "train_4k", {},
+     "baseline chunked attention visits all (q,kv) blocks and masks above "
+     "the diagonal: ~2x wasted attention flops+bytes (useful frac 0.19)"),
+    ("C1", "smollm-360m", "train_4k", {"overrides": {"attn_impl": "tri"}},
+     "triangular block schedule: visit only j<=i kv-blocks, mask only the "
+     "diagonal -> predict attention flops/bytes fall ~1.8x; useful frac up"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/perf.jsonl")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--only", default=None, help="comma list of tags, e.g. A0,A1")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    multi = args.mesh == "multi"
+
+    for tag, arch, shape, kw, hypothesis in ITERATIONS:
+        if only and tag not in only:
+            continue
+        try:
+            res = run_cell(arch, shape, multi, **kw)
+            res["perf_tag"] = tag
+            res["hypothesis"] = hypothesis
+            print(
+                f"[{tag}] {arch}/{shape}: c={res['compute_s_term']:.3e} "
+                f"m={res['memory_s_term']:.3e} x={res['collective_s_term']:.3e} "
+                f"dom={res['dominant']} useful={res['useful_compute_frac']:.3f}"
+            )
+        except Exception as e:  # noqa: BLE001
+            res = {"perf_tag": tag, "arch": arch, "shape": shape, "ok": False,
+                   "hypothesis": hypothesis, "error": f"{type(e).__name__}: {e}"}
+            print(f"[{tag}] FAIL: {str(e)[:300]}")
+        with open(args.out, "a") as f:
+            f.write(json.dumps(res) + "\n")
+
+
+if __name__ == "__main__":
+    main()

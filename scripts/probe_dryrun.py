@@ -1,0 +1,58 @@
+"""Derisk probe: 512 host devices, multi-pod mesh, lower/compile, analyses."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import time
+import re
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+t0 = time.time()
+print("devices:", len(jax.devices()))
+
+mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+print("mesh:", mesh.shape, time.time() - t0)
+
+D = 1024
+FF = 4096
+
+
+def step(w1, w2, x):
+    # toy 2-layer mlp with psum-style data parallel grad
+    h = jnp.einsum("bd,df->bf", x, w1)
+    h = jax.nn.gelu(h)
+    o = jnp.einsum("bf,fd->bd", h, w2)
+    loss = jnp.mean(o * o)
+    g1, g2 = jax.grad(lambda a, b: jnp.mean(jax.nn.gelu(x @ a) @ b), argnums=(0, 1))(w1, w2)
+    return loss, (w1 - 1e-3 * g1, w2 - 1e-3 * g2)
+
+
+w1_s = NamedSharding(mesh, P(None, "model"))
+w2_s = NamedSharding(mesh, P("model", None))
+x_s = NamedSharding(mesh, P(("pod", "data"), None))
+
+w1 = jax.ShapeDtypeStruct((D, FF), jnp.bfloat16, sharding=w1_s)
+w2 = jax.ShapeDtypeStruct((FF, D), jnp.bfloat16, sharding=w2_s)
+x = jax.ShapeDtypeStruct((256, D), jnp.bfloat16, sharding=x_s)
+
+t1 = time.time()
+lowered = jax.jit(step, in_shardings=(w1_s, w2_s, x_s),
+                  out_shardings=(NamedSharding(mesh, P()), (w1_s, w2_s))).lower(w1, w2, x)
+print("lower ok", time.time() - t1)
+t2 = time.time()
+compiled = lowered.compile()
+print("compile ok", time.time() - t2)
+
+ma = compiled.memory_analysis()
+print("memory_analysis:", ma)
+ca = compiled.cost_analysis()
+print("cost keys:", {k: v for k, v in list(ca.items())[:10] if isinstance(v, float)})
+print("flops:", ca.get("flops"), "bytes accessed:", ca.get("bytes accessed"))
+
+hlo = compiled.as_text()
+colls = re.findall(r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)[^\n]*", hlo)
+print("n collective lines:", len(colls))
+for c in colls[:5]:
+    print("  ", c[:160])
+print("total probe time:", time.time() - t0)

@@ -1,0 +1,13 @@
+"""repro: Aspen-JAX — compressed purely-functional trees for graph
+streaming (PLDI'19) as a multi-pod JAX framework.
+
+x64 is enabled globally: the flat C-tree packs (src, dst) vertex pairs
+into int64 keys, which JAX would silently truncate to int32 otherwise.
+All model code states dtypes explicitly (bf16/f32/int32), so numerics are
+unaffected; only index/key arithmetic gains true 64-bit.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

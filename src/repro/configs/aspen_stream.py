@@ -1,0 +1,8 @@
+"""aspen-stream: the paper's own configuration — the Aspen streaming
+step (flat C-tree batch union + offsets rebuild) and global queries
+(BFS/CC edgeMap steps) lowered at production scale on the mesh."""
+from repro.configs.registry import ArchSpec, STREAM_SHAPES, StreamConfig
+
+FULL = StreamConfig(name="aspen-stream", b=256)
+REDUCED = StreamConfig(name="aspen-stream-smoke", b=8)
+SPEC = ArchSpec("aspen-stream", "stream", FULL, REDUCED, STREAM_SHAPES)

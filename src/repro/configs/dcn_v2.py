@@ -1,0 +1,11 @@
+"""dcn-v2 [recsys]: 13 dense + 26 sparse(16d), 3 cross layers,
+MLP 1024-1024-512 [arXiv:2008.13535].  Embedding tables row-sharded over
+the model axis; retrieval head scores 10^6 candidates in one GEMM."""
+from repro.configs.registry import ArchSpec, RECSYS_SHAPES, DCNConfig
+
+FULL = DCNConfig(name="dcn-v2")
+REDUCED = DCNConfig(
+    name="dcn-v2-smoke", n_dense=4, n_sparse=6, embed_dim=8, n_cross=2,
+    mlp_dims=(32, 16), vocab_per_field=1000, n_candidates=512,
+)
+SPEC = ArchSpec("dcn-v2", "recsys", FULL, REDUCED, RECSYS_SHAPES)

@@ -1,0 +1,15 @@
+"""starcoder2-7b [dense]: 32L d_model=4608 36H (GQA kv=4) d_ff=18432
+vocab=49152 — GQA, RoPE [arXiv:2402.19173].  36 heads do not divide the
+16-way model axis: attention replicates; the 4d FFN carries the TP."""
+from repro.configs.registry import ArchSpec, LM_SHAPES
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="starcoder2-7b", n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+    d_ff=18432, vocab=49152, mlp_kind="gelu",
+)
+REDUCED = LMConfig(
+    name="starcoder2-7b-smoke", n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+    d_ff=512, vocab=512, mlp_kind="gelu",
+)
+SPEC = ArchSpec("starcoder2-7b", "lm", FULL, REDUCED, LM_SHAPES)

@@ -1,0 +1,266 @@
+"""Graph algorithms over Aspen snapshots (paper §7 "Algorithms").
+
+Global: BFS, BC (single-source betweenness), MIS, plus PageRank and
+label-propagation CC (extras beyond the paper's five).
+Local:  2-hop, Local-Cluster (Nibble-Serial, [71, 72]).
+
+All globals take a FlatSnapshot (paper §5.1: global algorithms can afford
+the O(n) flat-snapshot and then pay O(deg(v)) per vertex, as CSR would);
+locals run directly against the tree to model the no-snapshot regime.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from . import ctree as ct
+from .edgemap import VertexSubset, edge_map, from_ids, gather_csr
+from .graph import FlatSnapshot, Graph, find_vertex
+
+
+def _total_edges(snap: FlatSnapshot) -> int:
+    return sum(snap.degree(v) for v in range(snap.n))
+
+
+# ---------------------------------------------------------------------------
+# BFS (direction-optimized, paper §5.1)
+# ---------------------------------------------------------------------------
+
+
+def bfs(snap: FlatSnapshot, src: int, direction_optimize: bool = True) -> np.ndarray:
+    """Returns the parent array (-1 = unreached; src's parent is itself)."""
+    n = snap.n
+    parents = np.full(n, -1, dtype=np.int64)
+    parents[src] = src
+    frontier = from_ids(n, [src])
+    m = _total_edges(snap)
+
+    def C(vs):
+        return parents[vs] == -1
+
+    def F(us, vs):
+        # claim: first writer wins (vectorized CAS emulation: np unique)
+        vs_u, first = np.unique(vs, return_index=True)
+        unclaimed = parents[vs_u] == -1
+        parents[vs_u[unclaimed]] = us[first][unclaimed]
+        return np.zeros(us.shape, dtype=bool)  # outputs built from claims
+
+    def F_sparse(us, vs):
+        vs_u, first = np.unique(vs, return_index=True)
+        unclaimed = parents[vs_u] == -1
+        parents[vs_u[unclaimed]] = us[first][unclaimed]
+        won = np.zeros(us.shape, dtype=bool)
+        idx = first[unclaimed]
+        won[idx] = True
+        return won
+
+    def F_dense(candidates, offsets, nbrs, nbr_in_u):
+        """Dense direction: each unreached v scans in-neighbors for any in
+        the frontier; takes the first as parent (Beamer bottom-up)."""
+        seg = np.repeat(np.arange(candidates.size), np.diff(offsets))
+        hit = nbr_in_u
+        out_mask = np.zeros(candidates.size, dtype=bool)
+        # first hit per segment
+        if hit.any():
+            hit_idx = np.flatnonzero(hit)
+            seg_hit = seg[hit_idx]
+            first_per_seg = np.unique(seg_hit, return_index=True)
+            segs, firsts = first_per_seg
+            parents[candidates[segs]] = nbrs[hit_idx[firsts]]
+            out_mask[segs] = True
+        return out_mask
+
+    while not frontier.empty:
+        frontier = edge_map(
+            snap,
+            frontier,
+            F_sparse,
+            C,
+            m=m,
+            direction_optimize=direction_optimize,
+            F_dense=F_dense,
+        )
+    return parents
+
+
+# ---------------------------------------------------------------------------
+# Betweenness centrality (Brandes, single source; paper's BC)
+# ---------------------------------------------------------------------------
+
+
+def bc(snap: FlatSnapshot, src: int) -> np.ndarray:
+    """Single-source betweenness contributions (paper §7: BC computes the
+    contributions for shortest paths from one vertex)."""
+    n = snap.n
+    num_paths = np.zeros(n, dtype=np.float64)
+    num_paths[src] = 1.0
+    visited = np.zeros(n, dtype=bool)
+    visited[src] = True
+    levels = []
+    frontier = np.asarray([src], dtype=np.int64)
+    # forward: count shortest paths level by level
+    while frontier.size:
+        levels.append(frontier)
+        offsets, nbrs = gather_csr(snap, frontier)
+        srcs = np.repeat(frontier, np.diff(offsets))
+        mask = ~visited[nbrs]
+        if mask.any():
+            np.add.at(num_paths, nbrs[mask], num_paths[srcs[mask]])
+            nxt = np.unique(nbrs[mask])
+        else:
+            nxt = np.empty(0, dtype=np.int64)
+        visited[nxt] = True
+        frontier = nxt
+    # backward: accumulate dependencies level by level (Brandes)
+    dependencies = _bc_backward(snap, levels, num_paths)
+    dependencies[src] = 0.0
+    return dependencies
+
+
+def _bc_backward(snap, levels, num_paths) -> np.ndarray:
+    n = snap.n
+    level_of = np.full(n, -1, dtype=np.int64)
+    for d, lv in enumerate(levels):
+        level_of[lv] = d
+    dep = np.zeros(n, dtype=np.float64)
+    for d in range(len(levels) - 2, -1, -1):
+        frontier = levels[d]
+        offsets, nbrs = gather_csr(snap, frontier)
+        srcs = np.repeat(frontier, np.diff(offsets))
+        succ = level_of[nbrs] == (d + 1)
+        if succ.any():
+            u, v = srcs[succ], nbrs[succ]
+            contrib = (num_paths[u] / num_paths[v]) * (1.0 + dep[v])
+            np.add.at(dep, u, contrib)
+    return dep
+
+
+# ---------------------------------------------------------------------------
+# Maximal independent set (rootset-based, Luby-style rounds)
+# ---------------------------------------------------------------------------
+
+
+def mis(snap: FlatSnapshot, seed: int = 0) -> np.ndarray:
+    """Bool mask of a maximal independent set."""
+    n = snap.n
+    rng = np.random.default_rng(seed)
+    pri = rng.permutation(n)  # random priorities
+    in_set = np.zeros(n, dtype=bool)
+    removed = np.zeros(n, dtype=bool)
+    remaining = np.arange(n, dtype=np.int64)
+    while remaining.size:
+        offsets, nbrs = gather_csr(snap, remaining)
+        srcs = np.repeat(remaining, np.diff(offsets))
+        alive_e = ~removed[nbrs]
+        # u is a local max if no alive neighbor has higher priority
+        worse = np.zeros(n, dtype=bool)
+        hi = alive_e & (pri[nbrs] > pri[srcs])
+        np.logical_or.at(worse, srcs[hi], True)
+        winners = remaining[~worse[remaining]]
+        in_set[winners] = True
+        removed[winners] = True
+        # remove neighbors of winners
+        w_off, w_nbrs = gather_csr(snap, winners)
+        removed[w_nbrs] = True
+        remaining = remaining[~removed[remaining]]
+    return in_set
+
+
+def verify_mis(snap: FlatSnapshot, in_set: np.ndarray) -> bool:
+    n = snap.n
+    for v in range(n):
+        nbrs = snap.neighbors(v)
+        if in_set[v]:
+            if in_set[nbrs].any():
+                return False
+        else:
+            if not in_set[nbrs].any() and nbrs.size:
+                return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Local algorithms (run against the tree, no flat snapshot — paper §5.1)
+# ---------------------------------------------------------------------------
+
+
+def two_hop(g: Graph, src: int) -> np.ndarray:
+    """Vertices within 2 hops of src (local query; tree access)."""
+    et = find_vertex(g, src)
+    if et is None:
+        return np.empty(0, dtype=np.int64)
+    one = ct.to_array(et)
+    parts = [one]
+    for u in one.tolist():
+        eu = find_vertex(g, int(u))
+        if eu is not None:
+            parts.append(ct.to_array(eu))
+    out = np.unique(np.concatenate(parts)) if parts else np.empty(0, np.int64)
+    return out[out != src]
+
+
+def local_cluster(
+    g: Graph, src: int, eps: float = 1e-6, T: int = 10, alpha: float = 0.15
+) -> np.ndarray:
+    """Nibble-Serial ([71, 72]): truncated random-walk heat-kernel cluster.
+
+    Sequential by design (paper runs many concurrently); returns the
+    cluster's vertex ids.
+    """
+    p = {src: 1.0}
+    for _ in range(T):
+        nxt: dict = {}
+        for v, mass in p.items():
+            if mass < eps:
+                continue
+            et = find_vertex(g, int(v))
+            nbrs = ct.to_array(et) if et is not None else np.empty(0, np.int64)
+            keep = alpha * mass
+            nxt[v] = nxt.get(v, 0.0) + keep
+            if nbrs.size:
+                share = (1 - alpha) * mass / nbrs.size
+                for u in nbrs.tolist():
+                    nxt[u] = nxt.get(u, 0.0) + share
+        p = nxt
+    verts = np.asarray(sorted(p, key=p.get, reverse=True), dtype=np.int64)
+    mass = np.asarray([p[int(v)] for v in verts])
+    cut = max(1, int((mass.cumsum() <= 0.9 * mass.sum()).sum()))
+    return np.sort(verts[:cut])
+
+
+# ---------------------------------------------------------------------------
+# extras: PageRank + connected components (beyond the paper's five)
+# ---------------------------------------------------------------------------
+
+
+def pagerank(snap: FlatSnapshot, iters: int = 10, damping: float = 0.85) -> np.ndarray:
+    n = snap.n
+    deg = np.asarray([snap.degree(v) for v in range(n)], dtype=np.float64)
+    offsets, nbrs = gather_csr(snap, np.arange(n, dtype=np.int64))
+    srcs = np.repeat(np.arange(n, dtype=np.int64), np.diff(offsets))
+    pr = np.full(n, 1.0 / n)
+    dangling = deg == 0
+    for _ in range(iters):
+        contrib = np.zeros(n)
+        w = pr[srcs] / np.maximum(deg[srcs], 1)
+        np.add.at(contrib, nbrs, w)
+        contrib += pr[dangling].sum() / n  # redistribute dangling mass
+        pr = (1 - damping) / n + damping * contrib
+    return pr
+
+
+def connected_components(snap: FlatSnapshot, max_iters: int = 1000) -> np.ndarray:
+    """Label propagation (min-label) to fixpoint."""
+    n = snap.n
+    labels = np.arange(n, dtype=np.int64)
+    offsets, nbrs = gather_csr(snap, np.arange(n, dtype=np.int64))
+    srcs = np.repeat(np.arange(n, dtype=np.int64), np.diff(offsets))
+    for _ in range(max_iters):
+        new = labels.copy()
+        np.minimum.at(new, nbrs, labels[srcs])
+        np.minimum.at(new, srcs, labels[nbrs])
+        if (new == labels).all():
+            break
+        labels = new
+    return labels

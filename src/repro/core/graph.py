@@ -1,0 +1,196 @@
+"""Graphs as trees of C-trees (paper §5) — the faithful Aspen core.
+
+The vertex-tree is a purely-functional augmented treap (``pam``) mapping
+``vertex_id -> edge C-tree``; the augmentation tracks total edge count so
+``num_edges`` is O(1).  Batch updates follow §5 exactly: sort the batch,
+build a C-tree per touched source, MULTIINSERT into the vertex-tree with
+UNION as the value-combiner.
+
+A *flat snapshot* (§5.1) is an array of per-vertex edge-tree references —
+O(n) work to build, after which edge access is O(deg(v)) like CSR.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional
+
+import numpy as np
+
+from . import ctree as ct
+from .pam import Node, TreeModule
+
+# vertex-tree: value = edge C-tree; aug = #edges
+_VMOD = TreeModule(
+    aug_of=lambda k, et: ct.ctree_size(et) if et is not None else 0,
+    combine=lambda a, b: a + b,
+    zero=0,
+)
+
+
+class Graph(NamedTuple):
+    """An immutable graph snapshot (one version)."""
+
+    vtree: Node  # treap: vertex id -> CTree of neighbor ids
+    b: int = ct.DEFAULT_B
+    seed: int = ct.DEFAULT_SEED
+
+
+def empty(b: int = ct.DEFAULT_B, seed: int = ct.DEFAULT_SEED) -> Graph:
+    return Graph(None, b, seed)
+
+
+def num_vertices(g: Graph) -> int:
+    from .pam import size
+
+    return size(g.vtree)
+
+
+def num_edges(g: Graph) -> int:
+    """O(1) via the vertex-tree augmentation (paper §5)."""
+    return _VMOD.aug(g.vtree)
+
+
+def find_vertex(g: Graph, v: int) -> Optional[ct.CTree]:
+    return _VMOD.find(g.vtree, v)
+
+
+def degree(g: Graph, v: int) -> int:
+    et = find_vertex(g, v)
+    return ct.ctree_size(et) if et is not None else 0
+
+
+# ---------------------------------------------------------------------------
+# construction & batch updates (paper §5 "Batch Updates")
+# ---------------------------------------------------------------------------
+
+
+def _group_batch(edges: np.ndarray):
+    """Sort a (k, 2) batch by (src, dst) and yield (src, dst_array)."""
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if edges.shape[0] == 0:
+        return
+    order = np.lexsort((edges[:, 1], edges[:, 0]))
+    edges = edges[order]
+    srcs, starts = np.unique(edges[:, 0], return_index=True)
+    bounds = np.append(starts, edges.shape[0])
+    for i, s in enumerate(srcs.tolist()):
+        yield int(s), edges[bounds[i] : bounds[i + 1], 1]
+
+
+def build_graph(n: int, edges: np.ndarray, b: int = ct.DEFAULT_B, seed: int = ct.DEFAULT_SEED) -> Graph:
+    """BuildGraph: n isolated vertices + a batch of directed edges."""
+    per_vertex = {s: d for s, d in _group_batch(edges)}
+    entries = []
+    for v in range(n):
+        dsts = per_vertex.get(v)
+        et = ct.build(dsts, b, seed) if dsts is not None else ct.empty(b, seed)
+        entries.append((v, et))
+    return Graph(_VMOD.build_sorted(entries), b, seed)
+
+
+def insert_edges(g: Graph, edges: np.ndarray) -> Graph:
+    """InsertEdges: functional batch insert (new snapshot returned).
+
+    Sort batch -> per-source C-trees -> MultiInsert with UNION combiner
+    (paper §5).  Vertices not yet present are created.
+    """
+    updates = [
+        (s, ct.build(dsts, g.b, g.seed)) for s, dsts in _group_batch(edges)
+    ]
+    vt = _VMOD.multi_insert(
+        g.vtree,
+        updates,
+        combine_values=lambda old, new: ct.union(old, new)
+        if old is not None
+        else new,
+    )
+    return Graph(vt, g.b, g.seed)
+
+
+def delete_edges(g: Graph, edges: np.ndarray) -> Graph:
+    """DeleteEdges: functional batch delete via DIFFERENCE."""
+    removals = {s: dsts for s, dsts in _group_batch(edges)}
+    updates = []
+    for s, dsts in removals.items():
+        old = _VMOD.find(g.vtree, s)
+        if old is None:
+            continue
+        updates.append((s, ct.multi_delete(old, dsts)))
+    vt = _VMOD.multi_insert(g.vtree, updates, combine_values=lambda old, new: new)
+    return Graph(vt, g.b, g.seed)
+
+
+def insert_vertices(g: Graph, vs: np.ndarray) -> Graph:
+    updates = [(int(v), ct.empty(g.b, g.seed)) for v in np.asarray(vs)]
+    vt = _VMOD.multi_insert(g.vtree, updates, combine_values=lambda old, new: old)
+    return Graph(vt, g.b, g.seed)
+
+
+def delete_vertices(g: Graph, vs: np.ndarray) -> Graph:
+    """Remove vertices (and their out-edges; callers of symmetric graphs
+    pass both endpoints' edges to delete_edges first)."""
+    vt = _VMOD.multi_delete(g.vtree, [int(v) for v in np.asarray(vs)])
+    return Graph(vt, g.b, g.seed)
+
+
+# ---------------------------------------------------------------------------
+# flat snapshots (paper §5.1)
+# ---------------------------------------------------------------------------
+
+
+class FlatSnapshot(NamedTuple):
+    """Array of per-vertex edge-tree refs: O(1) vertex access (§5.1).
+
+    Building is O(n) work / O(log n) depth in the paper (one traversal);
+    the functional trees underneath stay shared and immutable, so a flat
+    snapshot can be taken concurrently with updates.
+    """
+
+    edge_trees: List[Optional[ct.CTree]]  # indexed by vertex id
+    n: int
+
+    def neighbors(self, v: int) -> np.ndarray:
+        et = self.edge_trees[v]
+        return ct.to_array(et) if et is not None else np.empty(0, np.int64)
+
+    def degree(self, v: int) -> int:
+        et = self.edge_trees[v]
+        return ct.ctree_size(et) if et is not None else 0
+
+
+def flat_snapshot(g: Graph) -> FlatSnapshot:
+    n = 0
+    refs: List[Optional[ct.CTree]] = []
+    max_v = -1
+    pairs = list(_VMOD.iter_entries(g.vtree))
+    if pairs:
+        max_v = pairs[-1][0]
+    refs = [None] * (max_v + 1)
+    for v, et in pairs:
+        refs[v] = et
+    return FlatSnapshot(refs, max_v + 1)
+
+
+def snapshot_nbytes(s: FlatSnapshot) -> int:
+    """8 bytes per vertex pointer (paper Table 2 'Flat Snap.')."""
+    return 8 * s.n
+
+
+def graph_nbytes(g: Graph, compressed: bool = True, chunked: bool = True) -> int:
+    """Aspen memory model (paper §7.1).
+
+    chunked=False emulates the 'Aspen Uncomp.' column: every edge is its
+    own 32B functional tree node, every vertex a 48B node.
+    compressed=False with chunked=True is the 'No DE' column (8B/element
+    chunks).
+    """
+    VERTEX_NODE = 56 if chunked else 48  # §7.1: 56B with prefix pointers
+    total = 0
+    for v, et in _VMOD.iter_entries(g.vtree):
+        total += VERTEX_NODE
+        if et is None:
+            continue
+        if chunked:
+            total += ct.nbytes(et, compressed=compressed)
+        else:
+            total += ct.uncompressed_tree_bytes(et)
+    return total

@@ -1,0 +1,68 @@
+"""Uniform hash family for C-tree head selection (paper §3.1).
+
+An element ``e`` is promoted to a *head* iff ``h(e) mod b == 0`` where ``h``
+is drawn from a (approximately) uniformly random family.  The critical
+property the paper exploits — and that we exploit even harder on TPU — is
+that headness is a pure per-element predicate: it does not depend on the
+tree shape, history, or neighbors, so re-chunking after a batch update is an
+embarrassingly parallel map.
+
+We use the murmur3 32-bit finalizer (a measured-good avalanche mix) with a
+seed that selects the family member.  Identical results are produced by the
+numpy path (faithful host C-tree) and the jnp path (flat TPU C-tree) so the
+two levels chunk identically — property-tested in tests/test_hash.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+_DEFAULT_SEED = np.uint32(0x9E3779B9)
+
+
+def hash32_np(x: np.ndarray, seed: int | np.uint32 = _DEFAULT_SEED) -> np.ndarray:
+    """murmur3 fmix32 over uint32 lanes (numpy). uint32 wraparound is the
+    point of the mix, so overflow warnings are suppressed locally."""
+    with np.errstate(over="ignore"):
+        h = (np.asarray(x).astype(np.uint64) & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        h ^= np.uint32(seed)
+        h ^= h >> np.uint32(16)
+        h = (h * np.uint32(0x85EBCA6B)).astype(np.uint32)
+        h ^= h >> np.uint32(13)
+        h = (h * np.uint32(0xC2B2AE35)).astype(np.uint32)
+        h ^= h >> np.uint32(16)
+    return h
+
+
+def hash32_jnp(x: jnp.ndarray, seed: int = int(_DEFAULT_SEED)) -> jnp.ndarray:
+    """murmur3 fmix32 over uint32 lanes (jax; identical to hash32_np)."""
+    h = x.astype(jnp.uint32)
+    h = h ^ jnp.uint32(seed)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def is_head_np(x: np.ndarray, b: int, seed: int | np.uint32 = _DEFAULT_SEED) -> np.ndarray:
+    """Head predicate h(e) mod b == 0.  ``b`` need not be a power of two,
+    but powers of two are cheapest (mask instead of mod)."""
+    h = hash32_np(x, seed)
+    if b & (b - 1) == 0:
+        return (h & np.uint32(b - 1)) == 0
+    return (h % np.uint32(b)) == 0
+
+
+def is_head_jnp(x: jnp.ndarray, b: int, seed: int = int(_DEFAULT_SEED)) -> jnp.ndarray:
+    h = hash32_jnp(x, seed)
+    if b & (b - 1) == 0:
+        return (h & jnp.uint32(b - 1)) == 0
+    return (h % jnp.uint32(b)) == 0
+
+
+def priority_np(x, seed: int | np.uint32 = _DEFAULT_SEED):
+    """Treap priorities for the head tree (independent family member)."""
+    return hash32_np(np.asarray(x), np.uint32(seed) ^ np.uint32(0xDEADBEEF))

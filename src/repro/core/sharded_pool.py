@@ -1,0 +1,172 @@
+"""Sharded flat C-tree pool: the beyond-paper distributed optimization.
+
+The baseline flat union (flat_ctree.union_merge) is a *global* rank-merge:
+under GSPMD, the cross-shard searchsorteds force all-gathers of the whole
+pool — collective-bound at pod scale (EXPERIMENTS.md §Perf baseline).
+
+Here each device owns a contiguous KEY RANGE of the pool (range-sharded,
+like a distributed LSM level).  A batch update becomes:
+
+  1. all-gather the (small) batch — k << n bytes on the wire;
+  2. every shard slices the batch rows falling in its key range
+     (two searchsorteds against its own boundaries);
+  3. shard-LOCAL rank-merge into its own slack capacity.
+
+Collective traffic drops from O(pool) to O(batch); the merge itself stays
+bandwidth-optimal locally.  Queries (member) need one searchsorted against
+the shard boundary table (replicated, n_shards entries) then a local
+probe — same depth as before.
+
+Rebalancing: shards fill unevenly; when any shard exceeds its capacity
+the host triggers a REBALANCE (an O(n) all-to-all redistribution to equal
+counts — amortized over many updates, like LSM compaction).  The
+imbalance statistics and trigger live here; the dry run lowers the
+steady-state update step.
+
+Implemented with shard_map so the collective schedule is explicit, not
+GSPMD-inferred.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .flat_ctree import sentinel_for
+
+SENT = sentinel_for(jnp.int64)
+
+
+class ShardedPool(NamedTuple):
+    """Range-sharded sorted pool; a jax pytree.
+
+    data  : (n_shards, cap_per) sorted within each shard; pad = SENT
+    n     : (n_shards,) valid counts
+    lo    : (n_shards,) inclusive lower key boundary of each shard
+    """
+
+    data: jax.Array
+    n: jax.Array
+    lo: jax.Array
+
+
+def from_array(values: np.ndarray, n_shards: int, cap_per: int | None = None) -> ShardedPool:
+    v = np.unique(np.asarray(values, dtype=np.int64))
+    per = -(-v.size // n_shards)
+    if cap_per is None:
+        cap_per = max(8, int(2 ** np.ceil(np.log2(per * 2 + 1))))
+    data = np.full((n_shards, cap_per), SENT, dtype=np.int64)
+    n = np.zeros((n_shards,), dtype=np.int32)
+    lo = np.full((n_shards,), np.iinfo(np.int64).min, dtype=np.int64)
+    for s in range(n_shards):
+        chunk = v[s * per : (s + 1) * per]
+        data[s, : chunk.size] = chunk
+        n[s] = chunk.size
+        lo[s] = chunk[0] if chunk.size else (lo[s - 1] if s else 0)
+    # boundaries must be monotone even for empty shards
+    for s in range(1, n_shards):
+        if n[s] == 0:
+            lo[s] = max(lo[s - 1], lo[s])
+    lo[0] = np.iinfo(np.int64).min
+    return ShardedPool(jnp.asarray(data), jnp.asarray(n), jnp.asarray(lo))
+
+
+def to_array(p: ShardedPool) -> np.ndarray:
+    data = np.asarray(p.data)
+    n = np.asarray(p.n)
+    return np.concatenate([data[s, : n[s]] for s in range(data.shape[0])])
+
+
+def _local_merge(pool_row: jax.Array, n_valid: jax.Array, batch: jax.Array,
+                 b_lo: jax.Array, b_hi: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Merge batch[b_lo:b_hi) into one shard row (fixed shapes, O(n+k))."""
+    cap = pool_row.shape[0]
+    kcap = batch.shape[0]
+    # mask the batch to this shard's range
+    idx = jnp.arange(kcap)
+    mine = (idx >= b_lo) & (idx < b_hi)
+    b = jnp.where(mine, batch, SENT)
+    b = jnp.sort(b)  # my rows to the front (already sorted among themselves)
+    n_mine = (b_hi - b_lo).astype(jnp.int32)
+    valid_a = jnp.arange(cap) < n_valid
+    valid_b = jnp.arange(kcap) < n_mine
+    # dedup b against a
+    ia = jnp.minimum(jnp.searchsorted(pool_row, b), cap - 1)
+    dup_b = (pool_row[ia] == b) & valid_b
+    keep_b = valid_b & ~dup_b
+    kb_excl = jnp.cumsum(keep_b.astype(jnp.int32)) - keep_b
+    ra = jnp.searchsorted(b, pool_row)
+    kept_below_a = jnp.where(
+        ra > 0,
+        kb_excl[jnp.minimum(ra - 1, kcap - 1)] + keep_b[jnp.minimum(ra - 1, kcap - 1)],
+        0,
+    )
+    pos_a = jnp.arange(cap, dtype=jnp.int32) + kept_below_a.astype(jnp.int32)
+    pos_a = jnp.where(valid_a, pos_a, cap)
+    rb = jnp.searchsorted(pool_row, b)
+    pos_b = rb.astype(jnp.int32) + kb_excl.astype(jnp.int32)
+    pos_b = jnp.where(keep_b, pos_b, cap)
+    out = jnp.full((cap,), SENT, dtype=pool_row.dtype)
+    out = out.at[pos_a].set(pool_row, mode="drop")
+    out = out.at[pos_b].set(b, mode="drop")
+    return out, n_valid + keep_b.sum().astype(jnp.int32)
+
+
+def make_insert_step(mesh: Mesh, axis_names: Tuple[str, ...]):
+    """Build the shard_map'd update step for a given mesh.
+
+    axis_names: the mesh axes the shard dimension is split over (all of
+    them: every chip owns one key range)."""
+    flat_axes = axis_names
+
+    def local(data, n, lo, hi, batch):
+        # shapes inside shard_map: data (1, cap), n (1,), lo/hi (1,),
+        # batch (kcap,) REPLICATED (this is the one collective: GSPMD
+        # all-gathers the batch operand once).
+        b_lo = jnp.searchsorted(batch, lo[0])
+        b_hi = jnp.searchsorted(batch, hi[0])
+        out, n_new = _local_merge(data[0], n[0], batch, b_lo, b_hi)
+        return out[None], n_new[None]
+
+    spec_sharded = P(flat_axes)
+    spec_sharded2 = P(flat_axes, None)
+
+    def step(pool: ShardedPool, batch: jax.Array) -> ShardedPool:
+        n_shards = pool.data.shape[0]
+        hi = jnp.concatenate([pool.lo[1:], jnp.asarray([jnp.iinfo(jnp.int64).max], jnp.int64)])
+        out, n_new = jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(spec_sharded2, spec_sharded, spec_sharded, spec_sharded, P()),
+            out_specs=(spec_sharded2, spec_sharded),
+        )(pool.data, pool.n, pool.lo, hi, batch)
+        return ShardedPool(out, n_new, pool.lo)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# queries + rebalance policy (host-driven)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def member(p: ShardedPool, queries: jax.Array) -> jax.Array:
+    """shard id via boundary table, then local probe (vectorized)."""
+    s = jnp.clip(jnp.searchsorted(p.lo, queries, side="right") - 1, 0, p.lo.shape[0] - 1)
+    rows = p.data[s]
+    j = jnp.clip(jax.vmap(jnp.searchsorted)(rows, queries), 0, p.data.shape[1] - 1)
+    return jnp.take_along_axis(rows, j[:, None], axis=1)[:, 0] == queries
+
+
+def needs_rebalance(p: ShardedPool, slack: float = 0.9) -> bool:
+    return bool((np.asarray(p.n) >= slack * p.data.shape[1]).any())
+
+
+def rebalance(p: ShardedPool) -> ShardedPool:
+    """O(n) redistribution to equal counts (the amortized compaction)."""
+    return from_array(to_array(p), p.data.shape[0], cap_per=p.data.shape[1])

@@ -1,0 +1,164 @@
+"""Aspen streaming interface (paper §6 + §7.3): updates ∥ queries.
+
+``AspenStream`` is the top-level object: a VersionedGraph plus the
+Ligra-style update API (InsertEdges / DeleteEdges / InsertVertices /
+DeleteVertices).  Updates are functional: each batch produces a new
+version published with SET; readers ACQUIRE snapshots and never block.
+
+``run_concurrent`` reproduces the paper's §7.3 experiment: one writer
+thread applying a stream of edge updates while reader threads run global
+queries; reports update throughput, per-edge visibility latency, and
+query latencies (concurrent vs isolated).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from . import graph as G
+from .versioning import VersionedGraph
+
+
+class AspenStream:
+    def __init__(self, initial: Optional[G.Graph] = None, b: int = 256, seed: int = 0x9E3779B9):
+        self.vg: VersionedGraph[G.Graph] = VersionedGraph(
+            initial if initial is not None else G.empty(b, seed)
+        )
+
+    # -- update API (paper Appendix 10.4) ---------------------------------
+    def insert_edges(self, edges: np.ndarray, symmetric: bool = True):
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if symmetric:
+            edges = np.concatenate([edges, edges[:, ::-1]])
+        return self.vg.update(lambda g: G.insert_edges(g, edges))
+
+    def delete_edges(self, edges: np.ndarray, symmetric: bool = True):
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if symmetric:
+            edges = np.concatenate([edges, edges[:, ::-1]])
+        return self.vg.update(lambda g: G.delete_edges(g, edges))
+
+    def insert_vertices(self, vs: np.ndarray):
+        return self.vg.update(lambda g: G.insert_vertices(g, vs))
+
+    def delete_vertices(self, vs: np.ndarray):
+        return self.vg.update(lambda g: G.delete_vertices(g, vs))
+
+    # -- read API -----------------------------------------------------------
+    def acquire(self):
+        return self.vg.acquire()
+
+    def release(self, v):
+        return self.vg.release(v)
+
+    def flat_snapshot(self) -> G.FlatSnapshot:
+        v = self.acquire()
+        try:
+            return G.flat_snapshot(v.graph)
+        finally:
+            self.release(v)
+
+
+class ConcurrentStats(NamedTuple):
+    updates_per_sec: float
+    mean_update_latency_s: float
+    query_latency_concurrent_s: float
+    query_latency_isolated_s: float
+    n_updates: int
+    n_queries: int
+
+
+def run_concurrent(
+    stream: AspenStream,
+    updates: np.ndarray,  # (k, 3): src, dst, is_delete
+    query_fn: Callable[[G.FlatSnapshot], object],
+    duration_s: float = 5.0,
+    batch_size: int = 1,
+) -> ConcurrentStats:
+    """Paper §7.3: writer applies updates one batch at a time while a
+    reader repeatedly runs query_fn against fresh snapshots."""
+    stop = threading.Event()
+    upd_lat: List[float] = []
+    n_upd = [0]
+
+    def updater():
+        i = 0
+        while not stop.is_set() and i < updates.shape[0]:
+            batch = updates[i : i + batch_size]
+            ins = batch[batch[:, 2] == 0][:, :2]
+            dels = batch[batch[:, 2] == 1][:, :2]
+            t0 = time.perf_counter()
+            if ins.size:
+                stream.insert_edges(ins)
+            if dels.size:
+                stream.delete_edges(dels)
+            upd_lat.append(time.perf_counter() - t0)
+            n_upd[0] += batch.shape[0]
+            i += batch_size
+
+    q_lat: List[float] = []
+
+    def reader():
+        while not stop.is_set():
+            snap = stream.flat_snapshot()
+            t0 = time.perf_counter()
+            query_fn(snap)
+            q_lat.append(time.perf_counter() - t0)
+
+    tu = threading.Thread(target=updater)
+    tq = threading.Thread(target=reader)
+    tu.start()
+    tq.start()
+    time.sleep(duration_s)
+    stop.set()
+    tu.join()
+    tq.join()
+
+    # isolated query latency on the final version
+    snap = stream.flat_snapshot()
+    iso: List[float] = []
+    for _ in range(max(3, min(10, len(q_lat)))):
+        t0 = time.perf_counter()
+        query_fn(snap)
+        iso.append(time.perf_counter() - t0)
+
+    total_upd_time = sum(upd_lat) if upd_lat else 1e-9
+    return ConcurrentStats(
+        updates_per_sec=(n_upd[0] * 2) / total_upd_time,  # directed edges/s
+        mean_update_latency_s=float(np.mean(upd_lat)) if upd_lat else 0.0,
+        query_latency_concurrent_s=float(np.mean(q_lat)) if q_lat else 0.0,
+        query_latency_isolated_s=float(np.mean(iso)),
+        n_updates=n_upd[0],
+        n_queries=len(q_lat),
+    )
+
+
+def make_update_stream(
+    edges: np.ndarray, n_updates: int, seed: int = 0, delete_frac: float = 0.1
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Paper §7.3 methodology: sample updates from the input graph.
+
+    Returns (graph_edges_after_removal, update_stream[k,3]) where 90% of
+    the sampled edges are first removed from the graph and re-inserted by
+    the stream; 10% stay and get deleted by the stream.
+    """
+    rng = np.random.default_rng(seed)
+    m = edges.shape[0]
+    k = min(n_updates, m)
+    pick = rng.choice(m, size=k, replace=False)
+    sampled = edges[pick]
+    n_ins = int(k * (1 - delete_frac))
+    ins, dels = sampled[:n_ins], sampled[n_ins:]
+    keep_mask = np.ones(m, dtype=bool)
+    keep_mask[pick[:n_ins]] = False  # insertions start absent
+    stream = np.concatenate(
+        [
+            np.concatenate([ins, np.zeros((ins.shape[0], 1), np.int64)], axis=1),
+            np.concatenate([dels, np.ones((dels.shape[0], 1), np.int64)], axis=1),
+        ]
+    )
+    rng.shuffle(stream)
+    return edges[keep_mask], stream

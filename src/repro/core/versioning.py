@@ -1,0 +1,105 @@
+"""Version maintenance: acquire / set / release (paper §6, [8]).
+
+The paper solves the *version maintenance problem* with a lock-free
+algorithm because CPU writers and readers race on the version list.  In
+our single-controller runtime the writer is the Python host, so a host
+mutex around the (tiny, O(1)) version-list operations preserves the exact
+interface and serializability guarantees; lock-freedom addresses a race
+that cannot occur here (documented in DESIGN.md §2).
+
+Guarantees preserved from the paper:
+  * any number of concurrent readers acquire snapshots without blocking
+    the writer or each other (they hold immutable structure);
+  * a single writer ACQUIREs, builds functionally, SETs — the new version
+    becomes atomically visible to subsequent acquires;
+  * RELEASE refcounts; a version is garbage-collected (dropped from the
+    live list, letting shared tree nodes be reclaimed) when its refcount
+    reaches zero and it is not current — strict serializability holds
+    because every query runs against exactly one immutable version.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Generic, List, Optional, Tuple, TypeVar
+
+G = TypeVar("G")
+
+
+class Version(Generic[G]):
+    __slots__ = ("graph", "stamp", "_refcount")
+
+    def __init__(self, graph: G, stamp: int):
+        self.graph = graph
+        self.stamp = stamp
+        self._refcount = 0
+
+    def __repr__(self):
+        return f"Version(stamp={self.stamp}, rc={self._refcount})"
+
+
+class VersionedGraph(Generic[G]):
+    """Multi-version single-writer / multi-reader graph store."""
+
+    def __init__(self, initial: G):
+        self._lock = threading.Lock()
+        self._stamp = 0
+        self._versions: Dict[int, Version[G]] = {}
+        self._current = Version(initial, 0)
+        self._versions[0] = self._current
+        self._collected = 0
+
+    # -- reader interface ---------------------------------------------------
+    def acquire(self) -> Version[G]:
+        """Atomically grab the current version (refcount++)."""
+        with self._lock:
+            v = self._current
+            v._refcount += 1
+            return v
+
+    def release(self, v: Version[G]) -> bool:
+        """Drop a reference; returns True if this was the last one and the
+        version was garbage-collected."""
+        with self._lock:
+            v._refcount -= 1
+            assert v._refcount >= 0, "release without acquire"
+            if v._refcount == 0 and v is not self._current:
+                self._versions.pop(v.stamp, None)
+                self._collected += 1
+                return True
+            return False
+
+    # -- writer interface ---------------------------------------------------
+    def set(self, graph: G) -> Version[G]:
+        """Publish a new version (single writer)."""
+        with self._lock:
+            self._stamp += 1
+            nv = Version(graph, self._stamp)
+            old = self._current
+            self._current = nv
+            self._versions[self._stamp] = nv
+            if old._refcount == 0:
+                self._versions.pop(old.stamp, None)
+                self._collected += 1
+            return nv
+
+    def update(self, fn: Callable[[G], G]) -> Version[G]:
+        """Writer transaction: acquire -> functional update -> set -> release."""
+        v = self.acquire()
+        try:
+            return self.set(fn(v.graph))
+        finally:
+            self.release(v)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def current_stamp(self) -> int:
+        with self._lock:
+            return self._current.stamp
+
+    def live_versions(self) -> int:
+        with self._lock:
+            return len(self._versions)
+
+    def collected_versions(self) -> int:
+        with self._lock:
+            return self._collected

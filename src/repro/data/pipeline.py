@@ -1,0 +1,124 @@
+"""Data pipelines: deterministic, restart-safe, per-shape batch builders.
+
+Every batch is a pure function of (seed, step) — the fault-tolerance
+contract: after restore at step k the pipeline re-produces exactly the
+batch it would have produced, with no stateful iterators to checkpoint
+(dist/fault_tolerance.py relies on this).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def token_batch(seed: int, step: int, batch: int, seq_len: int, vocab: int,
+                host_id: int = 0, n_hosts: int = 1) -> Dict[str, np.ndarray]:
+    """Synthetic LM batch (markov-ish stream so loss is learnable).
+
+    Each host draws its own slice — the multi-host sharding contract."""
+    rng = np.random.default_rng((seed * 1_000_003 + step) * 64 + host_id)
+    shard = batch // n_hosts
+    base = rng.integers(0, vocab, size=(shard, seq_len + 1), dtype=np.int64)
+    # inject local structure: next token correlated with current
+    corr = (base[:, :-1] * 31 + 7) % vocab
+    take = rng.random((shard, seq_len)) < 0.5
+    base[:, 1:][take] = corr[take]
+    return {"tokens": base[:, :-1], "labels": base[:, 1:]}
+
+
+def recsys_batch(seed: int, step: int, batch: int, n_dense: int = 13,
+                 n_sparse: int = 26, vocab: int = 100_000) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng((seed * 999_983 + step))
+    return {
+        "dense": rng.standard_normal((batch, n_dense)).astype(np.float32),
+        "sparse_ids": rng.integers(0, vocab, size=(batch, n_sparse)),
+        "labels": (rng.random(batch) < 0.25).astype(np.float32),
+    }
+
+
+def molecule_batch(seed: int, step: int, n_mols: int, atoms_per_mol: int = 30,
+                   edges_per_mol: int = 64, d_feat: int = 16):
+    """Batched small molecular graphs with distances (SchNet regime)."""
+    rng = np.random.default_rng(seed * 7919 + step)
+    N = n_mols * atoms_per_mol
+    E = n_mols * edges_per_mol
+    src = np.zeros(E, dtype=np.int64)
+    dst = np.zeros(E, dtype=np.int64)
+    for m in range(n_mols):
+        base = m * atoms_per_mol
+        s = rng.integers(0, atoms_per_mol, edges_per_mol) + base
+        d = rng.integers(0, atoms_per_mol, edges_per_mol) + base
+        src[m * edges_per_mol : (m + 1) * edges_per_mol] = s
+        dst[m * edges_per_mol : (m + 1) * edges_per_mol] = d
+    dists = rng.random(E).astype(np.float32) * 10.0
+    x = rng.standard_normal((N, d_feat)).astype(np.float32)
+    graph_ids = np.repeat(np.arange(n_mols), atoms_per_mol)
+    targets = rng.standard_normal(n_mols).astype(np.float32)
+    return {
+        "x": x, "src": src, "dst": dst, "dist": dists,
+        "graph_ids": graph_ids, "targets": targets, "n_mols": n_mols,
+    }
+
+
+# ---------------------------------------------------------------------------
+# neighbor sampler (GraphSAGE minibatch_lg: a REAL sampler over CSR)
+# ---------------------------------------------------------------------------
+
+
+class NeighborSampler:
+    """Uniform fixed-fanout k-hop sampling over a CSR graph.
+
+    Works against a numpy CSR (offsets, nbrs) — which is exactly the Aspen
+    flat-graph pool layout, so the streaming store is sampleable in place.
+    Deterministic per (seed, step): restart-safe.
+    """
+
+    def __init__(self, offsets: np.ndarray, nbrs: np.ndarray, feats: np.ndarray):
+        self.offsets = np.asarray(offsets)
+        self.nbrs = np.asarray(nbrs)
+        self.feats = np.asarray(feats)
+        self.n = self.offsets.size - 1
+
+    def _sample_neighbors(self, rng, nodes: np.ndarray, fanout: int):
+        """(len(nodes), fanout) neighbor ids + mask (vectorized)."""
+        deg = self.offsets[nodes + 1] - self.offsets[nodes]
+        picks = rng.integers(0, np.maximum(deg, 1)[:, None], size=(nodes.size, fanout))
+        idx = self.offsets[nodes][:, None] + picks
+        out = self.nbrs[np.minimum(idx, self.nbrs.size - 1)]
+        mask = (deg > 0)[:, None] & np.ones((1, fanout), bool)
+        out = np.where(mask, out, 0)
+        return out.astype(np.int64), mask
+
+    def sample_batch(self, seed: int, step: int, batch_nodes: int, fanouts):
+        """Returns GraphSAGE-style tensors:
+        x_self (B, d), neigh_feats [(B, f1, d), (B, f1, f2, d)],
+        neigh_masks [(B, f1), (B, f1, f2)], seeds (B,)."""
+        rng = np.random.default_rng(seed * 104_729 + step)
+        seeds = rng.integers(0, self.n, size=batch_nodes)
+        f1, f2 = fanouts
+        n1, m1 = self._sample_neighbors(rng, seeds, f1)
+        n2_flat, m2_flat = self._sample_neighbors(rng, n1.reshape(-1), f2)
+        n2 = n2_flat.reshape(batch_nodes, f1, f2)
+        m2 = m2_flat.reshape(batch_nodes, f1, f2) & m1[:, :, None]
+        return {
+            "x_self": self.feats[seeds],
+            "neigh_feats": [self.feats[n1], self.feats[n2]],
+            "neigh_masks": [m1, m2],
+            "seeds": seeds,
+        }
+
+
+def power_law_graph(n: int, m: int, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """CSR power-law graph (reddit/products stand-in) via rMAT."""
+    from .rmat import rmat_edges, symmetrize
+
+    log_n = int(np.ceil(np.log2(n)))
+    e = symmetrize(rmat_edges(log_n, m, seed=seed))
+    e = e[(e[:, 0] < n) & (e[:, 1] < n)]
+    keys = np.unique((e[:, 0] << 32) | e[:, 1])
+    srcs, nbrs = keys >> 32, keys & 0xFFFFFFFF
+    offsets = np.searchsorted(srcs, np.arange(n + 1))
+    return offsets, nbrs.astype(np.int64)

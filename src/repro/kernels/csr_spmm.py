@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: blocked SpMM  (A_sparse @ X) for full-graph GNNs.
+
+GCN-family propagation is ``Ã @ X`` with Ã the (normalized) adjacency.
+GPU frameworks run CSR SpMM with per-row warps; the TPU has no warps and
+hates row-wise gather, but its MXU eats dense (128, 128) tiles.  The
+TPU-native formulation (DESIGN.md §2) is *block-dense* SpMM:
+
+  1. partition A into (R, C) tiles; store only the values of every tile
+     (dense layout, zeros included) — for power-law graphs most tiles are
+     empty, so ops.py keeps a per-tile nonzero mask and the kernel skips
+     empty tiles with @pl.when (the MegaBlocks trade: padding FLOPs for
+     layout regularity);
+  2. grid (row_tiles, col_tiles) accumulates out[i] += A[i, j] @ X[j]
+     over the sequential col axis in VMEM.
+
+This kernel is the 'fuse' point the paper's flat-snapshot idea maps to:
+the C-tree pool decodes (delta_decode kernel) straight into A-tiles, and
+aggregation never round-trips through HBM scatter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 128
+COL_TILE = 128
+
+
+def _spmm_kernel(mask_ref, a_ref, x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(mask_ref[0, 0] > 0)
+    def _accum():
+        o_ref[...] += jax.lax.dot(
+            a_ref[...], x_ref[...], precision=jax.lax.Precision.HIGHEST
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_spmm(
+    tile_mask: jax.Array,  # int32 (nr, nc): 1 if tile has nonzeros
+    a_tiles: jax.Array,  # (nr, nc, R, C) dense tile values
+    x: jax.Array,  # (nc * C, D) features
+    interpret: bool = False,
+) -> jax.Array:
+    nr, nc, R, C = a_tiles.shape
+    D = x.shape[1]
+    grid = (nr, nc)
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((None, None, R, C), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((C, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((R, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr * R, D), x.dtype),
+        interpret=interpret,
+    )(tile_mask.astype(jnp.int32), a_tiles, x)
+
+
+def tiles_from_edges(
+    n: int, src, dst, vals=None, row_tile: int = ROW_TILE, col_tile: int = COL_TILE
+):
+    """Host-side: build (tile_mask, a_tiles) from an edge list.
+
+    A[dst, src] layout (messages flow src -> dst).  Returns padded n_pad.
+    """
+    import numpy as np
+
+    n_pad = int(np.ceil(n / row_tile)) * row_tile
+    nr, nc = n_pad // row_tile, n_pad // col_tile
+    a = np.zeros((nr, nc, row_tile, col_tile), dtype=np.float32)
+    v = np.ones(len(src), dtype=np.float32) if vals is None else np.asarray(vals, np.float32)
+    r, c = np.asarray(dst), np.asarray(src)
+    # np.add.at: duplicate (dst, src) pairs must accumulate
+    np.add.at(a, (r // row_tile, c // col_tile, r % row_tile, c % col_tile), v)
+    mask = (np.abs(a).sum(axis=(2, 3)) > 0).astype(np.int32)
+    return jnp.asarray(mask), jnp.asarray(a), n_pad

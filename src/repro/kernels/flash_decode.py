@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: split-K flash-decode attention (long-context serve).
+
+``long_500k`` decodes one token against a 524,288-entry KV cache: the
+work is a (1, d) @ (d, S) @ (S, d) chain — pure HBM-bandwidth streaming
+of K/V.  The kernel tiles S into blocks, keeps the online-softmax
+running (max, denominator, accumulator) in VMEM scratch across the
+sequential S-grid axis, and never materializes the (1, S) score row in
+HBM (FlashDecoding; adapted to TPU: (8, 128)-aligned tiles, fp32
+accumulators, no warp-level primitives needed since the grid axis is the
+sequential scan).
+
+GQA layout: queries are grouped so each KV head serves q_per_kv query
+rows — the q tile is (q_per_kv, d), turning the MXU matmuls into skinny
+GEMMs instead of degenerate (1, d) dots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SEQ_BLOCK = 512
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref):
+    """Grid (batch*kv_head, seq_blocks); seq axis sequential-minor.
+
+    q: (Q, d) query rows for this kv head; k/v: (S_blk, d); len: (1, 1)
+    valid cache length. Scratch m/l/acc carry the online softmax."""
+    j = pl.program_id(1)
+    s_blk = k_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)  # (Q, d)
+    k = k_ref[...].astype(jnp.float32)  # (S, d)
+    v = v_ref[...].astype(jnp.float32)  # (S, d)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), precision=jax.lax.Precision.HIGHEST
+    ) * scale  # (Q, S)
+    # mask beyond valid cache length
+    pos = j * s_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[0, 0], s, -jnp.inf)
+
+    m_prev = m_ref[...]  # (Q, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard: all -inf block (fully masked) -> exp(0)*0 contributions
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)  # (Q, S)
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, precision=jax.lax.Precision.HIGHEST
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("seq_block", "interpret"))
+def flash_decode(
+    q: jax.Array,  # (BH, Q, d)   BH = batch*kv_heads, Q = q_per_kv
+    k: jax.Array,  # (BH, S, d)   KV cache (padded to seq_block multiple)
+    v: jax.Array,  # (BH, S, d)
+    lengths: jax.Array,  # (BH,) valid cache lengths
+    seq_block: int = SEQ_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Q, d = q.shape
+    S = k.shape[1]
+    assert S % seq_block == 0
+    grid = (BH, S // seq_block)
+    return pl.pallas_call(
+        _flash_decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, Q, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, seq_block, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, seq_block, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, Q, d), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Q, 1), jnp.float32),
+            pltpu.VMEM((Q, 1), jnp.float32),
+            pltpu.VMEM((Q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        q,
+        k,
+        v,
+        lengths.reshape(-1, 1).astype(jnp.int32),
+    )

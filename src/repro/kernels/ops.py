@@ -1,0 +1,141 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles: interpret-mode selection (CPU container -> interpret=True; real
+TPU -> compiled), padding to block multiples, and the ragged->padded
+layout conversions the kernels require.  Models and the Aspen flat level
+call these, never pl.pallas_call directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import csr_spmm, delta_decode, flash_decode, segment_reduce
+
+
+def _interpret() -> bool:
+    """Pallas interpret mode unless running on real TPU hardware."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: np.ndarray | jax.Array, mult: int, axis: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# delta decode (C-tree chunk decompression)
+# ---------------------------------------------------------------------------
+
+
+def decode_chunks(anchors: jax.Array, deltas: jax.Array) -> jax.Array:
+    """Decode padded chunk deltas -> absolute values.
+
+    anchors: (n_chunks,) int32; deltas: (n_chunks, max_len) int32 with
+    column 0 equal to 0 (the anchor position).  Pads to kernel tiles.
+    """
+    n, L = deltas.shape
+    a = _pad_to(anchors, delta_decode.DEFAULT_ROW_BLOCK, 0)
+    d = _pad_to(
+        _pad_to(deltas, delta_decode.DEFAULT_ROW_BLOCK, 0),
+        delta_decode.DEFAULT_COL_BLOCK,
+        1,
+    )
+    out = delta_decode.delta_decode_padded(a, d, interpret=_interpret())
+    return out[:n, :L]
+
+
+def decode_pool(packed, total_len: int | None = None) -> np.ndarray:
+    """Decode a chunks.PackedDeltas pool via the kernel (host convenience).
+
+    Converts the ragged chunk layout to padded rows, runs the kernel,
+    scatters rows back into the flat pool order.
+    """
+    from repro.core.chunks import PackedDeltas  # local import, avoids cycle
+
+    assert isinstance(packed, PackedDeltas)
+    offs = np.asarray(packed.chunk_off)
+    lens = np.diff(offs)
+    n_chunks = lens.size
+    if n_chunks == 0:
+        return np.empty(0, dtype=np.int64)
+    L = int(lens.max())
+    esc = np.iinfo(np.dtype(packed.dtype)).max
+    d = np.asarray(packed.deltas, dtype=np.int64)
+    d_full = d.copy()
+    d_full[d == esc] = packed.overflow
+    rows = np.zeros((n_chunks, L), dtype=np.int32)
+    idx = np.arange(offs[-1])
+    chunk_of = np.repeat(np.arange(n_chunks), lens)
+    col_of = idx - offs[chunk_of]
+    rows[chunk_of, col_of] = d_full
+    rows[:, 0] = 0
+    out = np.asarray(decode_chunks(jnp.asarray(packed.anchors, jnp.int32), jnp.asarray(rows)))
+    flat = out[chunk_of, col_of].astype(np.int64)
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# segment reduce
+# ---------------------------------------------------------------------------
+
+
+def segment_sum(dst: jax.Array, msg: jax.Array, n_out: int) -> jax.Array:
+    """Sorted segment-sum; pads edges with OOB dst and n_out to tile."""
+    E = dst.shape[0]
+    n_pad = n_out + (-n_out) % segment_reduce.DST_BLOCK
+    d = _pad_to(dst, segment_reduce.EDGE_BLOCK, 0, value=n_pad)
+    m = _pad_to(msg, segment_reduce.EDGE_BLOCK, 0)
+    # one extra dst block swallows padding edges
+    n_with_pad = n_pad + segment_reduce.DST_BLOCK
+    out = segment_reduce.segment_sum_sorted(
+        d, m, n_with_pad, interpret=_interpret()
+    )
+    return out[:n_out]
+
+
+def fanout_aggregate(feats: jax.Array, mask: jax.Array, op: str = "mean") -> jax.Array:
+    B = feats.shape[0]
+    f = _pad_to(feats, 8, 0)
+    m = _pad_to(mask, 8, 0)
+    out = segment_reduce.fanout_aggregate(f, m, op=op, interpret=_interpret())
+    return out[:B]
+
+
+# ---------------------------------------------------------------------------
+# attention decode
+# ---------------------------------------------------------------------------
+
+
+def flash_decode_attn(q, k, v, lengths, seq_block: int = flash_decode.SEQ_BLOCK):
+    S = k.shape[1]
+    kp = _pad_to(k, seq_block, 1)
+    vp = _pad_to(v, seq_block, 1)
+    return flash_decode.flash_decode(
+        q, kp, vp, lengths, seq_block=seq_block, interpret=_interpret()
+    )
+
+
+# ---------------------------------------------------------------------------
+# block SpMM
+# ---------------------------------------------------------------------------
+
+
+def spmm(tile_mask, a_tiles, x):
+    C = a_tiles.shape[3]
+    xp = _pad_to(x, C, 0)
+    return csr_spmm.block_spmm(tile_mask, a_tiles, xp, interpret=_interpret())
+
+
+def spmm_from_edges(n: int, src, dst, x, vals=None):
+    mask, tiles, n_pad = csr_spmm.tiles_from_edges(n, src, dst, vals)
+    out = spmm(mask, tiles, x)
+    return out[:n]

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function computes the same math as its kernel with plain jax.numpy —
+no tiling, no scratch, no grid.  Tests sweep shapes/dtypes and
+assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def delta_decode_ref(anchors: jax.Array, deltas: jax.Array) -> jax.Array:
+    """out[i, j] = anchors[i] + sum(deltas[i, :j+1]) (col 0 of deltas = 0)."""
+    return anchors[:, None].astype(jnp.int32) + jnp.cumsum(
+        deltas.astype(jnp.int32), axis=1
+    )
+
+
+def segment_sum_sorted_ref(dst: jax.Array, msg: jax.Array, n_out: int) -> jax.Array:
+    """Scatter-add oracle (jax.ops.segment_sum)."""
+    return jax.ops.segment_sum(msg, dst.astype(jnp.int32), num_segments=n_out)
+
+
+def fanout_aggregate_ref(feats: jax.Array, mask: jax.Array, op: str = "mean") -> jax.Array:
+    m = mask[..., None].astype(feats.dtype)
+    if op == "sum":
+        return jnp.sum(feats * m, axis=1)
+    if op == "mean":
+        s = jnp.sum(feats * m, axis=1)
+        return s / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    neg = jnp.finfo(feats.dtype).min
+    return jnp.max(jnp.where(m > 0, feats, neg), axis=1)
+
+
+def flash_decode_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array
+) -> jax.Array:
+    """Masked softmax attention oracle, fp32 internally."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqd,bsd->bqs", qf, kf) * scale
+    pos = jnp.arange(k.shape[1])[None, None, :]
+    s = jnp.where(pos < lengths[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqs,bsd->bqd", p, vf).astype(q.dtype)
+
+
+def block_spmm_ref(tile_mask: jax.Array, a_tiles: jax.Array, x: jax.Array) -> jax.Array:
+    """Un-tile A and do the dense matmul."""
+    nr, nc, R, C = a_tiles.shape
+    a = a_tiles.transpose(0, 2, 1, 3).reshape(nr * R, nc * C)
+    return (a * 1.0) @ x

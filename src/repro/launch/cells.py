@@ -1,0 +1,628 @@
+"""Cell builders: (architecture x input-shape) -> lowerable step.
+
+Each cell yields:
+  * ``step_fn``      — the jax function the shape dictates (train_step,
+                       prefill, serve_step, GNN train, recsys serve, ...)
+  * ``args``         — abstract inputs (ShapeDtypeStruct pytree; nothing
+                       is ever allocated: params come from eval_shape)
+  * ``in_shardings`` / ``out_shardings`` — NamedSharding pytrees
+  * ``meta``         — MODEL_FLOPS & friends for the roofline report.
+
+Padding policy: dynamic dims (edge counts, node counts) are padded to
+multiples of 512 so every mesh in play (16 / 256 / 512 devices) divides
+them evenly; padding is masked (GraphBatch.edge_mask etc.).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.dist import shardings as SH
+from repro.launch import mesh as mesh_lib
+from repro.models import transformer as T
+from repro.models.gnn.common import GraphBatch
+from repro.optim import adamw
+from repro.train import train_step as TS
+
+
+class Cell(NamedTuple):
+    step_fn: Callable
+    args: Tuple
+    in_shardings: Any
+    out_shardings: Any  # may be None (compiler-chosen)
+    meta: Dict[str, Any]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _named(mesh, tree):
+    return SH.named(mesh, tree)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_state_specs(cfg, mesh, params_shape):
+    p_specs = SH.spec_tree_like(SH.lm_param_specs(cfg, mesh), params_shape)
+    z_m = SH.zero1_specs(p_specs, params_shape, mesh)
+    z_v = SH.zero1_specs(p_specs, params_shape, mesh)
+    return TS.TrainState(p_specs, adamw.AdamWState(P(), z_m, z_v))
+
+
+def _lm_mem_estimate(cfg, mesh, B, S, kind: str) -> Dict[str, float]:
+    """Analytic per-device memory model for TPU v5e (bytes).
+
+    The CPU-backend buffer assignment cannot reflect TPU fusion/remat, so
+    the fits-on-chip proof uses this model (recorded next to the raw CPU
+    number in EXPERIMENTS.md §Dry-run; formulas below are standard
+    accounting — params/grads/opt exact, activations = remat-saved
+    residuals + one layer's transient working set).
+    """
+    n_model = mesh.shape["model"]
+    n_data = int(np.prod([v for k, v in mesh.shape.items() if k != "model"]))
+    P_total = cfg.param_count()
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    # params: embed shards over model (vocab), mlp/moe shard over model;
+    # attn shards only when heads divide — approximate with the exact
+    # replicated-attn correction.
+    h_div = cfg.n_heads % n_model == 0
+    attn_p = L * (d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim
+                  + cfg.n_heads * cfg.head_dim * d)
+    sharded_p = P_total - (0 if h_div else attn_p)
+    p_dev = (sharded_p / n_model + (0 if h_div else attn_p)) * 2  # bf16
+    if kind == "train":
+        g_dev = p_dev * 2  # f32 grads, same sharding
+        o_dev = (sharded_p / n_model + (0 if h_div else attn_p)) / max(n_data, 1) * 8
+        toks_dev = B * S / n_data
+        resid = L * toks_dev * d * 2  # remat=full: one bf16 residual/layer
+        logits = toks_dev * V / n_model * 4
+        transient = toks_dev * max(3 * cfg.d_ff / n_model, 4 * d) * 4
+        total = p_dev + g_dev + o_dev + resid + logits + transient
+        parts = dict(params=p_dev, grads=g_dev, opt=o_dev, resid=resid,
+                     logits=logits, transient=transient)
+    else:
+        toks_dev = B * S / n_data if kind == "prefill" else B / n_data
+        kv = 2 * L * B * S * cfg.n_kv_heads * cfg.head_dim * 2  # bf16 k+v
+        kv_dev = kv / (n_data * n_model) if kind == "decode" else 0
+        act = toks_dev * d * 2 * 4
+        logits = (B / max(n_data, 1)) * V / n_model * 4
+        total = p_dev + kv_dev + act + logits
+        parts = dict(params=p_dev, kv=kv_dev, act=act, logits=logits)
+    parts["total"] = total
+    return {k: float(v) for k, v in parts.items()}
+
+
+def _lm_train_cell(cfg, shape, mesh, remat: Optional[str] = None,
+                   n_micro: int = 1, unroll: bool = False) -> Cell:
+    B, S = shape["global_batch"], shape["seq_len"]
+    cfg = dataclasses.replace(
+        cfg, unroll_layers=unroll, remat=remat if remat is not None else "full"
+    )
+    params_shape = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    state_shape = jax.eval_shape(TS.init_state, params_shape)
+    state_specs = _lm_state_specs(cfg, mesh, params_shape)
+    batch = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+    b_specs = SH.lm_data_specs(mesh)
+    step = TS.make_train_step(
+        TS.lm_loss(cfg), adamw.wsd_schedule(100, 10_000, 1_000, 3e-4),
+        n_micro=n_micro,
+    )
+    tokens = B * S
+    n_active = cfg.active_param_count()
+    meta = {
+        "model_flops": 6.0 * n_active * tokens,
+        "tokens": tokens,
+        "params": cfg.param_count(),
+        "active_params": n_active,
+        "kind": "train",
+        "n_layers": cfg.n_layers,
+        "mem_model": _lm_mem_estimate(cfg, mesh, B, S, "train"),
+    }
+    metrics_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+    return Cell(
+        step, (state_shape, batch),
+        _named(mesh, (state_specs, b_specs)),
+        _named(mesh, (state_specs, metrics_specs)),
+        meta,
+    )
+
+
+def _lm_prefill_cell(cfg, shape, mesh, unroll: bool = False) -> Cell:
+    from repro.serve import decode as SD
+
+    B, S = shape["global_batch"], shape["seq_len"]
+    cfg = dataclasses.replace(cfg, unroll_layers=unroll)
+    params_shape = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = SH.spec_tree_like(SH.lm_param_specs(cfg, mesh), params_shape)
+    tokens = _sds((B, S), jnp.int32)
+    step = SD.make_prefill(cfg)
+    meta = {
+        "model_flops": 2.0 * cfg.active_param_count() * B * S,
+        "tokens": B * S,
+        "params": cfg.param_count(),
+        "kind": "prefill",
+        "n_layers": cfg.n_layers,
+        "mem_model": _lm_mem_estimate(cfg, mesh, B, S, "prefill"),
+    }
+    return Cell(
+        step, (params_shape, tokens),
+        _named(mesh, (p_specs, P(SH.batch_axes(mesh), None))),
+        None,
+        meta,
+    )
+
+
+def _lm_decode_cell(cfg, shape, mesh, seq_axes=("model",), unroll: bool = False) -> Cell:
+    from repro.serve import decode as SD
+
+    B, S = shape["global_batch"], shape["seq_len"]
+    cfg = dataclasses.replace(cfg, unroll_layers=unroll)
+    params_shape = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = SH.spec_tree_like(SH.lm_param_specs(cfg, mesh), params_shape)
+    cache_shape = jax.eval_shape(lambda: T.init_kv_cache(cfg, B, S))
+    # sequence-shard the cache when kv heads don't divide the model axis,
+    # and always for the long-context single-sequence shape
+    kv_div = cfg.n_kv_heads % mesh.shape["model"] == 0
+    seq_shard = (not kv_div) or (B == 1)
+    cache_specs = SH.lm_cache_specs(
+        cfg, mesh, seq_shard=seq_shard, batch_size=B, seq_axes=seq_axes
+    )
+    token = _sds((B,), jnp.int32)
+    step = SD.make_serve_step(cfg)
+    meta = {
+        "model_flops": 2.0 * cfg.active_param_count() * B,
+        "tokens": B,
+        "params": cfg.param_count(),
+        "kv_bytes": int(np.prod(cache_shape["k"].shape)) * 2 * 2,
+        "kind": "decode",
+        "seq_shard": seq_shard,
+        "n_layers": cfg.n_layers,
+        "mem_model": _lm_mem_estimate(cfg, mesh, B, S, "decode"),
+    }
+    b = SH.batch_axes(mesh)
+    b_tok = b if B % int(np.prod([mesh.shape[a] for a in b])) == 0 else None
+    return Cell(
+        step, (params_shape, cache_shape, token),
+        _named(mesh, (p_specs, cache_specs, P(b_tok))),
+        None,
+        meta,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _gnn_init(cfg: registry.GNNConfig, d_feat: int):
+    key = jax.random.PRNGKey(0)
+    if cfg.kind == "gcn":
+        from repro.models.gnn import gcn
+
+        return lambda: gcn.init(key, d_feat, cfg.d_hidden, cfg.n_classes, cfg.n_layers)
+    if cfg.kind == "graphsage":
+        from repro.models.gnn import graphsage
+
+        return lambda: graphsage.init(key, d_feat, cfg.d_hidden, cfg.n_classes, cfg.n_layers)
+    if cfg.kind == "schnet":
+        from repro.models.gnn import schnet
+
+        return lambda: schnet.init(key, d_feat, cfg.d_hidden, cfg.n_layers, cfg.n_rbf)
+    if cfg.kind == "graphcast":
+        from repro.models.gnn import graphcast
+
+        return lambda: graphcast.init(key, d_feat, cfg.d_hidden, cfg.n_layers, cfg.n_classes)
+    raise ValueError(cfg.kind)
+
+
+def _gnn_loss(cfg: registry.GNNConfig, n_graphs: int = 0):
+    if cfg.kind == "gcn":
+        return TS.gcn_loss(None)
+    if cfg.kind == "graphsage":
+        return TS.sage_full_loss()
+    if cfg.kind == "schnet":
+        return TS.schnet_loss(n_graphs)
+    if cfg.kind == "graphcast":
+        return TS.graphcast_loss()
+    raise ValueError(cfg.kind)
+
+
+def _gnn_flops(cfg: registry.GNNConfig, n: int, e: int, d_feat: int) -> float:
+    """Matmul-dominated estimate (forward): node transforms + edge MLPs."""
+    d = cfg.d_hidden
+    if cfg.kind == "gcn":
+        f = 2 * n * d_feat * d + (cfg.n_layers - 1) * 2 * n * d * d + 2 * e * d
+    elif cfg.kind == "graphsage":
+        f = cfg.n_layers * (4 * n * d * d) + 2 * n * d_feat * d + 2 * e * d
+    elif cfg.kind == "schnet":
+        # filter MLP per edge (rbf->d->d) + node projections
+        f = cfg.n_layers * (2 * e * (cfg.n_rbf * d + d * d) + 4 * n * d * d)
+    else:  # graphcast: edge MLP(3d->d->d) + node MLP(2d->d->d) per layer
+        f = cfg.n_layers * (2 * e * (3 * d * d + d * d) + 2 * n * (2 * d * d + d * d))
+        f += 2 * n * (d_feat * d + d * cfg.n_classes)
+    return float(f)
+
+
+def _gnn_batch_abstract(n: int, e: int, d_feat: int, with_dist: bool,
+                        batched: int = 0) -> GraphBatch:
+    return GraphBatch(
+        x=_sds((n, d_feat), jnp.float32),
+        src=_sds((e,), jnp.int32),
+        dst=_sds((e,), jnp.int32),
+        edge_mask=_sds((e,), jnp.bool_),
+        node_mask=_sds((n,), jnp.bool_),
+        edge_attr=_sds((e, 1), jnp.float32) if with_dist else None,
+        graph_ids=_sds((n,), jnp.int32) if batched else None,
+    )
+
+
+def _gnn_cell(cfg: registry.GNNConfig, shape, mesh, arch_id: str) -> Cell:
+    kind = shape["kind"]
+    if kind == "sampled" and cfg.kind == "graphsage":
+        return _sage_sampled_cell(cfg, shape, mesh)
+    d_feat = shape["d_feat"]
+    if kind == "sampled":
+        # non-sampling archs: train on the sampler-induced padded subgraph
+        bn = shape["batch_nodes"]
+        f1, f2 = shape["fanout"]
+        n = _pad_to(bn * (1 + f1 + f1 * f2), 512)
+        e = _pad_to(bn * (f1 + f1 * f2), 512)
+        batched = 0
+    elif kind == "batched_small":
+        bsz = shape["batch"]
+        n = _pad_to(shape["n_nodes"] * bsz, 512)
+        e = _pad_to(shape["n_edges"] * bsz, 512)
+        batched = bsz
+    else:
+        n = _pad_to(shape["n_nodes"], 512)
+        e = _pad_to(shape["n_edges"], 512)
+        batched = 0
+
+    with_dist = cfg.kind == "schnet"
+    if cfg.kind == "schnet":
+        batched = max(batched, 1)  # molecule readout needs graph_ids
+    batch_abs = _gnn_batch_abstract(n, e, d_feat, with_dist, batched)
+    params_shape = jax.eval_shape(_gnn_init(cfg, d_feat))
+    state_shape = jax.eval_shape(TS.init_state, params_shape)
+    p_specs = jax.tree.map(lambda _: P(), params_shape)
+    state_specs = TS.TrainState(p_specs, adamw.AdamWState(P(), p_specs, p_specs))
+
+    shard_nodes = kind == "full_large"
+    g_specs_d = SH.gnn_batch_specs(mesh, shard_nodes=shard_nodes)
+    node_p = g_specs_d["x"]
+    g_specs = GraphBatch(
+        x=g_specs_d["x"], src=g_specs_d["src"], dst=g_specs_d["dst"],
+        edge_mask=g_specs_d["edge_mask"], node_mask=g_specs_d["node_mask"],
+        edge_attr=g_specs_d["edge_attr"] if with_dist else None,
+        graph_ids=g_specs_d["graph_ids"] if batched else None,
+    )
+
+    if cfg.kind == "schnet":
+        batch = {"graph": batch_abs, "targets": _sds((batched or 1,), jnp.float32)}
+        b_specs = {"graph": g_specs, "targets": P(None)}
+        loss = TS.schnet_loss(batched or 1)
+    elif cfg.kind == "graphcast":
+        batch = {"graph": batch_abs, "targets": _sds((n, cfg.n_classes), jnp.float32)}
+        b_specs = {"graph": g_specs, "targets": node_p}
+        loss = TS.graphcast_loss()
+    else:
+        batch = {
+            "graph": batch_abs,
+            "labels": _sds((n,), jnp.int32),
+            "label_mask": _sds((n,), jnp.bool_),
+        }
+        lbl_p = P("model") if shard_nodes else P(None)
+        b_specs = {"graph": g_specs, "labels": lbl_p, "label_mask": lbl_p}
+        loss = TS.gcn_loss(None) if cfg.kind == "gcn" else TS.sage_full_loss()
+
+    step = TS.make_train_step(loss, adamw.wsd_schedule(100, 10_000, 1_000, 1e-3))
+    meta = {
+        "model_flops": 3.0 * _gnn_flops(cfg, n, e, d_feat),  # fwd+bwd ~ 3x fwd
+        "n_nodes": n,
+        "n_edges": e,
+        "kind": f"train_{kind}",
+    }
+    metrics_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+    return Cell(
+        step, (state_shape, batch),
+        _named(mesh, (state_specs, b_specs)),
+        _named(mesh, (state_specs, metrics_specs)),
+        meta,
+    )
+
+
+def _sage_sampled_cell(cfg, shape, mesh) -> Cell:
+    bn = shape["batch_nodes"]
+    f1, f2 = shape["fanout"]
+    d = shape["d_feat"]
+    params_shape = jax.eval_shape(_gnn_init(cfg, d))
+    state_shape = jax.eval_shape(TS.init_state, params_shape)
+    p_specs = jax.tree.map(lambda _: P(), params_shape)
+    state_specs = TS.TrainState(p_specs, adamw.AdamWState(P(), p_specs, p_specs))
+    batch = {
+        "x_self": _sds((bn, d), jnp.float32),
+        "neigh_feats": [_sds((bn, f1, d), jnp.float32), _sds((bn, f1, f2, d), jnp.float32)],
+        "neigh_masks": [_sds((bn, f1), jnp.bool_), _sds((bn, f1, f2), jnp.bool_)],
+        "labels": _sds((bn,), jnp.int32),
+    }
+    b_specs = SH.sage_sampled_specs(mesh)
+    step = TS.make_train_step(TS.sage_sampled_loss(), adamw.wsd_schedule(100, 10_000, 1_000, 1e-3))
+    dh = cfg.d_hidden
+    fwd = bn * (1 + f1 + f1 * f2) * 2 * d * dh * 2 + bn * 2 * dh * cfg.n_classes
+    meta = {"model_flops": 3.0 * fwd, "kind": "train_sampled", "batch_nodes": bn}
+    metrics_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+    return Cell(
+        step, (state_shape, batch),
+        _named(mesh, (state_specs, b_specs)),
+        _named(mesh, (state_specs, metrics_specs)),
+        meta,
+    )
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+
+def _dcn_cell(cfg: registry.DCNConfig, shape, mesh) -> Cell:
+    from repro.models.recsys import dcn_v2
+
+    kind = shape["kind"]
+    B = shape["batch"]
+    n_cand = shape.get("n_candidates", 0)
+    init = lambda: dcn_v2.init(  # noqa: E731
+        jax.random.PRNGKey(0),
+        n_dense=cfg.n_dense, n_sparse=cfg.n_sparse, embed_dim=cfg.embed_dim,
+        vocab_per_field=cfg.vocab_per_field, n_cross=cfg.n_cross,
+        mlp_dims=cfg.mlp_dims, n_candidates=n_cand if kind == "retrieval" else 0,
+    )
+    params_shape = jax.eval_shape(init)
+    p_specs = SH.dcn_param_specs(params_shape, mesh)
+    b = SH.batch_axes(mesh)
+    bspec = b if B % 512 == 0 or B % int(np.prod([mesh.shape[a] for a in b])) == 0 else None
+    dense = _sds((B, cfg.n_dense), jnp.float32)
+    sparse = _sds((B, cfg.n_sparse), jnp.int32)
+    d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    # dense-path flops per example: cross (n_cross * d0^2) + MLP + embed
+    mlp_f = 0
+    dims = [d0] + list(cfg.mlp_dims)
+    for a, bb in zip(dims[:-1], dims[1:]):
+        mlp_f += 2 * a * bb
+    per_ex = cfg.n_cross * 2 * d0 * d0 + mlp_f + 2 * (cfg.mlp_dims[-1] + d0)
+
+    if kind == "train":
+        state_shape = jax.eval_shape(TS.init_state, params_shape)
+        z = SH.zero1_specs(p_specs, params_shape, mesh)
+        state_specs = TS.TrainState(p_specs, adamw.AdamWState(P(), z, z))
+        batch = {"dense": dense, "sparse_ids": sparse, "labels": _sds((B,), jnp.float32)}
+        b_specs = {"dense": P(bspec, None), "sparse_ids": P(bspec, None), "labels": P(bspec)}
+        step = TS.make_train_step(TS.dcn_loss(), adamw.wsd_schedule(100, 10_000, 1_000, 1e-3))
+        metrics_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+        meta = {"model_flops": 3.0 * per_ex * B, "batch": B, "kind": "train"}
+        return Cell(
+            step, (state_shape, batch),
+            _named(mesh, (state_specs, b_specs)),
+            _named(mesh, (state_specs, metrics_specs)),
+            meta,
+        )
+    if kind == "serve":
+        step = dcn_v2.serve
+        meta = {"model_flops": per_ex * B, "batch": B, "kind": "serve"}
+        return Cell(
+            step, (params_shape, dense, sparse),
+            _named(mesh, (p_specs, P(bspec, None), P(bspec, None))),
+            None,
+            meta,
+        )
+    # retrieval: 1 query x n_candidates
+    step = partial(dcn_v2.retrieval, top_k=128)
+    meta = {
+        "model_flops": per_ex * B + 2.0 * n_cand * cfg.mlp_dims[-1],
+        "batch": B,
+        "kind": "retrieval",
+    }
+    return Cell(
+        step, (params_shape, dense, sparse),
+        _named(mesh, (p_specs, P(None, None), P(None, None))),
+        None,
+        meta,
+    )
+
+
+# ---------------------------------------------------------------------------
+# aspen-stream cells (the paper's own configuration at scale)
+# ---------------------------------------------------------------------------
+
+
+def _stream_cell(cfg: registry.StreamConfig, shape, mesh, variant: str = "baseline") -> Cell:
+    from repro.core import flat_ctree as fct
+    from repro.core import flat_graph as fg
+
+    kind = shape["kind"]
+    cap = shape["pool_edges"]
+    n = shape["n_nodes"]
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    if kind == "update" and variant == "shardmap":
+        return _stream_update_shardmap_cell(shape, mesh, all_axes)
+    if kind == "update" and variant == "overlay":
+        return _stream_update_overlay_cell(shape, mesh, all_axes)
+    g_abs = fg.FlatGraph(
+        offsets=_sds((n + 1,), jnp.int32),
+        keys=_sds((cap,), jnp.int64),
+        m=_sds((), jnp.int32),
+    )
+    g_specs = fg.FlatGraph(offsets=P(None), keys=P(all_axes), m=P())
+    if kind == "update":
+        bcap = shape["batch_edges"]
+        batch_abs = fct.FlatCTree(data=_sds((bcap,), jnp.int64), n=_sds((), jnp.int32))
+        batch_specs = fct.FlatCTree(data=P(all_axes), n=P())
+        step = partial(fg.insert_edges, out_cap=cap, optimized=True)
+        meta = {
+            "model_flops": 0.0,  # pure data movement: memory/collective-bound
+            "pool_bytes": cap * 8,
+            "batch_edges": bcap,
+            "kind": "stream_update",
+        }
+        return Cell(
+            step, (g_abs, batch_abs),
+            _named(mesh, (g_specs, batch_specs)),
+            _named(mesh, g_specs),
+            meta,
+        )
+    if kind == "query":
+        step = fg.bfs
+        src = _sds((), jnp.int32)
+        meta = {"model_flops": 0.0, "pool_bytes": cap * 8, "kind": "stream_bfs"}
+        return Cell(
+            step, (g_abs, src),
+            _named(mesh, (g_specs, P())),
+            None,
+            meta,
+        )
+    # decode_pool: delta-decode the compressed pool (jnp formulation — the
+    # Pallas kernel is the single-chip version; this is the sharded one)
+    def decode_step(deltas, anchors_at, head_mask):
+        # segmented cumsum over the flat pool: cumsum(d) - carry(chunk)
+        c = jnp.cumsum(deltas)
+        chunk_id = jnp.cumsum(head_mask.astype(jnp.int64)) - head_mask.astype(jnp.int64)
+        base = c - deltas  # exclusive cumsum
+        # anchor-relative reconstruction: value = anchor[chunk] + (c - base_at_chunk_start)
+        starts = jnp.where(head_mask, base, 0)
+        per_chunk_base = jax.ops.segment_max(
+            jnp.where(head_mask, base, -1), chunk_id, num_segments=deltas.shape[0]
+        )
+        return anchors_at[chunk_id] + (c - per_chunk_base[chunk_id])
+
+    deltas = _sds((cap,), jnp.int64)
+    anchors = _sds((cap,), jnp.int64)
+    hm = _sds((cap,), jnp.bool_)
+    meta = {"model_flops": 0.0, "pool_bytes": cap * 8, "kind": "stream_decode"}
+    return Cell(
+        decode_step, (deltas, anchors, hm),
+        _named(mesh, (P(all_axes), P(all_axes), P(all_axes))),
+        None,
+        meta,
+    )
+
+
+def _stream_update_shardmap_cell(shape, mesh, all_axes) -> Cell:
+    """§Perf v1: range-sharded pool, shard-local merge (sharded_pool.py).
+    Collective drops from O(pool) all-gathers to ONE batch all-gather."""
+    from repro.core import sharded_pool as sp
+
+    cap = shape["pool_edges"]
+    bcap = shape["batch_edges"]
+    n_shards = int(np.prod(list(mesh.shape.values())))
+    cap_per = 2 * cap // n_shards
+    pool_abs = sp.ShardedPool(
+        data=_sds((n_shards, cap_per), jnp.int64),
+        n=_sds((n_shards,), jnp.int32),
+        lo=_sds((n_shards,), jnp.int64),
+    )
+    pool_specs = sp.ShardedPool(data=P(all_axes, None), n=P(all_axes), lo=P(all_axes))
+    batch_abs = _sds((bcap,), jnp.int64)
+    step = sp.make_insert_step(mesh, all_axes)
+    meta = {"model_flops": 0.0, "pool_bytes": cap * 8, "batch_edges": bcap,
+            "kind": "stream_update", "variant": "shardmap"}
+    return Cell(
+        step, (pool_abs, batch_abs),
+        _named(mesh, (pool_specs, P(None))),
+        _named(mesh, pool_specs),
+        meta,
+    )
+
+
+def _stream_update_overlay_cell(shape, mesh, all_axes) -> Cell:
+    """§Perf v2: LSM-style overlay — updates merge into a small overlay
+    pool (compacted into the base pool asynchronously); per-step traffic
+    is O(overlay + batch), not O(pool)."""
+    from repro.core import flat_ctree as fct
+
+    bcap = shape["batch_edges"]
+    overlay_cap = 8 * bcap  # overlay compacted every ~8 batches
+    o_abs = fct.FlatCTree(data=_sds((overlay_cap,), jnp.int64), n=_sds((), jnp.int32))
+    b_abs = fct.FlatCTree(data=_sds((bcap,), jnp.int64), n=_sds((), jnp.int32))
+    o_specs = fct.FlatCTree(data=P(all_axes), n=P())
+    b_specs = fct.FlatCTree(data=P(all_axes), n=P())
+    step = partial(fct.union_merge, out_cap=overlay_cap)
+    meta = {"model_flops": 0.0, "pool_bytes": shape["pool_edges"] * 8,
+            "batch_edges": bcap, "kind": "stream_update", "variant": "overlay"}
+    return Cell(
+        step, (o_abs, b_abs),
+        _named(mesh, (o_specs, b_specs)),
+        _named(mesh, o_specs),
+        meta,
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh, reduced: bool = False,
+               unroll: bool = False, n_layers_override: Optional[int] = None,
+               overrides: Optional[Dict[str, Any]] = None,
+               variant: str = "baseline") -> Cell:
+    """``unroll``/``n_layers_override`` implement the dry-run's per-layer
+    cost extrapolation: XLA cost_analysis counts a while-loop body once,
+    so the roofline compiles L=1 and L=2 *unrolled* probes and scales —
+    the full-config scan compile stays the pass/fail + memory gate."""
+    spec = registry.get(arch_id)
+    cfg = spec.reduced if reduced else spec.full
+    if n_layers_override is not None and spec.family == "lm":
+        cfg = dataclasses.replace(cfg, n_layers=n_layers_override)
+    if overrides and spec.family == "lm":
+        overrides = dict(overrides)
+        if "moe_shard_dispatch" in overrides:
+            flag = overrides.pop("moe_shard_dispatch")
+            if cfg.moe is not None:
+                cfg = dataclasses.replace(
+                    cfg, moe=dataclasses.replace(cfg.moe, shard_dispatch=flag)
+                )
+        if "moe_dispatch_shards" in overrides:
+            ns = overrides.pop("moe_dispatch_shards")
+            if cfg.moe is not None:
+                cfg = dataclasses.replace(
+                    cfg, moe=dataclasses.replace(cfg.moe, dispatch_shards=ns)
+                )
+        if overrides.pop("moe_impl", None) == "shardmap":
+            from repro.models import moe_shardmap as MS
+
+            MS.ACTIVE_MESH = mesh
+            cfg = dataclasses.replace(cfg, moe_impl="shardmap")
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+    shape = spec.shapes[shape_name]
+    if spec.family == "lm":
+        kind = shape["kind"]
+        if kind == "train":
+            return _lm_train_cell(cfg, shape, mesh, unroll=unroll)
+        if kind == "prefill":
+            return _lm_prefill_cell(cfg, shape, mesh, unroll=unroll)
+        return _lm_decode_cell(cfg, shape, mesh, unroll=unroll)
+    if spec.family == "gnn":
+        return _gnn_cell(cfg, shape, mesh, arch_id)
+    if spec.family == "recsys":
+        return _dcn_cell(cfg, shape, mesh)
+    if spec.family == "stream":
+        return _stream_cell(cfg, shape, mesh, variant=variant)
+    raise ValueError(spec.family)

@@ -1,0 +1,180 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the first import side effect: 512 placeholder host devices so
+jax.make_mesh can build the production meshes.  Do not move these lines.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import registry  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch.cells import build_cell  # noqa: E402
+
+from repro.launch.hlo_analysis import collective_bytes  # noqa: E402
+
+
+def _compile_cell(arch, shape, mesh, **kw):
+    cell = build_cell(arch, shape, mesh, **kw)
+    with mesh:
+        jitted = jax.jit(
+            cell.step_fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+        )
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    return cell, compiled
+
+
+def _costs(compiled):
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll, kinds = collective_bytes(hlo)
+    return (
+        float(ca.get("flops", 0.0)),
+        float(ca.get("bytes accessed", 0.0)),
+        float(coll),
+        kinds,
+    )
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             extrapolate: bool = True, **build_kw) -> dict:
+    """Three-compile methodology (DESIGN.md §7):
+
+      1. FULL config, production scan-over-layers: the pass/fail gate +
+         compile time + CPU-backend memory_analysis;
+      2. (LM only) unrolled L=1 and L=2 probes: per-layer FLOPs/bytes/
+         collective bytes, extrapolated to the full depth — XLA
+         cost_analysis counts while-loop bodies once, so scan compiles
+         systematically undercount by ~n_layers;
+      3. analytic memory model (cell.meta['mem_model']) = the fits-on-
+         v5e proof (the CPU backend cannot reflect TPU remat/fusion).
+    """
+    from repro.configs import registry as _reg
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    cell, compiled = _compile_cell(arch, shape, mesh, **build_kw)
+    t3 = time.time()
+    t1 = t2 = t0  # full build+lower+compile time lands in compile_s
+
+    ma = compiled.memory_analysis()
+    flops, bytes_accessed, coll_total, coll_kinds = _costs(compiled)
+
+    extrap = None
+    if extrapolate and _reg.get(arch).family == "lm":
+        L = cell.meta["n_layers"]
+        _, c1 = _compile_cell(arch, shape, mesh, unroll=True,
+                              n_layers_override=1, **build_kw)
+        _, c2 = _compile_cell(arch, shape, mesh, unroll=True,
+                              n_layers_override=2, **build_kw)
+        f1, b1, x1, _ = _costs(c1)
+        f2, b2, x2, _ = _costs(c2)
+        flops = max(flops, (f2 - f1) * (L - 1) + f1)
+        bytes_accessed = max(bytes_accessed, (b2 - b1) * (L - 1) + b1)
+        coll_total = max(coll_total, (x2 - x1) * (L - 1) + x1)
+        extrap = {"f1": f1, "f2": f2, "b1": b1, "b2": b2, "x1": x1, "x2": x2}
+    # roofline terms (per device; cost_analysis is post-SPMD per-device)
+    compute_s = flops / mesh_lib.PEAK_FLOPS_BF16
+    memory_s = bytes_accessed / mesh_lib.HBM_BW
+    collective_s = coll_total / (mesh_lib.ICI_LINKS * mesh_lib.ICI_BW_PER_LINK)
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    model_flops = cell.meta.get("model_flops", 0.0)
+    useful = model_flops / (n_chips * flops) if flops else 0.0
+
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "ok": True,
+        "build_s": round(t1 - t0, 2),
+        "lower_s": round(t2 - t1, 2),
+        "compile_s": round(t3 - t2, 2),
+        "flops_per_dev": flops,
+        "bytes_per_dev": bytes_accessed,
+        "collective_bytes_per_dev": coll_total,
+        "collective_kinds": coll_kinds,
+        "compute_s_term": compute_s,
+        "memory_s_term": memory_s,
+        "collective_s_term": collective_s,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": model_flops,
+        "useful_compute_frac": useful,
+        "mem_argument_bytes": ma.argument_size_in_bytes,
+        "mem_output_bytes": ma.output_size_in_bytes,
+        "mem_temp_bytes": ma.temp_size_in_bytes,
+        "mem_peak_bytes_est": ma.argument_size_in_bytes
+        + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes,
+        "mem_model": cell.meta.get("mem_model"),
+        "extrap": extrap,
+        "meta": {k: v for k, v in cell.meta.items() if isinstance(v, (int, float, str, bool))},
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="run every assigned cell")
+    ap.add_argument("--include-stream", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSON lines here")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = list(registry.all_cells(include_stream=args.include_stream))
+    else:
+        assert args.arch, "--arch required unless --all"
+        spec = registry.get(args.arch)
+        shapes = [args.shape] if args.shape else list(spec.shapes)
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}/{shape}/{'2x16x16' if mp else '16x16'}"
+            try:
+                res = run_cell(arch, shape, mp)
+                print(
+                    f"[OK] {tag}: compile={res['compile_s']}s "
+                    f"dominant={res['dominant']} "
+                    f"terms(c/m/x)=({res['compute_s_term']:.2e},"
+                    f"{res['memory_s_term']:.2e},{res['collective_s_term']:.2e}) "
+                    f"peak={res['mem_peak_bytes_est']/2**30:.2f}GiB/dev "
+                    f"useful={res['useful_compute_frac']:.3f}"
+                )
+            except Exception as e:  # noqa: BLE001 - report and continue
+                failures += 1
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "ok": False, "error": f"{type(e).__name__}: {e}"}
+                print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:300]}")
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(res) + "\n")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

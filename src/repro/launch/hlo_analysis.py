@@ -1,0 +1,59 @@
+"""HLO text analysis: collective-byte accounting (no jax side effects).
+
+Separated from dryrun.py so tests and tools can import the parsers
+without inheriting dryrun's 512-placeholder-device XLA_FLAGS.
+"""
+import re
+
+# HLO ops whose operand bytes cross links
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:\S+\s*=\s*)?"
+    r"((?:\w+\[[^\]]*\]|\([^)]*\))\{?[^=]*)?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b",
+    re.M,
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _bytes_of_shape_str(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op in the compiled HLO
+    (post-SPMD: shapes are per-device shards).  Returns (total, per-kind)."""
+    per_kind = {}
+    total = 0
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+            line,
+        )
+        if not m or "-start" in line and False:
+            continue
+        kind = m.group(1)
+        # result shape: text before the '=' sign
+        lhs = line.split("=")[0]
+        b = _bytes_of_shape_str(lhs)
+        if b == 0:  # fallback: first shape on the line
+            b = _bytes_of_shape_str(line)
+        total += b
+        per_kind[kind] = per_kind.get(kind, 0) + b
+    return total, per_kind
+
+

@@ -1,0 +1,28 @@
+"""Production mesh factory (per the multi-pod dry-run contract).
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state.  Single pod: (16, 16) = 256 chips ("data", "model");
+multi-pod: (2, 16, 16) = 512 chips ("pod", "data", "model") — the pod
+axis carries pure DP (one gradient all-reduce crosses the DCI), model
+parallelism stays inside a pod's ICI domain.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware model (per chip) — the roofline constants.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW_PER_LINK = 50e9  # B/s per link
+ICI_LINKS = 4  # torus links per chip usable concurrently
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """1-device mesh with the same axis names (smoke tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,142 @@
+"""Shared GNN substrate: GraphBatch + segment aggregation.
+
+JAX has no native sparse message-passing (BCOO only) — aggregation IS
+``jnp.take`` + ``jax.ops.segment_sum`` over an edge index, built here once
+and reused by every GNN (kernel_taxonomy §GNN).  The edge arrays come
+straight from the Aspen flat graph pool (core/flat_graph.py): a streaming
+graph update produces a new GraphBatch by reusing the same (offsets,
+keys) arrays — the paper's technique feeding the models.
+
+Fixed shapes: edges are padded (mask carries validity) so one compiled
+step serves a stream of graphs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class GraphBatch(NamedTuple):
+    """A (possibly batched) graph in padded edge-list form."""
+
+    x: jax.Array  # (N, d_feat) node features
+    src: jax.Array  # (E,) int32 edge sources (padding -> N-1, masked)
+    dst: jax.Array  # (E,) int32 edge destinations
+    edge_mask: jax.Array  # (E,) bool
+    node_mask: jax.Array  # (N,) bool
+    edge_attr: Optional[jax.Array] = None  # (E, d_edge) e.g. distances
+    graph_ids: Optional[jax.Array] = None  # (N,) for batched-small-graphs
+
+    @property
+    def n_nodes(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.src.shape[0]
+
+
+def aggregate(msg: jax.Array, dst: jax.Array, n: int, op: str = "sum",
+              edge_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Segment-reduce messages to nodes: the message-passing primitive."""
+    if edge_mask is not None:
+        if op == "max":
+            neg = jnp.finfo(msg.dtype).min
+            msg = jnp.where(edge_mask[:, None], msg, neg)
+        else:
+            msg = msg * edge_mask[:, None].astype(msg.dtype)
+    if op == "sum":
+        return jax.ops.segment_sum(msg, dst, num_segments=n)
+    if op == "mean":
+        s = jax.ops.segment_sum(msg, dst, num_segments=n)
+        ones = edge_mask.astype(msg.dtype) if edge_mask is not None else jnp.ones(dst.shape, msg.dtype)
+        cnt = jax.ops.segment_sum(ones, dst, num_segments=n)
+        return s / jnp.maximum(cnt[:, None], 1.0)
+    if op == "max":
+        return jax.ops.segment_max(msg, dst, num_segments=n)
+    raise ValueError(op)
+
+
+def degrees(batch: GraphBatch) -> jax.Array:
+    ones = batch.edge_mask.astype(jnp.float32)
+    return jax.ops.segment_sum(ones, batch.dst, num_segments=batch.n_nodes)
+
+
+def sym_norm_coeff(batch: GraphBatch) -> jax.Array:
+    """GCN symmetric normalization 1/sqrt(d_i d_j) per edge (+self loops
+    handled by callers)."""
+    deg = degrees(batch) + 1.0  # +1 for self loop
+    inv_sqrt = jax.lax.rsqrt(deg)
+    return inv_sqrt[batch.src] * inv_sqrt[batch.dst]
+
+
+# ---------------------------------------------------------------------------
+# host-side construction
+# ---------------------------------------------------------------------------
+
+
+def batch_from_edges(
+    n: int,
+    edges: np.ndarray,
+    x: np.ndarray,
+    edge_capacity: Optional[int] = None,
+    edge_attr: Optional[np.ndarray] = None,
+) -> GraphBatch:
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    E = e.shape[0]
+    cap = edge_capacity or E
+    src = np.full(cap, n - 1, dtype=np.int32)
+    dst = np.full(cap, n - 1, dtype=np.int32)
+    src[:E], dst[:E] = e[:, 0], e[:, 1]
+    mask = np.zeros(cap, dtype=bool)
+    mask[:E] = True
+    ea = None
+    if edge_attr is not None:
+        ea_np = np.zeros((cap,) + edge_attr.shape[1:], dtype=np.float32)
+        ea_np[:E] = edge_attr
+        ea = jnp.asarray(ea_np)
+    return GraphBatch(
+        x=jnp.asarray(x, jnp.float32),
+        src=jnp.asarray(src),
+        dst=jnp.asarray(dst),
+        edge_mask=jnp.asarray(mask),
+        node_mask=jnp.ones((n,), bool),
+        edge_attr=ea,
+    )
+
+
+def batch_from_flat_graph(g, x: jax.Array) -> GraphBatch:
+    """Zero-copy view of an Aspen flat graph as a GraphBatch: the
+    streaming store feeds the GNN directly (the paper's technique as the
+    framework's data plane)."""
+    from repro.core import flat_graph as fg
+
+    src, dst = fg.unpack(g.keys)
+    n = g.n
+    valid = jnp.arange(g.keys.shape[0]) < g.m
+    return GraphBatch(
+        x=x,
+        src=jnp.where(valid, src, n - 1).astype(jnp.int32),
+        dst=jnp.where(valid, dst, n - 1).astype(jnp.int32),
+        edge_mask=valid,
+        node_mask=jnp.ones((n,), bool),
+    )
+
+
+def random_batch(key, n: int, e: int, d_feat: int, batched: int = 0) -> GraphBatch:
+    """Synthetic graph for smoke tests/benchmarks."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    src = jax.random.randint(k1, (e,), 0, n, jnp.int32)
+    dst = jax.random.randint(k2, (e,), 0, n, jnp.int32)
+    x = jax.random.normal(k3, (n, d_feat), jnp.float32)
+    gid = None
+    if batched:
+        gid = jnp.arange(n) // (n // batched)
+    return GraphBatch(
+        x=x, src=src, dst=dst,
+        edge_mask=jnp.ones((e,), bool), node_mask=jnp.ones((n,), bool),
+        graph_ids=gid,
+    )

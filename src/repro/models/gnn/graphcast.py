@@ -1,0 +1,147 @@
+"""GraphCast-style encoder-processor-decoder mesh GNN (arXiv:2212.12794).
+
+graphcast config: 16 processor layers, d_hidden=512, sum aggregation,
+n_vars=227 input channels, mesh_refinement=6.
+
+For its own (weather) configuration the model runs on an icosahedral
+multimesh (built by ``build_multimesh``); for the assigned generic graph
+shapes the encoder/processor/decoder run over the given GraphBatch (the
+mesh IS the input graph) — the architecture is the interaction-network
+stack either way.  Edge and node update MLPs with residuals, LayerNorm
+as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import layers as L
+from .common import GraphBatch, aggregate
+
+
+def _mlp2(key, d_in: int, d_hidden: int, d_out: int) -> Dict[str, Any]:
+    return L.mlp_init(key, d_in, [d_hidden, d_out], jnp.float32)
+
+
+def init(key, d_in: int, d_hidden: int = 512, n_layers: int = 16, d_out: int = 227,
+         d_edge_in: int = 4) -> Dict[str, Any]:
+    keys = jax.random.split(key, n_layers + 3)
+    p: Dict[str, Any] = {
+        "enc_node": _mlp2(keys[0], d_in, d_hidden, d_hidden),
+        "enc_edge": _mlp2(keys[1], d_edge_in, d_hidden, d_hidden),
+        "layers": [],
+        "dec": _mlp2(keys[2], d_hidden, d_hidden, d_out),
+    }
+    for i in range(n_layers):
+        k1, k2 = jax.random.split(keys[i + 3])
+        p["layers"].append(
+            {
+                # edge MLP([e, h_src, h_dst]); node MLP([h, agg_e])
+                "edge": _mlp2(k1, 3 * d_hidden, d_hidden, d_hidden),
+                "node": _mlp2(k2, 2 * d_hidden, d_hidden, d_hidden),
+                "ln_e": L.layernorm_init(d_hidden),
+                "ln_n": L.layernorm_init(d_hidden),
+            }
+        )
+    return p
+
+
+def forward(params, batch: GraphBatch) -> jax.Array:
+    n = batch.n_nodes
+    h = L.mlp(params["enc_node"], batch.x, act=jax.nn.silu)
+    if batch.edge_attr is not None:
+        e = L.mlp(params["enc_edge"], batch.edge_attr, act=jax.nn.silu)
+    else:
+        # structural edge features: normalized degree difference
+        from .common import degrees
+
+        deg = degrees(batch)
+        ea = jnp.stack(
+            [
+                deg[batch.src],
+                deg[batch.dst],
+                deg[batch.src] - deg[batch.dst],
+                jnp.ones_like(deg[batch.src]),
+            ],
+            axis=-1,
+        )
+        e = L.mlp(params["enc_edge"], ea / (1.0 + jnp.abs(ea)), act=jax.nn.silu)
+    for lp in params["layers"]:
+        # edge update (interaction network)
+        e_in = jnp.concatenate([e, h[batch.src], h[batch.dst]], axis=-1)
+        e = e + L.layernorm(lp["ln_e"], L.mlp(lp["edge"], e_in, act=jax.nn.silu))
+        # node update
+        agg = aggregate(e, batch.dst, n, "sum", batch.edge_mask)
+        n_in = jnp.concatenate([h, agg], axis=-1)
+        h = h + L.layernorm(lp["ln_n"], L.mlp(lp["node"], n_in, act=jax.nn.silu))
+    return L.mlp(params["dec"], h)
+
+
+def loss_fn(params, batch: GraphBatch, targets: jax.Array) -> jax.Array:
+    pred = forward(params, batch)
+    m = batch.node_mask[:, None].astype(pred.dtype)
+    return jnp.sum(((pred - targets) * m) ** 2) / jnp.maximum(m.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# icosahedral multimesh (the model's own configuration)
+# ---------------------------------------------------------------------------
+
+
+def build_multimesh(refinement: int) -> np.ndarray:
+    """Icosahedron refined ``refinement`` times; returns the multimesh
+    edge list (union of all refinement levels' edges, both directions).
+
+    Nodes at level r: 10*4^r + 2.  The multimesh keeps coarse edges
+    alongside fine ones (GraphCast §3.2).
+    """
+    phi = (1 + 5 ** 0.5) / 2
+    verts = np.array(
+        [
+            [-1, phi, 0], [1, phi, 0], [-1, -phi, 0], [1, -phi, 0],
+            [0, -1, phi], [0, 1, phi], [0, -1, -phi], [0, 1, -phi],
+            [phi, 0, -1], [phi, 0, 1], [-phi, 0, -1], [-phi, 0, 1],
+        ],
+        dtype=np.float64,
+    )
+    verts /= np.linalg.norm(verts, axis=1, keepdims=True)
+    faces = np.array(
+        [
+            [0, 11, 5], [0, 5, 1], [0, 1, 7], [0, 7, 10], [0, 10, 11],
+            [1, 5, 9], [5, 11, 4], [11, 10, 2], [10, 7, 6], [7, 1, 8],
+            [3, 9, 4], [3, 4, 2], [3, 2, 6], [3, 6, 8], [3, 8, 9],
+            [4, 9, 5], [2, 4, 11], [6, 2, 10], [8, 6, 7], [9, 8, 1],
+        ]
+    )
+    all_edges = []
+
+    def face_edges(fs):
+        e = np.concatenate([fs[:, [0, 1]], fs[:, [1, 2]], fs[:, [2, 0]]])
+        return e
+
+    all_edges.append(face_edges(faces))
+    vlist = [v for v in verts]
+    for _ in range(refinement):
+        new_faces = []
+        midpoint_cache: Dict = {}
+
+        def midpoint(i, j):
+            key = (min(i, j), max(i, j))
+            if key not in midpoint_cache:
+                m = vlist[i] + vlist[j]
+                vlist.append(m / np.linalg.norm(m))
+                midpoint_cache[key] = len(vlist) - 1
+            return midpoint_cache[key]
+
+        for a, b, c in faces:
+            ab, bc, ca = midpoint(a, b), midpoint(b, c), midpoint(c, a)
+            new_faces += [[a, ab, ca], [ab, b, bc], [ca, bc, c], [ab, bc, ca]]
+        faces = np.asarray(new_faces)
+        all_edges.append(face_edges(faces))
+    e = np.concatenate(all_edges)
+    e = np.concatenate([e, e[:, ::-1]])
+    keys = np.unique((e[:, 0].astype(np.int64) << 32) | e[:, 1].astype(np.int64))
+    return np.stack([keys >> 32, keys & 0xFFFFFFFF], axis=1)

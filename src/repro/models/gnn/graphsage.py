@@ -1,0 +1,101 @@
+"""GraphSAGE (arXiv:1706.02216): graphsage-reddit config.
+
+Two regimes, matching the assigned shapes:
+  * full-graph (``full_graph_sm``/``ogb_products``): mean aggregation by
+    segment-sum over the whole edge set;
+  * sampled minibatch (``minibatch_lg``): fixed-fanout neighbor tensors
+    (B, S1, d), (B, S1, S2, d) from data/sampler.py, aggregated with the
+    fanout Pallas kernel — the real neighbor sampler feeds this.
+
+W_self / W_neigh concatenation form, per the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from .common import GraphBatch, aggregate
+
+
+def init(key, d_in: int, d_hidden: int, n_classes: int, n_layers: int = 2) -> Dict[str, Any]:
+    dims = [d_hidden] * (n_layers - 1) + [n_classes]
+    layers = []
+    d_prev = d_in
+    for i, d in enumerate(dims):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, i))
+        layers.append(
+            {
+                "w_self": L._normal(k1, (d_prev, d), d_prev ** -0.5, jnp.float32),
+                "w_neigh": L._normal(k2, (d_prev, d), d_prev ** -0.5, jnp.float32),
+            }
+        )
+        d_prev = d
+    return {"layers": layers}
+
+
+def forward_full(params, batch: GraphBatch) -> jax.Array:
+    """Full-graph forward: mean-aggregate all neighbors each layer."""
+    h = batch.x
+    n_layers = len(params["layers"])
+    for i, lp in enumerate(params["layers"]):
+        msg = h[batch.src]
+        agg = aggregate(msg, batch.dst, batch.n_nodes, "mean", batch.edge_mask)
+        h = jnp.einsum("nd,df->nf", h, lp["w_self"]) + jnp.einsum(
+            "nd,df->nf", agg, lp["w_neigh"]
+        )
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def forward_sampled(params, x_self: jax.Array, neigh_feats: Sequence[jax.Array],
+                    neigh_masks: Sequence[jax.Array], use_kernel: bool = False) -> jax.Array:
+    """Sampled minibatch forward (2-layer case).
+
+    x_self: (B, d); neigh_feats = [(B, S1, d), (B, S1, S2, d)];
+    neigh_masks = [(B, S1), (B, S1, S2)].
+    """
+    assert len(params["layers"]) == 2, "sampled path implements 2 hops"
+    l1, l2 = params["layers"]
+
+    def agg_mean(f, m):
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            flat_f = f.reshape((-1,) + f.shape[-2:])
+            flat_m = m.reshape((-1, m.shape[-1]))
+            out = kops.fanout_aggregate(flat_f, flat_m.astype(jnp.float32), "mean")
+            return out.reshape(f.shape[:-2] + (f.shape[-1],))
+        mm = m[..., None].astype(f.dtype)
+        return (f * mm).sum(-2) / jnp.maximum(mm.sum(-2), 1.0)
+
+    # layer 1 applied at depth-1 nodes: aggregate their (depth-2) neighbors
+    agg2 = agg_mean(neigh_feats[1], neigh_masks[1])  # (B, S1, d)
+    h1 = jnp.einsum("bsd,df->bsf", neigh_feats[0], l1["w_self"]) + jnp.einsum(
+        "bsd,df->bsf", agg2, l1["w_neigh"]
+    )
+    h1 = jax.nn.relu(h1)
+    # layer 1 at the batch nodes themselves
+    agg1_self = agg_mean(neigh_feats[0], neigh_masks[0])  # (B, d)
+    h0 = jnp.einsum("bd,df->bf", x_self, l1["w_self"]) + jnp.einsum(
+        "bd,df->bf", agg1_self, l1["w_neigh"]
+    )
+    h0 = jax.nn.relu(h0)
+    # layer 2 at batch nodes: aggregate depth-1 hidden states
+    agg_h1 = agg_mean(h1, neigh_masks[0])  # (B, f)
+    return jnp.einsum("bf,fg->bg", h0, l2["w_self"]) + jnp.einsum(
+        "bf,fg->bg", agg_h1, l2["w_neigh"]
+    )
+
+
+def loss_fn_full(params, batch: GraphBatch, labels, label_mask):
+    logits = forward_full(params, batch)
+    return L.cross_entropy(logits, labels, label_mask.astype(jnp.float32))
+
+
+def loss_fn_sampled(params, x_self, neigh_feats, neigh_masks, labels):
+    logits = forward_sampled(params, x_self, neigh_feats, neigh_masks)
+    return L.cross_entropy(logits, labels)

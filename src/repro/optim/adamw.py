@@ -1,0 +1,85 @@
+"""AdamW + gradient clipping + WSD schedule (pure pytree transforms).
+
+ZeRO-1: the optimizer state is a pytree with the same structure as the
+params, so sharding it over the "data" axis is purely a PartitionSpec
+choice (dist/shardings.zero1_specs) — no optimizer code changes.  States
+are kept in f32 regardless of param dtype (mixed-precision master
+weights live in the m/v moments' dtype policy).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any  # first moment (f32 pytree)
+    v: Any  # second moment (f32 pytree)
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros, jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def update(
+    state: AdamWState,
+    grads,
+    params,
+    lr: jax.Array | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v)
+
+
+def wsd_schedule(warmup: int, stable: int, decay: int, peak_lr: float, floor: float = 0.1):
+    """Warmup-Stable-Decay: the production LR schedule."""
+
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        total = warmup + stable
+        frac = jnp.clip((s - total) / jnp.maximum(decay, 1), 0.0, 1.0)
+        dec = peak_lr * (1.0 - (1.0 - floor) * frac)
+        return jnp.where(s < total, warm, dec)
+
+    return lr

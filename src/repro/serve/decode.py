@@ -1,0 +1,80 @@
+"""Serving loop: batched prefill + decode with a KV cache.
+
+``serve_step`` (one new token per sequence) is the function the
+``decode_*`` / ``long_*`` dry-run shapes lower; ``generate`` drives it
+host-side with greedy/temperature sampling.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+def make_serve_step(cfg, use_flash_kernel: bool = False):
+    """Returns serve_step(params, cache, token) -> (logits, cache')."""
+
+    def serve_step(params, cache, token):
+        return T.decode_step(params, cfg, cache, token, use_flash_kernel=use_flash_kernel)
+
+    return serve_step
+
+
+def make_prefill(cfg):
+    def prefill_fn(params, tokens):
+        logits = T.prefill(params, cfg, tokens)
+        return logits[:, -1]  # next-token logits
+
+    return prefill_fn
+
+
+def generate(
+    params,
+    cfg,
+    prompt: jax.Array,  # (B, S0)
+    max_new: int,
+    max_len: Optional[int] = None,
+    temperature: float = 0.0,
+    key=None,
+    use_flash_kernel: bool = False,
+) -> jax.Array:
+    """Greedy (or sampled) generation; returns (B, S0 + max_new)."""
+    B, S0 = prompt.shape
+    max_len = max_len or (S0 + max_new)
+    cache = T.init_kv_cache(cfg, B, max_len)
+    serve_step = jax.jit(make_serve_step(cfg, use_flash_kernel))
+
+    # prefill token-by-token through the cache (simple, exact) — batched
+    # prefill via forward() is available for latency-critical paths.
+    tokens = prompt
+    logits = None
+    for s in range(S0):
+        logits, cache = serve_step(params, cache, tokens[:, s])
+    out = [tokens]
+    cur = None
+    for i in range(max_new):
+        if temperature > 0.0 and key is not None:
+            key, sub = jax.random.split(key)
+            cur = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            cur = jnp.argmax(logits, axis=-1)
+        out.append(cur[:, None])
+        if i < max_new - 1:
+            logits, cache = serve_step(params, cache, cur)
+    return jnp.concatenate(out, axis=1)
+
+
+def batched_request_server(params, cfg, requests, max_new: int = 16):
+    """Toy batched server: pad requests to one batch, generate, split.
+
+    requests: list of 1-D token arrays."""
+    B = len(requests)
+    S0 = max(r.shape[0] for r in requests)
+    prompt = jnp.stack(
+        [jnp.pad(r, (S0 - r.shape[0], 0), constant_values=0) for r in requests]
+    )
+    out = generate(params, cfg, prompt, max_new)
+    return [out[i, S0:] for i in range(B)]

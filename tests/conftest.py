@@ -1,0 +1,24 @@
+"""Shared pytest config.
+
+NOTE: XLA_FLAGS / device-count overrides are deliberately NOT set here —
+smoke tests and benches must see the 1 real CPU device; only
+launch/dryrun.py requests 512 placeholder devices (and only in its own
+process).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))  # for `proptest` import
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "repro",
+        deadline=None,  # jit compilation makes first examples slow
+        max_examples=40,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("repro")
+except ImportError:
+    pass

@@ -1,0 +1,117 @@
+"""Property-test harness.
+
+Uses real ``hypothesis`` when installed; otherwise falls back to a tiny
+seeded-random compatible subset (``given`` + the strategies our tests use)
+so the property tests still execute many randomized cases offline.
+The fallback is deliberately deterministic (fixed base seed + case index)
+so failures are reproducible.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+from functools import wraps
+
+try:  # pragma: no cover - prefer the real thing when available
+    from hypothesis import given, settings, HealthCheck  # noqa: F401
+    import hypothesis.strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline container: seeded fallback
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self.draw(rng)))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(1000):
+                    x = self.draw(rng)
+                    if pred(x):
+                        return x
+                raise ValueError("filter failed to find a value")
+
+            return _Strategy(draw)
+
+    class st:  # noqa: N801 - mimic hypothesis.strategies module
+        @staticmethod
+        def integers(min_value=-(2**31), max_value=2**31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=64, unique=False):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                if not unique:
+                    return [elem.draw(rng) for _ in range(n)]
+                seen, out = set(), []
+                for _ in range(n * 20):
+                    if len(out) >= n:
+                        break
+                    x = elem.draw(rng)
+                    if x not in seen:
+                        seen.add(x)
+                        out.append(x)
+                return out
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+        @staticmethod
+        def just(x):
+            return _Strategy(lambda rng: x)
+
+        @staticmethod
+        def one_of(*strats):
+            return _Strategy(lambda rng: strats[rng.randrange(len(strats))].draw(rng))
+
+    _N_EXAMPLES = 60
+
+    def given(*g_strats, **g_kw):
+        def deco(f):
+            @wraps(f)
+            def wrapper(*args, **kwargs):
+                for case in range(_N_EXAMPLES):
+                    rng = random.Random(0xC7EE + 7919 * case)
+                    drawn = [s.draw(rng) for s in g_strats]
+                    drawn_kw = {k: s.draw(rng) for k, s in g_kw.items()}
+                    try:
+                        f(*args, *drawn, **drawn_kw, **kwargs)
+                    except Exception:
+                        print(f"[proptest] failing case #{case}: args={drawn} kw={drawn_kw}")
+                        raise
+
+            return wrapper
+
+        return deco
+
+    def settings(**_kw):  # no-op decorator factory
+        def deco(f):
+            return f
+
+        return deco
+
+    class HealthCheck:  # noqa: N801
+        too_slow = None
+        data_too_large = None
+        filter_too_much = None

@@ -1,0 +1,259 @@
+"""C-tree core tests: chunk codecs, treap, and Algorithms 1-3 vs oracles."""
+import numpy as np
+import pytest
+
+from repro.core import chunks as ck
+from repro.core import ctree as ct
+from repro.core import pam
+from repro.core.hash import hash32_jnp, hash32_np, is_head_np
+
+from proptest import given, st
+
+B_VALUES = [2, 8, 64, 256]
+
+
+def sets(max_value=1 << 20, max_size=400):
+    return st.lists(
+        st.integers(min_value=0, max_value=max_value), min_size=0, max_size=max_size
+    )
+
+
+# ---------------------------------------------------------------------------
+# hash + chunk codecs
+# ---------------------------------------------------------------------------
+
+
+def test_hash_np_jnp_agree():
+    x = np.arange(0, 100000, 37, dtype=np.int64)
+    a = hash32_np(x)
+    b = np.asarray(hash32_jnp(x.astype(np.uint32)))
+    assert (a == b.astype(np.uint32)).all()
+
+
+@given(sets())
+def test_vbyte_roundtrip_and_matches_scalar(xs):
+    v = np.unique(np.asarray(xs, dtype=np.int64))
+    enc = ck.vbyte_encode(v)
+    assert enc == ck.vbyte_encode_scalar(v)
+    dec = ck.vbyte_decode(enc)
+    np.testing.assert_array_equal(dec, v)
+    np.testing.assert_array_equal(ck.vbyte_decode_scalar(enc), v)
+
+
+def test_vbyte_large_deltas():
+    v = np.array([0, 1, 2**20, 2**35, 2**35 + 1, 2**62], dtype=np.int64)
+    np.testing.assert_array_equal(ck.vbyte_decode(ck.vbyte_encode(v)), v)
+
+
+@given(sets(max_size=200), st.integers(min_value=0, max_value=1 << 20))
+def test_split_chunk(xs, k):
+    v = np.unique(np.asarray(xs, dtype=np.int64))
+    c = ck.Chunk.from_values(v)
+    l, found, r = ck.split_chunk(c, int(k))
+    lv, rv = ck.chunk_values(l), ck.chunk_values(r)
+    np.testing.assert_array_equal(lv, v[v < k])
+    np.testing.assert_array_equal(rv, v[v > k])
+    assert found == bool((v == k).any())
+
+
+def test_pack_deltas_roundtrip():
+    rng = np.random.default_rng(0)
+    data = np.unique(rng.integers(0, 1 << 40, size=5000))
+    offs = np.array([0, 17, 17, 1000, 2500, data.size], dtype=np.int64)
+    for width in ("uint8", "uint16"):
+        p = ck.pack_deltas(data, offs, width)
+        np.testing.assert_array_equal(ck.unpack_deltas(p), data)
+
+
+# ---------------------------------------------------------------------------
+# pam treap
+# ---------------------------------------------------------------------------
+
+MOD = pam.TreeModule(aug_of=lambda k, v: 1)
+
+
+@given(sets(max_size=300))
+def test_treap_build_canonical_and_invariant(xs):
+    ks = sorted(set(xs))
+    t = MOD.build_sorted([(k, None) for k in ks])
+    assert MOD.check_invariants(t)
+    assert MOD.keys(t) == ks
+    assert pam.size(t) == len(ks)
+    # canonical: insert-one-at-a-time yields the identical structure
+    t2 = None
+    for k in ks:
+        t2 = MOD.insert(t2, k, None)
+    assert t2 == t
+
+
+@given(sets(max_size=200), sets(max_size=200))
+def test_treap_set_algebra(a, b):
+    sa, sb = set(a), set(b)
+    ta = MOD.build_sorted([(k, None) for k in sorted(sa)])
+    tb = MOD.build_sorted([(k, None) for k in sorted(sb)])
+    assert MOD.keys(MOD.union(ta, tb)) == sorted(sa | sb)
+    assert MOD.keys(MOD.difference(ta, tb)) == sorted(sa - sb)
+    assert MOD.keys(MOD.intersect(ta, tb)) == sorted(sa & sb)
+    # canonical form: union equals direct build
+    assert MOD.union(ta, tb) == MOD.build_sorted([(k, None) for k in sorted(sa | sb)])
+
+
+@given(sets(max_size=200), st.integers(min_value=0, max_value=1 << 20))
+def test_treap_split_rank_select(xs, k):
+    ks = sorted(set(xs))
+    t = MOD.build_sorted([(x, None) for x in ks])
+    l, m, r = MOD.split(t, k)
+    assert MOD.keys(l) == [x for x in ks if x < k]
+    assert MOD.keys(r) == [x for x in ks if x > k]
+    assert (m is not None) == (k in set(ks))
+    assert MOD.rank(t, k) == len([x for x in ks if x < k])
+    for i in [0, len(ks) // 2, len(ks) - 1]:
+        if 0 <= i < len(ks):
+            assert MOD.select(t, i)[0] == ks[i]
+
+
+def test_treap_augmentation_tracks_values():
+    mod = pam.TreeModule(aug_of=lambda k, v: v, combine=lambda a, b: a + b, zero=0)
+    t = None
+    total = 0
+    for k in range(100):
+        v = (k * 7) % 13
+        t = mod.insert(t, k, v)
+        total += v
+    assert mod.aug(t) == total
+    t = mod.delete(t, 50)
+    assert mod.aug(t) == total - (50 * 7) % 13
+
+
+# ---------------------------------------------------------------------------
+# C-tree structure
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b", B_VALUES)
+def test_build_roundtrip_and_invariants(b):
+    rng = np.random.default_rng(1)
+    v = np.unique(rng.integers(0, 1 << 24, size=3000))
+    c = ct.build(v, b=b)
+    assert ct.check_invariants(c)
+    np.testing.assert_array_equal(ct.to_array(c), v)
+    assert ct.ctree_size(c) == v.size
+
+
+@pytest.mark.parametrize("b", B_VALUES)
+def test_find(b):
+    rng = np.random.default_rng(2)
+    v = np.unique(rng.integers(0, 1 << 16, size=500))
+    c = ct.build(v, b=b)
+    present = set(v.tolist())
+    for e in range(0, 1 << 16, 97):
+        assert ct.find(c, e) == (e in present)
+    for e in v[:50].tolist():
+        assert ct.find(c, e)
+
+
+@given(sets(), st.integers(min_value=0, max_value=1 << 20), st.sampled_from(B_VALUES))
+def test_split_property(xs, k, b):
+    v = np.unique(np.asarray(xs, dtype=np.int64))
+    c = ct.build(v, b=b)
+    l, found, r = ct.split(c, int(k))
+    np.testing.assert_array_equal(ct.to_array(l), v[v < k])
+    np.testing.assert_array_equal(ct.to_array(r), v[v > k])
+    assert found == bool((v == k).any())
+    assert ct.check_invariants(l) and ct.check_invariants(r)
+
+
+@given(sets(), sets(), st.sampled_from(B_VALUES))
+def test_union_property(a, bs, b):
+    va = np.unique(np.asarray(a, dtype=np.int64))
+    vb = np.unique(np.asarray(bs, dtype=np.int64))
+    cu = ct.union(ct.build(va, b=b), ct.build(vb, b=b))
+    np.testing.assert_array_equal(ct.to_array(cu), np.union1d(va, vb))
+    assert ct.check_invariants(cu)
+    assert ct.ctree_size(cu) == np.union1d(va, vb).size
+
+
+@given(sets(), sets(), st.sampled_from(B_VALUES))
+def test_difference_property(a, bs, b):
+    va = np.unique(np.asarray(a, dtype=np.int64))
+    vb = np.unique(np.asarray(bs, dtype=np.int64))
+    cd = ct.difference(ct.build(va, b=b), ct.build(vb, b=b))
+    np.testing.assert_array_equal(ct.to_array(cd), np.setdiff1d(va, vb))
+    assert ct.check_invariants(cd)
+
+
+@given(sets(), sets(), st.sampled_from(B_VALUES))
+def test_intersect_property(a, bs, b):
+    va = np.unique(np.asarray(a, dtype=np.int64))
+    vb = np.unique(np.asarray(bs, dtype=np.int64))
+    ci = ct.intersect(ct.build(va, b=b), ct.build(vb, b=b))
+    np.testing.assert_array_equal(ct.to_array(ci), np.intersect1d(va, vb))
+    assert ct.check_invariants(ci)
+
+
+@given(sets(max_size=150), sets(max_size=150), st.sampled_from([8, 256]))
+def test_multi_insert_delete(a, bs, b):
+    va = np.unique(np.asarray(a, dtype=np.int64))
+    vb = np.asarray(bs, dtype=np.int64)
+    c = ct.build(va, b=b)
+    ci = ct.multi_insert(c, vb)
+    np.testing.assert_array_equal(ct.to_array(ci), np.union1d(va, vb))
+    cd = ct.multi_delete(ci, vb)
+    np.testing.assert_array_equal(ct.to_array(cd), np.setdiff1d(np.union1d(va, vb), vb))
+    # persistence: original snapshot untouched
+    np.testing.assert_array_equal(ct.to_array(c), va)
+
+
+def test_union_canonical_form():
+    """Hash-chunking makes C-trees history-independent: union order must
+    not matter and must equal a direct build (strong structural check)."""
+    rng = np.random.default_rng(3)
+    a = np.unique(rng.integers(0, 1 << 20, size=800))
+    b = np.unique(rng.integers(0, 1 << 20, size=800))
+    u1 = ct.union(ct.build(a, b=64), ct.build(b, b=64))
+    u2 = ct.union(ct.build(b, b=64), ct.build(a, b=64))
+    direct = ct.build(np.union1d(a, b), b=64)
+    assert ct.to_array(u1).tolist() == ct.to_array(direct).tolist()
+    # heads + chunk contents identical regardless of history
+    assert u1.tree == direct.tree == u2.tree
+    assert ck.chunk_values(u1.prefix).tolist() == ck.chunk_values(direct.prefix).tolist()
+
+
+def test_chunk_size_distribution():
+    """Lemma 3.1: expected chunk size b, O(n/b) heads."""
+    rng = np.random.default_rng(4)
+    v = np.unique(rng.integers(0, 1 << 32, size=200_000))
+    for b in (64, 256):
+        c = ct.build(v, b=b)
+        n_heads = pam.size(c.tree)
+        expect = v.size / b
+        assert 0.8 * expect < n_heads < 1.25 * expect
+        assert ct.ctree_size(c) == v.size
+
+
+def test_memory_model_compression_wins():
+    """Table 2 direction: C-tree (DE) much smaller than uncompressed tree."""
+    rng = np.random.default_rng(5)
+    # power-law-ish neighbor ids in a 1M range, like a real adjacency list
+    v = np.unique((rng.pareto(1.5, size=100_000) * 1000).astype(np.int64))
+    c = ct.build(v, b=256)
+    de = ct.nbytes(c, compressed=True)
+    node_based = ct.uncompressed_tree_bytes(c)
+    assert de < node_based / 4  # paper reports 4.7-11.3x
+    assert ct.nbytes(c, compressed=False) > de
+
+
+def test_snapshot_persistence_under_updates():
+    """Purely-functional property: old versions remain intact (paper §1)."""
+    rng = np.random.default_rng(6)
+    base = np.unique(rng.integers(0, 1 << 20, size=2000))
+    c0 = ct.build(base, b=64)
+    versions = [c0]
+    cur = c0
+    for i in range(5):
+        batch = rng.integers(0, 1 << 20, size=300)
+        cur = ct.multi_insert(cur, batch)
+        versions.append(cur)
+    # every snapshot still decodes to what it was
+    np.testing.assert_array_equal(ct.to_array(versions[0]), base)
+    assert ct.ctree_size(versions[-1]) >= ct.ctree_size(versions[0])

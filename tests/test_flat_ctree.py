@@ -1,0 +1,107 @@
+"""Flat (TPU-native) C-tree vs numpy oracles and the faithful C-tree."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import ctree as ct
+from repro.core import flat_ctree as fct
+from repro.core import pam
+from repro.core.hash import is_head_np
+
+from proptest import given, st
+
+
+def sets(max_value=1 << 20, max_size=300):
+    return st.lists(
+        st.integers(min_value=0, max_value=max_value), min_size=0, max_size=max_size
+    )
+
+
+@given(sets())
+def test_from_to_array(xs):
+    v = np.unique(np.asarray(xs, dtype=np.int64)).astype(np.int32)
+    t = fct.from_array(v)
+    np.testing.assert_array_equal(fct.to_array(t), v)
+
+
+@given(sets(max_size=120), sets(max_size=120))
+def test_member(a, q):
+    va = np.unique(np.asarray(a, dtype=np.int64)).astype(np.int32)
+    vq = np.asarray(sorted(set(q)), dtype=np.int32)
+    t = fct.from_array(va)
+    if vq.size == 0:
+        return
+    got = np.asarray(fct.member(t, jnp.asarray(vq)))
+    np.testing.assert_array_equal(got, np.isin(vq, va))
+
+
+@given(sets(max_size=200), sets(max_size=200), st.booleans())
+def test_union_matches_oracle(a, b, optimized):
+    va = np.unique(np.asarray(a, dtype=np.int64)).astype(np.int32)
+    vb = np.unique(np.asarray(b, dtype=np.int64)).astype(np.int32)
+    ta, tb = fct.from_array(va), fct.from_array(vb)
+    cap = fct.grown_capacity(va.size + vb.size)
+    fn = fct.union_merge if optimized else fct.union_sort
+    out = fn(ta, tb, cap)
+    np.testing.assert_array_equal(fct.to_array(out), np.union1d(va, vb))
+    # padding intact
+    assert (np.asarray(out.data)[int(out.n):] == fct.sentinel_for(out.data.dtype)).all()
+
+
+@given(sets(max_size=200), sets(max_size=200))
+def test_union_merge_equals_union_sort(a, b):
+    va = np.unique(np.asarray(a, dtype=np.int64)).astype(np.int32)
+    vb = np.unique(np.asarray(b, dtype=np.int64)).astype(np.int32)
+    ta, tb = fct.from_array(va), fct.from_array(vb)
+    cap = fct.grown_capacity(va.size + vb.size)
+    s = fct.union_sort(ta, tb, cap)
+    m = fct.union_merge(ta, tb, cap)
+    np.testing.assert_array_equal(np.asarray(s.data), np.asarray(m.data))
+    assert int(s.n) == int(m.n)
+
+
+@given(sets(max_size=200), sets(max_size=200))
+def test_difference_intersect(a, b):
+    va = np.unique(np.asarray(a, dtype=np.int64)).astype(np.int32)
+    vb = np.unique(np.asarray(b, dtype=np.int64)).astype(np.int32)
+    ta, tb = fct.from_array(va), fct.from_array(vb)
+    d = fct.difference(ta, tb, fct.capacity(ta))
+    np.testing.assert_array_equal(fct.to_array(d), np.setdiff1d(va, vb))
+    i = fct.intersect(ta, tb, fct.capacity(ta))
+    np.testing.assert_array_equal(fct.to_array(i), np.intersect1d(va, vb))
+
+
+def test_multi_insert_delete_host_api():
+    rng = np.random.default_rng(0)
+    t = fct.from_array(rng.integers(0, 1 << 20, 1000).astype(np.int32))
+    base = fct.to_array(t).copy()
+    batch = rng.integers(0, 1 << 20, 500).astype(np.int32)
+    t2 = fct.multi_insert(t, batch)
+    np.testing.assert_array_equal(fct.to_array(t2), np.union1d(base, batch))
+    t3 = fct.multi_delete(t2, batch)
+    np.testing.assert_array_equal(fct.to_array(t3), np.setdiff1d(np.union1d(base, batch), batch))
+    # persistence: t unchanged (immutability of jax arrays)
+    np.testing.assert_array_equal(fct.to_array(t), base)
+
+
+def test_flat_heads_agree_with_faithful_ctree():
+    """The two levels chunk identically: same head set, same chunk sizes."""
+    rng = np.random.default_rng(1)
+    v = np.unique(rng.integers(0, 1 << 20, 5000)).astype(np.int32)
+    b, seed = 64, ct.DEFAULT_SEED
+    flat = fct.from_array(v)
+    hm = np.asarray(fct.head_mask(flat, b, seed))[: v.size]
+    np.testing.assert_array_equal(hm, is_head_np(v.astype(np.int64), b, np.uint32(seed)))
+    faithful = ct.build(v.astype(np.int64), b=b, seed=seed)
+    heads_faithful = [k for k, _ in pam.TreeModule().iter_entries(faithful.tree)] if faithful.tree else []
+    np.testing.assert_array_equal(v[hm], np.asarray(heads_faithful, dtype=np.int32))
+
+
+def test_capacity_growth_policy():
+    assert fct.grown_capacity(0) == 8
+    assert fct.grown_capacity(8) == 16
+    assert fct.grown_capacity(1000) == 1024
+    # powers of two quantize recompiles
+    caps = {fct.grown_capacity(n) for n in range(1, 10000)}
+    assert len(caps) <= 12

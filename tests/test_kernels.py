@@ -1,0 +1,153 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.core import chunks as ck
+
+
+# ---------------------------------------------------------------------------
+# delta decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_chunks,max_len", [(8, 128), (3, 40), (17, 300), (64, 256)])
+def test_delta_decode_shapes(n_chunks, max_len):
+    rng = np.random.default_rng(0)
+    deltas = rng.integers(0, 100, size=(n_chunks, max_len)).astype(np.int32)
+    deltas[:, 0] = 0
+    anchors = rng.integers(0, 1 << 20, size=n_chunks).astype(np.int32)
+    got = ops.decode_chunks(jnp.asarray(anchors), jnp.asarray(deltas))
+    want = ref.delta_decode_ref(jnp.asarray(anchors), jnp.asarray(deltas))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_decode_pool_roundtrip():
+    """Kernel decode of a PackedDeltas pool reproduces the original data."""
+    rng = np.random.default_rng(1)
+    data = np.unique(rng.integers(0, 1 << 30, size=20_000))
+    # chunk boundaries from hash heads, as the flat C-tree produces them
+    from repro.core.hash import is_head_np
+
+    heads = np.flatnonzero(is_head_np(data, 128))
+    offs = np.concatenate([[0], heads, [data.size]])
+    offs = np.unique(offs)
+    packed = ck.pack_deltas(data, offs, width="uint16")
+    out = ops.decode_pool(packed)
+    np.testing.assert_array_equal(out, data)
+
+
+# ---------------------------------------------------------------------------
+# segment sum (one-hot MXU formulation)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("E,D,n_out", [(512, 128, 128), (2048, 64, 300), (100, 32, 50)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_sum_sorted(E, D, n_out, dtype):
+    rng = np.random.default_rng(2)
+    dst = np.sort(rng.integers(0, n_out, size=E)).astype(np.int32)
+    msg = rng.standard_normal((E, D)).astype(np.float32)
+    msg_q = jnp.asarray(msg, dtype=dtype)
+    got = ops.segment_sum(jnp.asarray(dst), msg_q, n_out)
+    # ground truth: exact fp32 sum of the quantized inputs (kernel
+    # accumulates fp32; only the final store is in `dtype`)
+    want = ref.segment_sum_sorted_ref(jnp.asarray(dst), msg_q.astype(jnp.float32), n_out)
+    rtol = 1e-6 if dtype == jnp.float32 else 1e-2
+    atol = 1e-3 if dtype == jnp.float32 else 0.08
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=rtol, atol=atol
+    )
+
+
+def test_segment_sum_empty_segments():
+    dst = jnp.asarray(np.array([5, 5, 9], dtype=np.int32))
+    msg = jnp.ones((3, 8), jnp.float32)
+    out = np.asarray(ops.segment_sum(dst, msg, 16))
+    assert out[5].sum() == 16.0 and out[9].sum() == 8.0
+    assert out.sum() == 24.0
+
+
+# ---------------------------------------------------------------------------
+# fanout aggregate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["mean", "sum", "max"])
+@pytest.mark.parametrize("B,K,D", [(16, 10, 64), (5, 25, 128)])
+def test_fanout_aggregate(op, B, K, D):
+    rng = np.random.default_rng(3)
+    feats = rng.standard_normal((B, K, D)).astype(np.float32)
+    mask = (rng.random((B, K)) < 0.7).astype(np.float32)
+    mask[:, 0] = 1.0  # no fully-empty bags
+    got = ops.fanout_aggregate(jnp.asarray(feats), jnp.asarray(mask), op)
+    want = ref.fanout_aggregate_ref(jnp.asarray(feats), jnp.asarray(mask), op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("BH,Q,S,d", [(4, 8, 1024, 64), (2, 4, 2048, 128), (1, 8, 640, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode(BH, Q, S, d, dtype):
+    rng = np.random.default_rng(4)
+    q = rng.standard_normal((BH, Q, d)).astype(np.float32)
+    k = rng.standard_normal((BH, S, d)).astype(np.float32)
+    v = rng.standard_normal((BH, S, d)).astype(np.float32)
+    lengths = rng.integers(S // 2, S + 1, size=BH).astype(np.int32)
+    qj, kj, vj = (jnp.asarray(x, dtype=dtype) for x in (q, k, v))
+    got = ops.flash_decode_attn(qj, kj, vj, jnp.asarray(lengths))
+    want = ref.flash_decode_ref(qj, kj, vj, jnp.asarray(lengths))
+    rtol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=rtol, atol=2e-2
+    )
+
+
+def test_flash_decode_short_length():
+    """Cache much shorter than padded S: masked blocks contribute nothing."""
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.standard_normal((1, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2048, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2048, 64)), jnp.float32)
+    lengths = jnp.asarray([7], jnp.int32)
+    got = ops.flash_decode_attn(q, k, v, lengths)
+    want = ref.flash_decode_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# block SpMM
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,E,D", [(256, 2000, 64), (300, 5000, 128)])
+def test_block_spmm_vs_dense(n, E, D):
+    rng = np.random.default_rng(6)
+    src = rng.integers(0, n, size=E)
+    dst = rng.integers(0, n, size=E)
+    x = rng.standard_normal((n, D)).astype(np.float32)
+    got = np.asarray(ops.spmm_from_edges(n, src, dst, jnp.asarray(x)))
+    a = np.zeros((n, n), dtype=np.float32)
+    np.add.at(a, (dst, src), 1.0)
+    want = a @ x
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_block_spmm_matches_segment_sum():
+    """Two TPU-native aggregation routes agree: SpMM and sorted segsum."""
+    rng = np.random.default_rng(7)
+    n, E, D = 128, 1000, 32
+    src = rng.integers(0, n, size=E)
+    dst = np.sort(rng.integers(0, n, size=E))
+    x = rng.standard_normal((n, D)).astype(np.float32)
+    via_spmm = np.asarray(ops.spmm_from_edges(n, src, dst, jnp.asarray(x)))
+    msg = x[src]
+    via_seg = np.asarray(ops.segment_sum(jnp.asarray(dst, dtype=jnp.int32), jnp.asarray(msg), n))
+    np.testing.assert_allclose(via_spmm, via_seg, rtol=1e-5, atol=1e-4)

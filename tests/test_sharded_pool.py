@@ -1,0 +1,76 @@
+"""Range-sharded pool (the §Perf A1 beyond-paper structure): correctness
+on a degenerate 1-device mesh + pure-host properties."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sharded_pool as sp
+
+from proptest import given, st
+
+
+def sets(max_value=1 << 30, max_size=400):
+    return st.lists(st.integers(min_value=0, max_value=max_value),
+                    min_size=1, max_size=max_size)
+
+
+@given(sets())
+def test_from_to_array_roundtrip(xs):
+    v = np.unique(np.asarray(xs, dtype=np.int64))
+    p = sp.from_array(v, n_shards=4)
+    np.testing.assert_array_equal(sp.to_array(p), v)
+    # boundaries are monotone (compare, don't subtract: lo[0] is the
+    # int64-min sentinel and np.diff would overflow)
+    lo = np.asarray(p.lo)
+    assert (lo[1:] >= lo[:-1]).all()
+
+
+@given(sets(max_size=200), sets(max_size=200))
+def test_insert_step_matches_union(a, b):
+    """shard_map степ on a 1-device mesh == np.union1d."""
+    va = np.unique(np.asarray(a, dtype=np.int64))
+    vb = np.unique(np.asarray(b, dtype=np.int64))
+    mesh = jax.make_mesh((1,), ("shard",))
+    cap_per = sp.from_array(va, 1).data.shape[1]
+    need = int(2 ** np.ceil(np.log2(va.size + vb.size + 1)))
+    pool = sp.from_array(va, 1, cap_per=max(cap_per, need))
+    step = sp.make_insert_step(mesh, ("shard",))
+    pad = int(2 ** np.ceil(np.log2(vb.size + 1)))
+    batch = jnp.asarray(np.concatenate([vb, np.full(pad - vb.size, sp.SENT)]))
+    with mesh:
+        out = step(pool, batch)
+    np.testing.assert_array_equal(sp.to_array(out), np.union1d(va, vb))
+
+
+def test_member_queries():
+    rng = np.random.default_rng(0)
+    v = np.unique(rng.integers(0, 1 << 20, 5000))
+    p = sp.from_array(v, n_shards=8)
+    q = np.concatenate([v[::7], rng.integers(1 << 21, 1 << 22, 50)])
+    got = np.asarray(sp.member(p, jnp.asarray(q)))
+    np.testing.assert_array_equal(got, np.isin(q, v))
+
+
+def test_rebalance_restores_even_counts():
+    rng = np.random.default_rng(1)
+    # skewed inserts: all new keys land in shard 0's range
+    v = np.unique(rng.integers(0, 1 << 20, 4000))
+    p = sp.from_array(v, n_shards=4)
+    mesh = jax.make_mesh((1,), ("shard",))
+    # simulate fill imbalance by rebuilding with a skewed value set
+    skew = np.unique(np.concatenate([v, rng.integers(0, 100, 3000)]))
+    p2 = sp.from_array(skew, 4, cap_per=p.data.shape[1] * 2)
+    r = sp.rebalance(p2)
+    counts = np.asarray(r.n)
+    assert counts.max() - counts.min() <= 1 + skew.size % 4
+    np.testing.assert_array_equal(sp.to_array(r), skew)
+
+
+def test_needs_rebalance_trigger():
+    v = np.arange(100, dtype=np.int64)
+    p = sp.from_array(v, n_shards=4, cap_per=32)
+    assert not sp.needs_rebalance(p)
+    p2 = sp.from_array(v, n_shards=4, cap_per=26)
+    assert sp.needs_rebalance(p2, slack=0.9)

@@ -1,0 +1,205 @@
+"""Substrate tests: optimizer, data determinism, checkpoint/restore,
+fault tolerance, straggler policy, sharding rules."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.data.pipeline import NeighborSampler, power_law_graph, recsys_batch, token_batch
+from repro.dist.fault_tolerance import HeartbeatMonitor, ResumableRun, StragglerPolicy
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    state = adamw.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = adamw.update(state, grads, params, lr=0.05, weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+    assert int(state.step) == 200
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0))
+    assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_wsd_schedule_shape():
+    lr = adamw.wsd_schedule(10, 100, 50, 1.0, floor=0.1)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0)
+    assert float(lr(50)) == pytest.approx(1.0)
+    assert float(lr(110 + 50)) == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# data determinism (the fault-tolerance contract)
+# ---------------------------------------------------------------------------
+
+
+def test_token_batch_deterministic_and_host_sharded():
+    a = token_batch(1, 7, 8, 32, 100)
+    b = token_batch(1, 7, 8, 32, 100)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = token_batch(1, 8, 8, 32, 100)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    h0 = token_batch(1, 7, 8, 32, 100, host_id=0, n_hosts=2)
+    h1 = token_batch(1, 7, 8, 32, 100, host_id=1, n_hosts=2)
+    assert h0["tokens"].shape == (4, 32)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_recsys_batch_deterministic():
+    a = recsys_batch(0, 3, 16)
+    b = recsys_batch(0, 3, 16)
+    np.testing.assert_array_equal(a["sparse_ids"], b["sparse_ids"])
+
+
+def test_neighbor_sampler_deterministic_and_valid():
+    offs, nbrs = power_law_graph(256, 5000, seed=0)
+    feats = np.zeros((256, 4), np.float32)
+    s = NeighborSampler(offs, nbrs, feats)
+    a = s.sample_batch(0, 5, 32, (5, 3))
+    b = s.sample_batch(0, 5, 32, (5, 3))
+    np.testing.assert_array_equal(a["seeds"], b["seeds"])
+    np.testing.assert_array_equal(a["neigh_masks"][1], b["neigh_masks"][1])
+    assert a["neigh_feats"][0].shape == (32, 5, 4)
+    assert a["neigh_feats"][1].shape == (32, 5, 3, 4)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32), "b": {"c": jnp.ones((3, 4))}}
+    ckpt.save(str(tmp_path), 5, tree)
+    assert ckpt.list_steps(str(tmp_path)) == [5]
+    step, restored = ckpt.restore(str(tmp_path), template=tree)
+    assert step == 5
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    np.testing.assert_array_equal(restored["b"]["c"], tree["b"]["c"])
+
+
+def test_checkpoint_uncommitted_ignored(tmp_path):
+    tree = {"x": jnp.zeros(3)}
+    p = ckpt.save(str(tmp_path), 1, tree)
+    os.remove(os.path.join(p, "COMMITTED"))
+    assert ckpt.list_steps(str(tmp_path)) == []
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path), template=tree)
+
+
+def test_async_checkpointer_gc(tmp_path):
+    saver = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = {"x": jnp.arange(5)}
+    for s in [10, 20, 30, 40]:
+        saver.save_async(s, tree)
+    saver.wait()
+    assert ckpt.list_steps(str(tmp_path)) == [30, 40]
+
+
+def test_checkpoint_elastic_remesh(tmp_path):
+    """Restore a checkpoint onto a different mesh (elastic re-shard)."""
+    devs = jax.devices()
+    mesh1 = jax.sharding.Mesh(np.array(devs[:1]).reshape(1, 1), ("data", "model"))
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    specs = {"w": P(None, "model")}
+    ckpt.save(str(tmp_path), 3, tree, specs)
+    step, restored = ckpt.restore(
+        str(tmp_path), mesh=mesh1, target_specs=specs, template=tree
+    )
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding.spec == P(None, "model")
+
+
+def test_resumable_run_resumes(tmp_path):
+    make = lambda: {"w": jnp.zeros(4)}  # noqa: E731
+    run = ResumableRun(str(tmp_path), make, save_every=10)
+    step0, state = run.restore_or_init()
+    assert step0 == 0
+    state = {"w": jnp.full(4, 7.0)}
+    run.maybe_save(10, state)
+    run.finish()
+    run2 = ResumableRun(str(tmp_path), make, save_every=10)
+    step1, state1 = run2.restore_or_init()
+    assert step1 == 10
+    np.testing.assert_array_equal(np.asarray(state1["w"]), 7.0 * np.ones(4))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance policies
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_monitor():
+    hb = HeartbeatMonitor(n_hosts=3, timeout_s=10)
+    now = 100.0
+    hb.beat(0, now), hb.beat(1, now), hb.beat(2, now)
+    assert hb.dead_hosts(now + 5) == []
+    hb.beat(0, now + 12), hb.beat(1, now + 12)
+    assert hb.dead_hosts(now + 15) == [2]
+
+
+def test_straggler_policy_accepts_and_reassigns():
+    sp = StragglerPolicy(n_shards=8, min_shards=6, deadline_s=10, strikes_out=2)
+    # shard 7 persistently late
+    r1 = sp.step({s: (30.0 if s == 7 else 1.0) for s in range(8)})
+    assert r1["accepted"] and r1["late"] == [7]
+    assert r1["grad_scale"] == pytest.approx(8 / 7)
+    r2 = sp.step({s: (30.0 if s == 7 else 1.0) for s in range(8)})
+    assert r2["reassign"] == [7]
+    # catastrophic step: too few shards
+    r3 = sp.step({s: 30.0 for s in range(8)})
+    assert not r3["accepted"] and r3["grad_scale"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+def test_zero1_specs_shards_largest_free_dim():
+    from repro.dist import shardings as SH
+
+    devs = jax.devices()
+    mesh = jax.sharding.Mesh(np.array(devs[:1]).reshape(1, 1), ("data", "model"))
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 2}
+
+    p = {"w": jnp.zeros((8, 6)), "b": jnp.zeros((3,))}
+    specs = {"w": P(None, "model"), "b": P(None)}
+    z = SH.zero1_specs(specs, p, FakeMesh())
+    assert z["w"] == P("data", "model")  # dim0=8 divisible by 4
+    assert z["b"] == P(None)  # 3 not divisible by 4 -> untouched
+
+
+def test_lm_param_specs_divisibility_guards():
+    from repro.configs import registry
+    from repro.dist import shardings as SH
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    cfg = registry.get("smollm-360m").full  # 15 heads: not divisible
+    specs = SH.lm_param_specs(cfg, FakeMesh())
+    assert specs["layers"]["attn"]["wq"] == P(None, None, None, None)  # replicated
+    cfg2 = registry.get("qwen2.5-3b").full  # 16 heads: divisible
+    specs2 = SH.lm_param_specs(cfg2, FakeMesh())
+    assert specs2["layers"]["attn"]["wq"] == P(None, None, "model", None)
+    assert specs2["layers"]["attn"]["wk"] == P(None, None, None, None)  # kv=2
