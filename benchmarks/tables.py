@@ -357,6 +357,65 @@ def bench_vs_baselines(quick: bool = False) -> List[Row]:
 
 
 # ---------------------------------------------------------------------------
+# unified traversal engine: numpy vs jax backend (parity + speed)
+# ---------------------------------------------------------------------------
+
+
+def bench_traversal(quick: bool = False) -> List[Row]:
+    """Same algorithm text on both substrates: NumpyEngine(FlatSnapshot)
+    vs JaxEngine(FlatGraph).  On this CPU container the jax backend runs
+    jit-on-CPU with Pallas in interpret mode, so the absolute ratio is
+    NOT the TPU story — the parity columns are the point (1.0 = the two
+    backends agree)."""
+    import jax
+
+    from repro.core import flat_graph as fg
+    from repro.core import graph as G
+    from repro.core.traversal import NumpyEngine, make_engine
+    from repro.core.traversal import algorithms as talg
+
+    n, edges = _test_graph(12, 60_000)
+    src = int(edges[0, 0])
+    eng_np = NumpyEngine(G.flat_snapshot(G.build_graph(n, edges)))
+    eng_jx = make_engine(fg.from_edges(n, edges))
+    tag = f"n=2^12,m={edges.shape[0]}"
+
+    runs = [
+        ("bfs", lambda e: talg.bfs(e, src)),
+        ("pagerank", lambda e: talg.pagerank(e, iters=5)),
+        ("cc", lambda e: talg.connected_components(e)),
+    ]
+    if not quick:
+        runs.append(("bc", lambda e: talg.bc(e, src)))
+
+    rows: List[Row] = []
+    for name, run in runs:
+        out_np = run(eng_np)  # also warms any jit caches
+        out_jx = run(eng_jx)
+        t_np = _timeit(lambda: run(eng_np), repeats=2)
+        t_jx = _timeit(lambda: run(eng_jx), repeats=2)
+        if name == "bfs":
+            parity = float(
+                np.array_equal(
+                    talg.bfs_depths(out_np, src), talg.bfs_depths(out_jx, src)
+                )
+            )
+        elif name == "cc":
+            parity = float(np.array_equal(out_np, out_jx))
+        else:
+            parity = float(np.allclose(out_np, out_jx, atol=1e-5))
+        rows += [
+            (f"TRAV/{name}_numpy/{tag}", t_np * 1e3, "ms", "NumpyEngine(FlatSnapshot)"),
+            (f"TRAV/{name}_jax/{tag}", t_jx * 1e3, "ms",
+             f"JaxEngine(FlatGraph) backend={jax.default_backend()}"),
+            (f"TRAV/{name}_parity/{tag}", parity, "bool", "1.0 = backends agree"),
+            (f"TRAV/{name}_speedup/{tag}", t_np / max(t_jx, 1e-12), "x",
+             "numpy/jax (interpret-mode caveat on CPU)"),
+        ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # kernel micro-benchmarks (§Perf support; CPU = oracle timings only)
 # ---------------------------------------------------------------------------
 
@@ -404,5 +463,6 @@ ALL_BENCHES = {
     "concurrent": bench_concurrent,
     "batch_updates": bench_batch_updates,
     "vs_baselines": bench_vs_baselines,
+    "traversal": bench_traversal,
     "kernels": bench_kernels,
 }

@@ -1,8 +1,10 @@
 """Streaming analytics: the paper's §7.3 experiment as an application.
 
-Concurrent writer (edge stream) + reader (BFS/connectivity queries) on
-one AspenStream, then the same workload on the TPU-native flat level
-(jit-compiled rank-merge updates + while-loop BFS).
+Concurrent writer (edge stream) + reader (BFS queries) on one
+AspenStream, then the SAME analytics (BFS / PageRank / CC) through the
+backend-unified traversal engine on both substrates — the numpy
+FlatSnapshot engine and the jit-compiled FlatGraph engine — with a
+parity + speed report.
 
     PYTHONPATH=src python examples/streaming_analytics.py
 """
@@ -10,10 +12,11 @@ import time
 
 import numpy as np
 
-from repro.core import algorithms as alg
 from repro.core import flat_graph as fg
 from repro.core import graph as G
 from repro.core.streaming import AspenStream, make_update_stream, run_concurrent
+from repro.core.traversal import make_engine
+from repro.core.traversal import algorithms as talg
 from repro.data.rmat import rmat_edges, symmetrize
 
 n = 4096
@@ -24,7 +27,8 @@ keep, stream_updates = make_update_stream(edges, 5_000, seed=1)
 s = AspenStream(G.build_graph(n, keep))
 src = int(edges[0, 0])
 stats = run_concurrent(
-    s, stream_updates, query_fn=lambda snap: alg.bfs(snap, src),
+    s, stream_updates,
+    query_fn=lambda snap: talg.bfs(make_engine(snap), src),
     duration_s=3.0, batch_size=10,
 )
 print("== faithful (tree-of-C-trees) level ==")
@@ -34,11 +38,13 @@ print(f"query latency     : {stats.query_latency_concurrent_s * 1e3:.2f} ms conc
       f"vs {stats.query_latency_isolated_s * 1e3:.2f} ms isolated "
       f"({100 * (stats.query_latency_concurrent_s / stats.query_latency_isolated_s - 1):+.1f}%)")
 
-# --- TPU-native level: jit streaming step + jit BFS -------------------------
+# --- TPU-native level: jit streaming step --------------------------------
 import jax
 
 gf = fg.from_edges(n, keep)
-batch_np = stream_updates[stream_updates[:, 2] == 0][:2048, :2]
+ins_np = stream_updates[stream_updates[:, 2] == 0][:1024, :2]
+# both directions, matching AspenStream.insert_edges(symmetric=True)
+batch_np = np.concatenate([ins_np, ins_np[:, ::-1]])
 batch = fg.batch_from_edges(batch_np)
 cap = gf.edge_capacity * 2
 ins = jax.jit(lambda g, b: fg.insert_edges(g, b, cap))
@@ -50,9 +56,25 @@ jax.block_until_ready(gf2)
 dt = (time.perf_counter() - t0) / 20
 print("\n== TPU-native (flat pool) level ==")
 print(f"batch insert      : {batch_np.shape[0] / dt:,.0f} edges/s (jit rank-merge)")
-t0 = time.perf_counter()
-levels = jax.block_until_ready(fg.bfs(gf2, src))
-print(f"jit BFS           : {(time.perf_counter() - t0) * 1e3:.1f} ms, "
-      f"reached {(np.asarray(levels) >= 0).sum()} vertices")
-cc = np.asarray(fg.connected_components(gf2))
-print(f"components        : {len(np.unique(cc))}")
+
+# --- unified traversal engine: same algorithms, both backends -------------
+# Callers pick the backend at snapshot time: ``AspenStream.engine("numpy")``
+# (or "jax") on the stream, or ``make_engine(FlatGraph)`` on the flat
+# pool.  Parity is checked on one shared snapshot (the post-insert pool).
+eng_jx = make_engine(gf2)
+eng_np = make_engine(G.flat_snapshot(G.build_graph(n, fg.to_edge_array(gf2))))
+
+print("\n== unified edgeMap engine: numpy vs jax parity + speed ==")
+print(f"{'algorithm':<12}{'numpy ms':>10}{'jax ms':>10}  parity")
+for name, run, check in [
+    ("bfs", lambda e: talg.bfs(e, src),
+     lambda a, b: np.array_equal(talg.bfs_depths(a, src), talg.bfs_depths(b, src))),
+    ("pagerank", lambda e: talg.pagerank(e, iters=5),
+     lambda a, b: np.allclose(a, b, atol=1e-5)),
+    ("cc", lambda e: talg.connected_components(e), np.array_equal),
+]:
+    run(eng_jx)  # warm the jit cache
+    run(eng_np)  # warm the CSR caches (symmetric warm-up for fair timing)
+    t0 = time.perf_counter(); out_j = run(eng_jx); t_j = time.perf_counter() - t0
+    t0 = time.perf_counter(); out_n = run(eng_np); t_n = time.perf_counter() - t0
+    print(f"{name:<12}{t_n * 1e3:>10.1f}{t_j * 1e3:>10.1f}  {bool(check(out_n, out_j))}")

@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Smoke target: tier-1 suite + a ~2s traversal-engine parity probe.
+#
+#   scripts/smoke.sh          # full tier-1 + parity probe
+#   scripts/smoke.sh --fast   # skip slow-marked tests (quick iteration)
+#
+# The parity probe catches benchmark-only regressions (e.g. a kernel or
+# engine change that still passes unit tests but breaks numpy-vs-jax
+# agreement at the integration level) before a full benchmark run.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+MARK=()
+if [[ "${1:-}" == "--fast" ]]; then
+  MARK=(-m "not slow")
+fi
+
+# ${MARK[@]+...} guard: empty-array expansion trips `set -u` on bash < 4.4
+python -m pytest -x -q ${MARK[@]+"${MARK[@]}"}
+
+echo "== engine parity probe (numpy vs jax traversal) =="
+python - <<'EOF'
+import time
+
+import numpy as np
+
+from repro.core import flat_graph as fg, graph as G
+from repro.core.traversal import NumpyEngine, make_engine
+from repro.core.traversal import algorithms as talg
+from repro.data.rmat import rmat_edges, symmetrize
+
+t0 = time.time()
+edges = symmetrize(rmat_edges(9, 4000, seed=3))
+n = 1 << 9
+eng_np = NumpyEngine(G.flat_snapshot(G.build_graph(n, edges)))
+eng_jx = make_engine(fg.from_edges(n, edges))
+src = int(edges[0, 0])
+
+p_np, p_jx = talg.bfs(eng_np, src), talg.bfs(eng_jx, src)
+assert np.array_equal(talg.bfs_depths(p_np, src), talg.bfs_depths(p_jx, src)), "BFS depths diverge"
+assert np.allclose(talg.pagerank(eng_np, iters=5), talg.pagerank(eng_jx, iters=5), atol=1e-5), "PageRank diverges"
+assert np.array_equal(talg.connected_components(eng_np), talg.connected_components(eng_jx)), "CC labels diverge"
+print(f"parity OK (bfs/pagerank/cc, n={n}, m={edges.shape[0]}) in {time.time() - t0:.1f}s")
+EOF

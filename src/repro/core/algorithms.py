@@ -4,136 +4,52 @@ Global: BFS, BC (single-source betweenness), MIS, plus PageRank and
 label-propagation CC (extras beyond the paper's five).
 Local:  2-hop, Local-Cluster (Nibble-Serial, [71, 72]).
 
+The frontier-synchronous globals (BFS / BC / PageRank / CC) are thin
+wrappers over the backend-generic implementations in
+``repro.core.traversal.algorithms`` bound to the numpy engine — the
+same algorithm text also runs on the jax/TPU backend (see
+``traversal.make_engine``).  MIS and the local algorithms keep their
+direct implementations here.
+
 All globals take a FlatSnapshot (paper §5.1: global algorithms can afford
 the O(n) flat-snapshot and then pay O(deg(v)) per vertex, as CSR would);
 locals run directly against the tree to model the no-snapshot regime.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import numpy as np
 
 from . import ctree as ct
-from .edgemap import VertexSubset, edge_map, from_ids, gather_csr
 from .graph import FlatSnapshot, Graph, find_vertex
-
-
-def _total_edges(snap: FlatSnapshot) -> int:
-    return sum(snap.degree(v) for v in range(snap.n))
+from .traversal import gather_csr
+from .traversal import algorithms as talg
+from .traversal.numpy_backend import engine_of as _engine_of
 
 
 # ---------------------------------------------------------------------------
-# BFS (direction-optimized, paper §5.1)
+# frontier-synchronous globals: numpy engine bound to the generic text
 # ---------------------------------------------------------------------------
 
 
 def bfs(snap: FlatSnapshot, src: int, direction_optimize: bool = True) -> np.ndarray:
     """Returns the parent array (-1 = unreached; src's parent is itself)."""
-    n = snap.n
-    parents = np.full(n, -1, dtype=np.int64)
-    parents[src] = src
-    frontier = from_ids(n, [src])
-    m = _total_edges(snap)
-
-    def C(vs):
-        return parents[vs] == -1
-
-    def F(us, vs):
-        # claim: first writer wins (vectorized CAS emulation: np unique)
-        vs_u, first = np.unique(vs, return_index=True)
-        unclaimed = parents[vs_u] == -1
-        parents[vs_u[unclaimed]] = us[first][unclaimed]
-        return np.zeros(us.shape, dtype=bool)  # outputs built from claims
-
-    def F_sparse(us, vs):
-        vs_u, first = np.unique(vs, return_index=True)
-        unclaimed = parents[vs_u] == -1
-        parents[vs_u[unclaimed]] = us[first][unclaimed]
-        won = np.zeros(us.shape, dtype=bool)
-        idx = first[unclaimed]
-        won[idx] = True
-        return won
-
-    def F_dense(candidates, offsets, nbrs, nbr_in_u):
-        """Dense direction: each unreached v scans in-neighbors for any in
-        the frontier; takes the first as parent (Beamer bottom-up)."""
-        seg = np.repeat(np.arange(candidates.size), np.diff(offsets))
-        hit = nbr_in_u
-        out_mask = np.zeros(candidates.size, dtype=bool)
-        # first hit per segment
-        if hit.any():
-            hit_idx = np.flatnonzero(hit)
-            seg_hit = seg[hit_idx]
-            first_per_seg = np.unique(seg_hit, return_index=True)
-            segs, firsts = first_per_seg
-            parents[candidates[segs]] = nbrs[hit_idx[firsts]]
-            out_mask[segs] = True
-        return out_mask
-
-    while not frontier.empty:
-        frontier = edge_map(
-            snap,
-            frontier,
-            F_sparse,
-            C,
-            m=m,
-            direction_optimize=direction_optimize,
-            F_dense=F_dense,
-        )
-    return parents
-
-
-# ---------------------------------------------------------------------------
-# Betweenness centrality (Brandes, single source; paper's BC)
-# ---------------------------------------------------------------------------
+    return talg.bfs(_engine_of(snap), src, direction_optimize=direction_optimize)
 
 
 def bc(snap: FlatSnapshot, src: int) -> np.ndarray:
     """Single-source betweenness contributions (paper §7: BC computes the
     contributions for shortest paths from one vertex)."""
-    n = snap.n
-    num_paths = np.zeros(n, dtype=np.float64)
-    num_paths[src] = 1.0
-    visited = np.zeros(n, dtype=bool)
-    visited[src] = True
-    levels = []
-    frontier = np.asarray([src], dtype=np.int64)
-    # forward: count shortest paths level by level
-    while frontier.size:
-        levels.append(frontier)
-        offsets, nbrs = gather_csr(snap, frontier)
-        srcs = np.repeat(frontier, np.diff(offsets))
-        mask = ~visited[nbrs]
-        if mask.any():
-            np.add.at(num_paths, nbrs[mask], num_paths[srcs[mask]])
-            nxt = np.unique(nbrs[mask])
-        else:
-            nxt = np.empty(0, dtype=np.int64)
-        visited[nxt] = True
-        frontier = nxt
-    # backward: accumulate dependencies level by level (Brandes)
-    dependencies = _bc_backward(snap, levels, num_paths)
-    dependencies[src] = 0.0
-    return dependencies
+    return talg.bc(_engine_of(snap), src)
 
 
-def _bc_backward(snap, levels, num_paths) -> np.ndarray:
-    n = snap.n
-    level_of = np.full(n, -1, dtype=np.int64)
-    for d, lv in enumerate(levels):
-        level_of[lv] = d
-    dep = np.zeros(n, dtype=np.float64)
-    for d in range(len(levels) - 2, -1, -1):
-        frontier = levels[d]
-        offsets, nbrs = gather_csr(snap, frontier)
-        srcs = np.repeat(frontier, np.diff(offsets))
-        succ = level_of[nbrs] == (d + 1)
-        if succ.any():
-            u, v = srcs[succ], nbrs[succ]
-            contrib = (num_paths[u] / num_paths[v]) * (1.0 + dep[v])
-            np.add.at(dep, u, contrib)
-    return dep
+def pagerank(snap: FlatSnapshot, iters: int = 10, damping: float = 0.85) -> np.ndarray:
+    return talg.pagerank(_engine_of(snap), iters=iters, damping=damping)
+
+
+def connected_components(snap: FlatSnapshot, max_iters: int = 1000) -> np.ndarray:
+    """Label propagation (min-label) to fixpoint.  Assumes a symmetric
+    edge set (the paper's undirected model; AspenStream's default)."""
+    return talg.connected_components(_engine_of(snap), max_iters=max_iters)
 
 
 # ---------------------------------------------------------------------------
@@ -229,38 +145,3 @@ def local_cluster(
     return np.sort(verts[:cut])
 
 
-# ---------------------------------------------------------------------------
-# extras: PageRank + connected components (beyond the paper's five)
-# ---------------------------------------------------------------------------
-
-
-def pagerank(snap: FlatSnapshot, iters: int = 10, damping: float = 0.85) -> np.ndarray:
-    n = snap.n
-    deg = np.asarray([snap.degree(v) for v in range(n)], dtype=np.float64)
-    offsets, nbrs = gather_csr(snap, np.arange(n, dtype=np.int64))
-    srcs = np.repeat(np.arange(n, dtype=np.int64), np.diff(offsets))
-    pr = np.full(n, 1.0 / n)
-    dangling = deg == 0
-    for _ in range(iters):
-        contrib = np.zeros(n)
-        w = pr[srcs] / np.maximum(deg[srcs], 1)
-        np.add.at(contrib, nbrs, w)
-        contrib += pr[dangling].sum() / n  # redistribute dangling mass
-        pr = (1 - damping) / n + damping * contrib
-    return pr
-
-
-def connected_components(snap: FlatSnapshot, max_iters: int = 1000) -> np.ndarray:
-    """Label propagation (min-label) to fixpoint."""
-    n = snap.n
-    labels = np.arange(n, dtype=np.int64)
-    offsets, nbrs = gather_csr(snap, np.arange(n, dtype=np.int64))
-    srcs = np.repeat(np.arange(n, dtype=np.int64), np.diff(offsets))
-    for _ in range(max_iters):
-        new = labels.copy()
-        np.minimum.at(new, nbrs, labels[srcs])
-        np.minimum.at(new, srcs, labels[nbrs])
-        if (new == labels).all():
-            break
-        labels = new
-    return labels

@@ -1,134 +1,32 @@
-"""vertexSubset + edgeMap with direction optimization (paper §2, §5, §5.1).
+"""Compatibility shim: vertexSubset + edgeMap moved to
+``repro.core.traversal`` (the backend-unified engine).
 
-Ligra semantics, vectorized over numpy: the map/cond functions take
-*arrays* instead of scalars (the CPU-parallel-for of the paper maps to
-vector lanes here — the same adaptation the TPU level makes explicit).
-
-  F(us, vs) -> bool mask   applied to edges (us[i] -> vs[i]); may mutate
-                           algorithm state arrays (e.g. parents)
-  C(vs)     -> bool mask   filter on targets
-
-``edge_map`` dispatches sparse vs dense traversal by the Ligra/Beamer
-threshold |U| + deg(U) > (m / 20) (paper §5.1 "Direction Optimization").
+This module keeps the original import surface — ``VertexSubset``,
+``from_ids``, ``from_dense``, ``gather_csr``, and the Ligra-signature
+``edge_map(snap, U, F, C)`` — all now backed by the numpy traversal
+backend.  New code should use ``repro.core.traversal`` directly (and
+gets the jax/TPU backend for free via ``make_engine``).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from .traversal.base import DENSE_THRESHOLD_DENOM
+from .traversal.numpy_backend import (
+    NumpyEngine,
+    VertexSubset,
+    edge_map,
+    engine_of,
+    from_dense,
+    from_ids,
+    gather_csr,
+)
 
-import numpy as np
-
-from .graph import FlatSnapshot
-
-DENSE_THRESHOLD_DENOM = 20
-
-
-class VertexSubset(NamedTuple):
-    n: int
-    ids: Optional[np.ndarray] = None  # sparse form (sorted, unique)
-    dense: Optional[np.ndarray] = None  # bool[n]
-
-    @property
-    def size(self) -> int:
-        return int(self.dense.sum()) if self.dense is not None else self.ids.size
-
-    def to_sparse(self) -> np.ndarray:
-        return self.ids if self.ids is not None else np.flatnonzero(self.dense)
-
-    def to_dense(self) -> np.ndarray:
-        if self.dense is not None:
-            return self.dense
-        d = np.zeros(self.n, dtype=bool)
-        d[self.ids] = True
-        return d
-
-    @property
-    def empty(self) -> bool:
-        return self.size == 0
-
-
-def from_ids(n: int, ids) -> VertexSubset:
-    return VertexSubset(n, ids=np.unique(np.asarray(ids, dtype=np.int64)))
-
-
-def from_dense(mask: np.ndarray) -> VertexSubset:
-    return VertexSubset(mask.size, dense=mask)
-
-
-def gather_csr(snap: FlatSnapshot, vs: np.ndarray):
-    """Concatenate neighbor lists of ``vs``: (offsets[len(vs)+1], nbrs).
-
-    This is the chunk-decode work: O(sum deg) with O(log n + deg) per
-    vertex on the tree level, O(deg) via the flat snapshot (paper §5.1).
-    """
-    lists = [snap.neighbors(int(v)) for v in vs]
-    offsets = np.zeros(len(lists) + 1, dtype=np.int64)
-    if lists:
-        np.cumsum([l.size for l in lists], out=offsets[1:])
-        nbrs = np.concatenate(lists) if offsets[-1] else np.empty(0, np.int64)
-    else:
-        nbrs = np.empty(0, np.int64)
-    return offsets, nbrs
-
-
-def edge_map(
-    snap: FlatSnapshot,
-    U: VertexSubset,
-    F: Callable[[np.ndarray, np.ndarray], np.ndarray],
-    C: Callable[[np.ndarray], np.ndarray],
-    m: Optional[int] = None,
-    direction_optimize: bool = True,
-    F_dense: Optional[Callable] = None,
-) -> VertexSubset:
-    """EDGEMAP(G, U, F, C) -> U' (paper §2).
-
-    ``F_dense(vs_candidates, offsets, nbrs_in_U_mask)`` may be supplied
-    for algorithms whose dense form differs (e.g. BFS picks one parent).
-    """
-    n = snap.n
-    if U.empty:
-        return VertexSubset(n, ids=np.empty(0, dtype=np.int64))
-    us = U.to_sparse()
-    deg_u = sum(snap.degree(int(u)) for u in us)
-    if m is None:
-        m = sum(snap.degree(v) for v in range(n))
-    if direction_optimize and (us.size + deg_u) > max(1, m // DENSE_THRESHOLD_DENOM):
-        return _edge_map_dense(snap, U, F, C, F_dense)
-    return _edge_map_sparse(snap, us, F, C, n)
-
-
-def _edge_map_sparse(snap, us, F, C, n) -> VertexSubset:
-    offsets, nbrs = gather_csr(snap, us)
-    if nbrs.size == 0:
-        return VertexSubset(n, ids=np.empty(0, dtype=np.int64))
-    srcs = np.repeat(us, np.diff(offsets))
-    keep = C(nbrs)
-    if keep.any():
-        hit = F(srcs[keep], nbrs[keep])
-        out = nbrs[keep][hit]
-    else:
-        out = np.empty(0, dtype=np.int64)
-    return VertexSubset(n, ids=np.unique(out))
-
-
-def _edge_map_dense(snap, U, F, C, F_dense) -> VertexSubset:
-    n = snap.n
-    in_u = U.to_dense()
-    candidates = np.flatnonzero(C(np.arange(n, dtype=np.int64)))
-    if candidates.size == 0:
-        return VertexSubset(n, ids=np.empty(0, dtype=np.int64))
-    offsets, nbrs = gather_csr(snap, candidates)
-    nbr_in_u = in_u[nbrs] if nbrs.size else np.empty(0, bool)
-    if F_dense is not None:
-        out_mask = F_dense(candidates, offsets, nbrs, nbr_in_u)
-    else:
-        # generic dense: v joins U' if F fires on any (u in U) -> v edge
-        srcs = nbrs
-        dsts = np.repeat(candidates, np.diff(offsets))
-        sel = nbr_in_u
-        fired = np.zeros(nbrs.size, dtype=bool)
-        if sel.any():
-            fired[sel] = F(srcs[sel], dsts[sel])
-        seg = np.repeat(np.arange(candidates.size), np.diff(offsets))
-        out_mask = np.zeros(candidates.size, dtype=bool)
-        np.logical_or.at(out_mask, seg[fired], True)
-    return VertexSubset(n, ids=candidates[out_mask])
+__all__ = [
+    "DENSE_THRESHOLD_DENOM",
+    "NumpyEngine",
+    "VertexSubset",
+    "edge_map",
+    "engine_of",
+    "from_dense",
+    "from_ids",
+    "gather_csr",
+]

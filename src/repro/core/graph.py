@@ -137,16 +137,27 @@ def delete_vertices(g: Graph, vs: np.ndarray) -> Graph:
 # ---------------------------------------------------------------------------
 
 
-class FlatSnapshot(NamedTuple):
+class FlatSnapshot:
     """Array of per-vertex edge-tree refs: O(1) vertex access (§5.1).
 
     Building is O(n) work / O(log n) depth in the paper (one traversal);
     the functional trees underneath stay shared and immutable, so a flat
     snapshot can be taken concurrently with updates.
+
+    The snapshot caches its degree vector and total directed edge count
+    ``m`` on first access: the direction-optimization threshold in the
+    traversal engine consults ``m`` every edgeMap call, and the old
+    per-query O(n) python degree loop was a measurable constant cost.
     """
 
-    edge_trees: List[Optional[ct.CTree]]  # indexed by vertex id
-    n: int
+    __slots__ = ("edge_trees", "n", "_degrees", "_m", "_engine")
+
+    def __init__(self, edge_trees: List[Optional[ct.CTree]], n: int):
+        self.edge_trees = edge_trees
+        self.n = n
+        self._degrees: Optional[np.ndarray] = None
+        self._m: Optional[int] = None
+        self._engine = None  # cached traversal NumpyEngine (CSR caches)
 
     def neighbors(self, v: int) -> np.ndarray:
         et = self.edge_trees[v]
@@ -155,6 +166,23 @@ class FlatSnapshot(NamedTuple):
     def degree(self, v: int) -> int:
         et = self.edge_trees[v]
         return ct.ctree_size(et) if et is not None else 0
+
+    @property
+    def degrees(self) -> np.ndarray:
+        """Cached degree vector (each entry O(1) via the C-tree size
+        augmentation; materialized once per snapshot)."""
+        if self._degrees is None:
+            self._degrees = np.fromiter(
+                (self.degree(v) for v in range(self.n)), np.int64, count=self.n
+            )
+        return self._degrees
+
+    @property
+    def m(self) -> int:
+        """Total directed edge count (cached degree sum)."""
+        if self._m is None:
+            self._m = int(self.degrees.sum())
+        return self._m
 
 
 def flat_snapshot(g: Graph) -> FlatSnapshot:

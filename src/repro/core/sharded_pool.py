@@ -38,6 +38,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .flat_ctree import sentinel_for
 
+try:  # jax >= 0.6 exposes shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:  # 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 SENT = sentinel_for(jnp.int64)
 
 
@@ -138,7 +143,7 @@ def make_insert_step(mesh: Mesh, axis_names: Tuple[str, ...]):
     def step(pool: ShardedPool, batch: jax.Array) -> ShardedPool:
         n_shards = pool.data.shape[0]
         hi = jnp.concatenate([pool.lo[1:], jnp.asarray([jnp.iinfo(jnp.int64).max], jnp.int64)])
-        out, n_new = jax.shard_map(
+        out, n_new = _shard_map(
             local,
             mesh=mesh,
             in_specs=(spec_sharded2, spec_sharded, spec_sharded, spec_sharded, P()),

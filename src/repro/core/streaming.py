@@ -61,6 +61,18 @@ class AspenStream:
         finally:
             self.release(v)
 
+    def engine(self, backend: str = "numpy"):
+        """Traversal engine over the current version: the caller picks
+        the query substrate at snapshot time.
+
+        backend="numpy" -> NumpyEngine over a FlatSnapshot (CPU);
+        backend="jax"   -> JaxEngine over a FlatGraph rebuilt from the
+                           snapshot (jit / Pallas query path).
+        """
+        from .traversal import make_engine
+
+        return make_engine(self.flat_snapshot(), backend=backend)
+
 
 class ConcurrentStats(NamedTuple):
     updates_per_sec: float
@@ -77,12 +89,20 @@ def run_concurrent(
     query_fn: Callable[[G.FlatSnapshot], object],
     duration_s: float = 5.0,
     batch_size: int = 1,
+    symmetric: bool = True,
 ) -> ConcurrentStats:
     """Paper §7.3: writer applies updates one batch at a time while a
-    reader repeatedly runs query_fn against fresh snapshots."""
+    reader repeatedly runs query_fn against fresh snapshots.
+
+    ``symmetric`` is forwarded to the insert/delete calls; the reported
+    throughput counts the directed edges actually applied (2x the batch
+    only when symmetric), not a hard-coded doubling.
+    """
     stop = threading.Event()
     upd_lat: List[float] = []
     n_upd = [0]
+    n_directed = [0]
+    per_update = 2 if symmetric else 1
 
     def updater():
         i = 0
@@ -92,11 +112,12 @@ def run_concurrent(
             dels = batch[batch[:, 2] == 1][:, :2]
             t0 = time.perf_counter()
             if ins.size:
-                stream.insert_edges(ins)
+                stream.insert_edges(ins, symmetric=symmetric)
             if dels.size:
-                stream.delete_edges(dels)
+                stream.delete_edges(dels, symmetric=symmetric)
             upd_lat.append(time.perf_counter() - t0)
             n_upd[0] += batch.shape[0]
+            n_directed[0] += batch.shape[0] * per_update
             i += batch_size
 
     q_lat: List[float] = []
@@ -127,7 +148,7 @@ def run_concurrent(
 
     total_upd_time = sum(upd_lat) if upd_lat else 1e-9
     return ConcurrentStats(
-        updates_per_sec=(n_upd[0] * 2) / total_upd_time,  # directed edges/s
+        updates_per_sec=n_directed[0] / total_upd_time,  # directed edges/s
         mean_update_latency_s=float(np.mean(upd_lat)) if upd_lat else 0.0,
         query_latency_concurrent_s=float(np.mean(q_lat)) if q_lat else 0.0,
         query_latency_isolated_s=float(np.mean(iso)),

@@ -1,0 +1,95 @@
+"""Unified edgeMap traversal engine: one algorithm text, two backends.
+
+See ``base.py`` for the backend contract, ``numpy_backend`` /
+``jax_backend`` for the substrates, and ``algorithms`` for the
+backend-generic BFS / PageRank / CC / BC.
+
+Quick start::
+
+    from repro.core import graph as G, flat_graph as fg
+    from repro.core.traversal import make_engine, algorithms as talg
+
+    eng_np = make_engine(G.flat_snapshot(g))       # CPU / FlatSnapshot
+    eng_jx = make_engine(fg.from_edges(n, edges))  # TPU / FlatGraph
+    assert (talg.bfs(eng_np, 0) >= 0).sum() == (talg.bfs(eng_jx, 0) >= 0).sum()
+"""
+from __future__ import annotations
+
+from . import algorithms
+from .base import DENSE_THRESHOLD_DENOM, ArrayOps, TraversalEngine, dense_threshold
+from .numpy_backend import (
+    NumpyEngine,
+    VertexSubset,
+    edge_map,
+    engine_of,
+    from_dense,
+    from_ids,
+    gather_csr,
+)
+
+__all__ = [
+    "DENSE_THRESHOLD_DENOM",
+    "ArrayOps",
+    "TraversalEngine",
+    "dense_threshold",
+    "NumpyEngine",
+    "JaxEngine",
+    "VertexSubset",
+    "edge_map",
+    "engine_of",
+    "from_dense",
+    "from_ids",
+    "gather_csr",
+    "algorithms",
+    "make_engine",
+]
+
+
+def __getattr__(name):
+    # JaxEngine imports jax + the Pallas kernel wrappers; keep the
+    # numpy-only path importable without paying that (lazy attribute).
+    if name == "JaxEngine":
+        from .jax_backend import JaxEngine
+
+        return JaxEngine
+    raise AttributeError(name)
+
+
+def make_engine(obj, backend: str | None = None) -> TraversalEngine:
+    """Engine for a snapshot object, dispatched on type (or forced by
+    ``backend`` in {"numpy", "jax"}).
+
+    Accepts a ``FlatGraph`` (-> JaxEngine), anything with the
+    FlatSnapshot protocol (-> NumpyEngine), or a tree-level ``Graph``
+    (snapshotted first; backend selects the substrate).
+    """
+    from ..flat_graph import FlatGraph
+    from ..graph import Graph, flat_snapshot
+
+    if backend not in (None, "numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}; expected 'numpy' or 'jax'")
+    if isinstance(obj, FlatGraph):
+        if backend == "numpy":
+            raise TypeError("FlatGraph is jax-native; build a FlatSnapshot for numpy")
+        from .jax_backend import JaxEngine
+
+        return JaxEngine(obj)
+    if isinstance(obj, Graph):
+        snap = flat_snapshot(obj)
+        if backend == "jax":
+            return make_engine(_flat_graph_of(snap))
+        return engine_of(snap)
+    if backend == "jax":
+        return make_engine(_flat_graph_of(obj))
+    return engine_of(obj)
+
+
+def _flat_graph_of(snap):
+    """FlatSnapshot -> FlatGraph (host-side CSR rebuild)."""
+    import numpy as np
+
+    from ..flat_graph import from_edges
+
+    offsets, nbrs = gather_csr(snap, np.arange(snap.n, dtype=np.int64))
+    srcs = np.repeat(np.arange(snap.n, dtype=np.int64), np.diff(offsets))
+    return from_edges(snap.n, np.stack([srcs, nbrs], axis=1))

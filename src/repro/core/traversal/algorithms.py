@@ -1,0 +1,212 @@
+"""Backend-generic global algorithms over the unified edgeMap engine.
+
+One algorithm text per problem; the engine handle picks the substrate
+(numpy over FlatSnapshot, jax over FlatGraph).  The F/C callbacks are
+module-level so the jax backend's jit cache is keyed stably (a closure
+redefined per call would recompile every invocation).
+
+All algorithms python-loop over rounds; each round is one engine
+``edge_map`` (on jax: one compiled fixed-shape step), which is the
+paper's frontier-synchronous model.  Results come back as host numpy
+arrays.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from .base import TraversalEngine
+
+
+def _as_index(ops, v: int):
+    return ops.xp.asarray([v], dtype=ops.int_dtype)
+
+
+# ---------------------------------------------------------------------------
+# BFS (direction-optimized, paper §5.1)
+# ---------------------------------------------------------------------------
+
+
+def _bfs_unvisited(ops, parents, vs):
+    return parents[vs] < 0
+
+
+def _bfs_relax(ops, parents, us, vs, valid):
+    """Claim parents: any in-frontier neighbor is a valid BFS parent;
+    scatter-max resolves write contention deterministically."""
+    cand = ops.scatter_max(ops.xp.full_like(parents, -1), vs, us.astype(parents.dtype), valid)
+    newly = (parents < 0) & (cand >= 0)
+    return ops.xp.where(newly, cand, parents), newly
+
+
+def bfs(engine: TraversalEngine, src: int, direction_optimize: bool = True) -> np.ndarray:
+    """Parent array (-1 = unreached; src's parent is itself)."""
+    ops = engine.ops
+    parents = ops.set_at(
+        ops.xp.full(engine.n, -1, dtype=ops.int_dtype), _as_index(ops, src), src
+    )
+    U = engine.frontier_from_ids([src])
+    while not U.empty:
+        U, parents = engine.edge_map(
+            U, _bfs_relax, _bfs_unvisited, parents,
+            direction_optimize=direction_optimize,
+        )
+    return engine.to_host(parents)
+
+
+def bfs_depths(parents: np.ndarray, src: int) -> np.ndarray:
+    """Derive BFS levels from a parent array (host-side helper; used by
+    the cross-backend parity checks, where parents may legally differ
+    but depths may not)."""
+    parents = np.asarray(parents)
+    n = parents.size
+    depth = np.full(n, -1, dtype=np.int64)
+    depth[src] = 0
+    for _ in range(n):
+        unknown = (depth < 0) & (parents >= 0)
+        if not unknown.any():
+            break
+        ready = unknown & (depth[parents] >= 0)
+        if not ready.any():
+            break
+        depth[ready] = depth[parents[ready]] + 1
+    return depth
+
+
+# ---------------------------------------------------------------------------
+# Connected components (min-label propagation through edgeMap)
+# ---------------------------------------------------------------------------
+
+
+def _cc_any(ops, labels, vs):
+    return ops.xp.ones(vs.shape, dtype=bool)
+
+
+def _cc_relax(ops, labels, us, vs, valid):
+    """Min-label relax over BOTH endpoints of each touched edge (the
+    graph is undirected; each stored direction carries labels both
+    ways, like the pre-refactor implementation)."""
+    n = labels.shape[0]
+    cand = ops.scatter_min(
+        ops.xp.full(n, n, dtype=labels.dtype), vs, labels[us], valid
+    )
+    cand = ops.scatter_min(cand, us, labels[vs], valid)
+    changed = cand < labels
+    return ops.xp.where(changed, cand, labels), changed
+
+
+def connected_components(
+    engine: TraversalEngine, direction_optimize: bool = True, max_iters: int = 1000
+) -> np.ndarray:
+    """Min-label propagation to fixpoint; the frontier is the changed
+    set, so converged regions stop costing work.
+
+    Assumes the paper's undirected model: the edge set is symmetric
+    (both directions stored), as AspenStream maintains by default.
+    Frontier expansion follows stored out-edges, so on an asymmetric
+    edge set vertices reachable only against edge direction may keep
+    stale labels."""
+    ops = engine.ops
+    labels = ops.xp.arange(engine.n, dtype=ops.int_dtype)
+    U = engine.frontier_all()
+    for _ in range(max_iters):
+        if U.empty:
+            break
+        U, labels = engine.edge_map(
+            U, _cc_relax, _cc_any, labels, direction_optimize=direction_optimize
+        )
+    return engine.to_host(labels)
+
+
+# ---------------------------------------------------------------------------
+# PageRank (dense edgeMap reduced over the (+, x) semiring)
+# ---------------------------------------------------------------------------
+
+
+def pagerank(
+    engine: TraversalEngine, iters: int = 10, damping: float = 0.85
+) -> np.ndarray:
+    """Power iteration; the push step out[v] = sum_{u->v} pr[u]/deg[u]
+    is ``engine.edge_map_reduce`` — on the jax backend that's the Pallas
+    segment-sum kernel, on numpy a vectorized scatter-add."""
+    xp = engine.ops.xp
+    n = engine.n
+    deg = engine.degrees.astype(engine.ops.float_dtype)
+    dangling = deg == 0
+    pr = xp.full(n, 1.0 / n, dtype=engine.ops.float_dtype)
+    for _ in range(iters):
+        w = pr / xp.maximum(deg, 1.0)
+        contrib = engine.edge_map_reduce(w).astype(engine.ops.float_dtype)
+        contrib = contrib + xp.where(dangling, pr, 0.0).sum() / n
+        pr = (1.0 - damping) / n + damping * contrib
+    return engine.to_host(pr)
+
+
+# ---------------------------------------------------------------------------
+# Betweenness centrality (Brandes, single source; paper §7 "BC")
+# ---------------------------------------------------------------------------
+
+
+def _bc_unvisited(ops, state, vs):
+    sigma, visited = state
+    return ~visited[vs]
+
+
+def _bc_forward(ops, state, us, vs, valid):
+    """sigma[v] += sum of sigma over in-frontier predecessors."""
+    sigma, visited = state
+    contrib = ops.scatter_add(
+        ops.xp.zeros_like(sigma), vs, sigma[us], valid
+    )
+    newly = (~visited) & (contrib > 0)
+    sigma = sigma + ops.xp.where(newly, contrib, 0.0)
+    visited = visited | newly
+    return (sigma, visited), newly
+
+
+def _bc_next_level(ops, state, vs):
+    dep, sigma, level_of, tgt = state
+    return level_of[vs] == tgt
+
+
+def _bc_backward(ops, state, us, vs, valid):
+    """dep[u] += sigma[u]/sigma[v] * (1 + dep[v]) over u@d -> v@d+1."""
+    dep, sigma, level_of, tgt = state
+    contrib = (sigma[us] / ops.xp.maximum(sigma[vs], 1e-30)) * (1.0 + dep[vs])
+    dep = ops.scatter_add(dep, us, contrib, valid)
+    return (dep, sigma, level_of, tgt), ops.xp.zeros(dep.shape[0], dtype=bool)
+
+
+def bc(engine: TraversalEngine, src: int, direction_optimize: bool = True) -> np.ndarray:
+    """Single-source betweenness contributions (Brandes forward pass to
+    count shortest paths, level-synchronous backward accumulation)."""
+    ops = engine.ops
+    xp = ops.xp
+    n = engine.n
+    fdt = ops.float_dtype
+    sigma = ops.set_at(xp.zeros(n, dtype=fdt), _as_index(ops, src), 1.0)
+    visited = ops.set_at(xp.zeros(n, dtype=bool), _as_index(ops, src), True)
+    level_of = ops.set_at(xp.full(n, -1, dtype=ops.int_dtype), _as_index(ops, src), 0)
+    levels: List[object] = []
+    U = engine.frontier_from_ids([src])
+    d = 0
+    while not U.empty:
+        levels.append(U)
+        U, (sigma, visited) = engine.edge_map(
+            U, _bc_forward, _bc_unvisited, (sigma, visited),
+            direction_optimize=direction_optimize,
+        )
+        d += 1
+        level_of = xp.where(U.to_dense(), d, level_of).astype(ops.int_dtype)
+    dep = xp.zeros(n, dtype=fdt)
+    for d in range(len(levels) - 2, -1, -1):
+        tgt = xp.asarray(d + 1, dtype=ops.int_dtype)
+        state = (dep, sigma, level_of, tgt)
+        _, state = engine.edge_map(
+            levels[d], _bc_backward, _bc_next_level, state,
+            direction_optimize=direction_optimize,
+        )
+        dep = state[0]
+    dep = ops.set_at(dep, _as_index(ops, src), 0.0)
+    return engine.to_host(dep)

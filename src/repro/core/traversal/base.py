@@ -1,0 +1,142 @@
+"""Backend contract for the unified edgeMap traversal engine.
+
+The paper's query side is Ligra's ``vertexSubset`` / ``edgeMap`` with
+direction optimization (paper §2, §5.1).  This package factors that
+engine out of the numpy-only implementation so the SAME algorithm text
+(BFS / PageRank / CC / BC in ``algorithms.py``) runs on two substrates:
+
+  * ``numpy_backend.NumpyEngine``  — the CPU engine over a
+    ``FlatSnapshot`` (per-vertex C-tree refs, paper §5.1);
+  * ``jax_backend.JaxEngine``      — the TPU-native engine over a
+    ``FlatGraph`` (CSR over the packed-key pool), where dense edgeMap
+    lowers to the Pallas ``segment_reduce`` kernel and sparse frontier
+    expansion is a fixed-shape searchsorted gather, all inside one
+    ``jax.jit``-able step per (F, C, mode) triple.
+
+Backend contract
+----------------
+An engine exposes:
+
+  n, m, degrees       graph shape: vertex count (int), directed edge
+                      count (int), per-vertex out-degree (backend array)
+  ops                 an ``ArrayOps`` namespace (numpy or jax flavour)
+  frontier_from_ids / frontier_from_dense / frontier_all
+                      VertexSubset constructors
+  edge_map(U, F, C, state, direction_optimize=True, mode="auto")
+                      EDGEMAP(G, U, F, C) -> (U', state').  Dispatches
+                      sparse (push) vs dense (pull) by the Ligra/Beamer
+                      rule |U| + deg(U) > m / 20 when mode == "auto";
+                      ``mode`` in {"auto", "sparse", "dense"} forces a
+                      direction (tests, benchmarks).
+  edge_map_reduce(values)
+                      the dense edgeMap specialized to the (+, x)
+                      semiring: out[v] = sum_{u->v} values[u].  This is
+                      PageRank's whole inner loop; the jax backend
+                      lowers it to kernels/segment_reduce.py.
+  vertex_map(U, P, state)
+                      VERTEXMAP: filter U by predicate P.
+  to_host(x)          any backend array -> np.ndarray
+
+F and C are *pure, functional* callbacks written against ``ops`` (which
+is numpy-or-jnp, so one definition serves both backends):
+
+  C(ops, state, vs)            -> bool mask over vs (target filter)
+  F(ops, state, us, vs, valid) -> (state', out_mask) where out_mask is a
+                                  dense bool[n] marking U' membership
+
+``valid`` masks padding / non-selected lanes: the numpy engine passes
+exactly the selected edges (valid all-True); the jax engine passes
+fixed-shape arrays where ``valid`` carries the selection.  All state
+writes MUST go through the masked ``ops.scatter_*`` helpers so the same
+callback is correct on both.  State is an arbitrary pytree of backend
+arrays and is threaded functionally (the jax engine jit-traces F/C, so
+closure mutation would silently not happen).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import numpy as np
+
+# Ligra/Beamer direction-optimization threshold: dense when
+# |U| + deg(U) > m / DENSE_THRESHOLD_DENOM (paper §5.1).
+DENSE_THRESHOLD_DENOM = 20
+
+
+class ArrayOps:
+    """Functional array helpers shared by F/C callbacks.
+
+    ``xp`` is the backend namespace (numpy or jax.numpy); the scatter
+    helpers take an explicit ``mask`` and never mutate their inputs.
+    """
+
+    xp: Any
+    int_dtype: Any
+    float_dtype: Any
+
+    def set_at(self, arr, idx, vals):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def scatter_max(self, target, idx, vals, mask):  # pragma: no cover
+        raise NotImplementedError
+
+    def scatter_min(self, target, idx, vals, mask):  # pragma: no cover
+        raise NotImplementedError
+
+    def scatter_add(self, target, idx, vals, mask):  # pragma: no cover
+        raise NotImplementedError
+
+    def scatter_or(self, target, idx, mask):  # pragma: no cover
+        raise NotImplementedError
+
+
+class TraversalEngine:
+    """Abstract engine; see module docstring for the contract."""
+
+    ops: ArrayOps
+
+    @property
+    def n(self) -> int:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    @property
+    def m(self) -> int:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    @property
+    def degrees(self):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def frontier_from_ids(self, ids):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def frontier_from_dense(self, mask):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def frontier_all(self):
+        return self.frontier_from_dense(np.ones(self.n, dtype=bool))
+
+    def edge_map(
+        self,
+        U,
+        F: Callable,
+        C: Callable,
+        state,
+        direction_optimize: bool = True,
+        mode: str = "auto",
+    ) -> Tuple[Any, Any]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def edge_map_reduce(self, values):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def vertex_map(self, U, P: Callable, state):  # pragma: no cover
+        raise NotImplementedError
+
+    def to_host(self, x) -> np.ndarray:
+        return np.asarray(x)
+
+
+def dense_threshold(m: int) -> int:
+    """The |U| + deg(U) cutoff above which edge_map goes dense."""
+    return max(1, m // DENSE_THRESHOLD_DENOM)

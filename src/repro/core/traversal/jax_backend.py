@@ -1,0 +1,270 @@
+"""JAX/TPU traversal backend over ``FlatGraph`` (the packed-key pool).
+
+Maps Ligra's edgeMap onto the flat C-tree pool (flat_graph.py):
+
+  * dense ("pull"/whole-pool) direction: every pool slot looks up
+    whether its source is in the frontier — one gather + one masked
+    scatter, the same shape as GNN aggregation.  The (+, x) semiring
+    specialization ``edge_map_reduce`` (PageRank's inner loop) lowers
+    to the Pallas one-hot-matmul segment sum in
+    ``repro.kernels.segment_reduce`` via ``repro.kernels.ops`` (so it
+    runs compiled on TPU and interpret-mode on CPU).
+
+  * sparse ("push") direction: the frontier's adjacency lists are
+    contiguous key ranges of the sorted pool, so expansion is a
+    fixed-shape ragged gather: nonzero(size=K) frontier ids ->
+    searchsorted over per-id degree prefix sums -> pool indices.  No
+    dynamic shapes, so the whole push/pull step jits once per
+    (F, C, mode) and is reused across iterations and engines.
+
+Direction optimization (|U| + deg(U) > m/20, paper §5.1) runs inside
+the jit step as a ``lax.cond``, so one compiled step serves both
+directions; the sparse branch's static budgets are sized from the
+threshold (a frontier routed sparse can never exceed cap/20 ids or
+pool-capacity/20 edges).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+from ..flat_graph import FlatGraph
+from .base import DENSE_THRESHOLD_DENOM, ArrayOps, TraversalEngine
+
+
+class JaxOps(ArrayOps):
+    xp = jnp
+    int_dtype = jnp.int32
+    float_dtype = jnp.float64
+
+    def set_at(self, arr, idx, vals):
+        return arr.at[idx].set(vals)
+
+    def _safe_idx(self, target, idx, mask):
+        # OOB indices are dropped by mode="drop": masking = index escape
+        return jnp.where(mask, idx, target.shape[0])
+
+    def scatter_max(self, target, idx, vals, mask):
+        return target.at[self._safe_idx(target, idx, mask)].max(vals, mode="drop")
+
+    def scatter_min(self, target, idx, vals, mask):
+        return target.at[self._safe_idx(target, idx, mask)].min(vals, mode="drop")
+
+    def scatter_add(self, target, idx, vals, mask):
+        vals = jnp.where(mask, vals, jnp.zeros((), target.dtype))
+        return target.at[self._safe_idx(target, idx, mask)].add(vals, mode="drop")
+
+    def scatter_or(self, target, idx, mask):
+        return target.at[self._safe_idx(target, idx, mask)].max(True, mode="drop")
+
+
+JAX_OPS = JaxOps()
+
+
+class JaxVertexSubset(NamedTuple):
+    dense: jax.Array  # bool[n]
+
+    @property
+    def n(self) -> int:
+        return self.dense.shape[0]
+
+    @property
+    def size(self) -> int:
+        return int(self.dense.sum())  # host sync: python-level loop control
+
+    @property
+    def empty(self) -> bool:
+        return self.size == 0
+
+    def to_dense(self) -> jax.Array:
+        return self.dense
+
+    def to_sparse(self) -> np.ndarray:
+        return np.flatnonzero(np.asarray(self.dense))
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# the jit-compiled edgeMap step (module-level: cache shared across engines)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("F", "C", "mode", "n", "ids_budget", "edge_budget"),
+)
+def _edge_map_step(
+    offsets,  # int32[n+1]
+    keys,  # int64[cap] sorted packed (src<<32|dst)
+    src_c,  # int32[cap] clipped sources
+    dst_c,  # int32[cap] clipped destinations
+    evalid,  # bool[cap] slot < m
+    degrees,  # int32[n]
+    m,  # int32 scalar
+    U,  # bool[n] frontier
+    state,  # pytree
+    *,
+    F: Callable,
+    C: Callable,
+    mode: str,
+    n: int,
+    ids_budget: int,
+    edge_budget: int,
+):
+    cmask = C(JAX_OPS, state, jnp.arange(n, dtype=jnp.int32))
+
+    def dense_branch(state):
+        valid = evalid & U[src_c] & cmask[dst_c]
+        return F(JAX_OPS, state, src_c, dst_c, valid)
+
+    def sparse_branch(state):
+        ids_raw = jnp.nonzero(U, size=ids_budget, fill_value=n)[0]
+        vid = ids_raw < n
+        ids = jnp.where(vid, ids_raw, 0).astype(jnp.int32)
+        starts = offsets[ids].astype(jnp.int64)
+        degs = jnp.where(vid, (offsets[ids + 1] - offsets[ids]), 0).astype(jnp.int64)
+        cum = jnp.cumsum(degs)
+        j = jnp.arange(edge_budget, dtype=jnp.int64)
+        seg = jnp.searchsorted(cum, j, side="right")
+        seg = jnp.clip(seg, 0, ids_budget - 1)
+        prev = jnp.where(seg > 0, cum[jnp.maximum(seg - 1, 0)], 0)
+        eidx = starts[seg] + (j - prev)
+        ev = j < cum[-1]
+        eidx = jnp.where(ev, eidx, 0)
+        vs = (keys[eidx] & 0xFFFFFFFF).astype(jnp.int32)
+        vs = jnp.clip(vs, 0, n - 1)
+        us = ids[seg]
+        valid = ev & cmask[vs]
+        return F(JAX_OPS, state, us, vs, valid)
+
+    if mode == "dense":
+        state, out = dense_branch(state)
+    elif mode == "sparse":
+        state, out = sparse_branch(state)
+    else:  # auto: Ligra/Beamer direction optimization, traced
+        size = U.sum()
+        deg_u = jnp.where(U, degrees, 0).sum()
+        use_dense = (size + deg_u) > jnp.maximum(1, m // DENSE_THRESHOLD_DENOM)
+        state, out = jax.lax.cond(use_dense, dense_branch, sparse_branch, state)
+    return state, out
+
+
+@jax.jit
+def _reduce_msgs(values, src_by_dst, valid_by_dst):
+    return jnp.where(valid_by_dst, values[src_by_dst], 0.0).astype(jnp.float32)
+
+
+class JaxEngine(TraversalEngine):
+    """Engine over an (immutable) ``FlatGraph`` snapshot."""
+
+    ops = JAX_OPS
+
+    def __init__(self, g: FlatGraph):
+        self.g = g
+        self._n = g.n
+        self._m = int(g.m)
+        cap = g.edge_capacity
+
+        keys = np.asarray(g.keys)
+        evalid = np.arange(cap) < self._m
+        src = (keys >> 32).astype(np.int64)
+        dst = (keys & 0xFFFFFFFF).astype(np.int64)
+        self._src_c = jnp.asarray(np.clip(src, 0, self._n - 1).astype(np.int32))
+        self._dst_c = jnp.asarray(np.clip(dst, 0, self._n - 1).astype(np.int32))
+        self._evalid = jnp.asarray(evalid)
+        self._degrees = jnp.diff(g.offsets)
+
+        # dst-major permutation: the pool is src-major, but the Pallas
+        # segment-sum kernel wants destinations sorted — precompute once
+        # per snapshot (host-side; O(m log m)).
+        dst_key = np.where(evalid, dst, self._n)
+        order = np.argsort(dst_key, kind="stable")
+        self._dst_sorted = jnp.asarray(dst_key[order].astype(np.int32))
+        self._src_by_dst = jnp.asarray(
+            np.clip(src, 0, self._n - 1)[order].astype(np.int32)
+        )
+        self._valid_by_dst = jnp.asarray(evalid[order])
+
+        # static sparse budgets: a frontier routed sparse obeys
+        # |U| + deg(U) <= m/20 <= cap/20, so cap-derived budgets bound
+        # any runtime threshold.  Forced-sparse mode needs full budgets.
+        self._auto_ids_budget = min(self._n, _round_up(cap // DENSE_THRESHOLD_DENOM + 1, 64))
+        self._auto_edge_budget = min(cap, _round_up(cap // DENSE_THRESHOLD_DENOM + 1, 64))
+        self._full_ids_budget = self._n
+        self._full_edge_budget = max(cap, 1)
+
+    # -- graph shape --------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def m(self) -> int:
+        return self._m
+
+    @property
+    def degrees(self) -> jax.Array:
+        return self._degrees
+
+    # -- frontiers ----------------------------------------------------------
+    def frontier_from_ids(self, ids) -> JaxVertexSubset:
+        mask = jnp.zeros(self._n, dtype=bool).at[jnp.asarray(ids)].set(True)
+        return JaxVertexSubset(mask)
+
+    def frontier_from_dense(self, mask) -> JaxVertexSubset:
+        return JaxVertexSubset(jnp.asarray(mask, dtype=bool))
+
+    # -- edgeMap ------------------------------------------------------------
+    def edge_map(
+        self,
+        U: JaxVertexSubset,
+        F: Callable,
+        C: Callable,
+        state,
+        direction_optimize: bool = True,
+        mode: str = "auto",
+    ) -> Tuple[JaxVertexSubset, object]:
+        if mode == "auto" and not direction_optimize:
+            mode = "sparse"
+        if mode == "sparse":
+            ids_b, edge_b = self._full_ids_budget, self._full_edge_budget
+        else:
+            ids_b, edge_b = self._auto_ids_budget, self._auto_edge_budget
+        state, out = _edge_map_step(
+            self.g.offsets,
+            self.g.keys,
+            self._src_c,
+            self._dst_c,
+            self._evalid,
+            self._degrees,
+            self.g.m,
+            U.dense,
+            state,
+            F=F,
+            C=C,
+            mode=mode,
+            n=self._n,
+            ids_budget=ids_b,
+            edge_budget=edge_b,
+        )
+        return JaxVertexSubset(out), state
+
+    # -- dense semiring reduce (Pallas segment-sum) -------------------------
+    def edge_map_reduce(self, values: jax.Array) -> jax.Array:
+        msg = _reduce_msgs(values, self._src_by_dst, self._valid_by_dst)
+        out = kops.segment_sum(self._dst_sorted, msg[:, None], self._n)
+        return out[:, 0].astype(values.dtype)
+
+    # -- vertexMap ----------------------------------------------------------
+    def vertex_map(self, U: JaxVertexSubset, P: Callable, state) -> JaxVertexSubset:
+        keep = P(JAX_OPS, state, jnp.arange(self._n, dtype=jnp.int32))
+        return JaxVertexSubset(U.dense & keep)

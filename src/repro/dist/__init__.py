@@ -1,0 +1,3 @@
+# Distributed-execution substrate: sharding rules (shardings.py) and
+# fault-tolerance policies (fault_tolerance.py) shared by the launch
+# layer, the dry-run, and the training entrypoints.

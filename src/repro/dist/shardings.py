@@ -1,0 +1,242 @@
+"""Sharding rules: config -> PartitionSpec trees for every cell family.
+
+Pure functions from (config, mesh-shape) to PartitionSpec pytrees; the
+only mesh property consulted is ``mesh.shape`` (an axis-name -> size
+mapping), so the rules are testable with fake meshes and reusable by
+the dry-run's 256/512-chip lowerings and the in-process 1x1 tests
+alike.
+
+Conventions
+-----------
+* data-parallel ("batch") axes are ``pod`` and ``data`` when present;
+  ``model`` is the tensor-parallel axis.
+* every rule guards on divisibility: a dimension that does not divide
+  by its target axis size is left replicated rather than producing an
+  uneven shard (GSPMD would pad; the memory model would lie).
+* specs are plain ``jax.sharding.PartitionSpec``; ``named`` turns a
+  spec tree into NamedShardings for jit in/out_shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _is_spec_leaf(x) -> bool:
+    return x is None or isinstance(x, P)
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of ``mesh`` (everything but ``model``)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _batch_size_of(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in batch_axes(mesh)], dtype=np.int64)) or 1
+
+
+def _batch_entry(mesh):
+    """Spec entry for a batch-sharded dim, or None if no batch axes."""
+    bax = batch_axes(mesh)
+    return tuple(bax) if bax else None
+
+
+def named(mesh, tree):
+    """PartitionSpec tree -> NamedSharding tree (None passes through)."""
+    if tree is None:
+        return None
+    return jax.tree.map(
+        lambda s: s if s is None else NamedSharding(mesh, s),
+        tree,
+        is_leaf=_is_spec_leaf,
+    )
+
+
+def spec_tree_like(specs, tree):
+    """Reconcile a (possibly partial) spec tree against a param tree:
+    keys missing from ``specs`` are replicated; keys in ``specs`` that
+    the params don't have are dropped (e.g. optional qkv biases)."""
+
+    def rec(sp, t):
+        if isinstance(t, dict):
+            sub = sp if isinstance(sp, dict) else {}
+            return {k: rec(sub.get(k), v) for k, v in t.items()}
+        if isinstance(t, (list, tuple)) and not hasattr(t, "shape"):
+            if isinstance(sp, (list, tuple)) and len(sp) == len(t):
+                out = [rec(s, v) for s, v in zip(sp, t)]
+            else:
+                out = [rec(None, v) for v in t]
+            return type(t)(out) if isinstance(t, tuple) else out
+        return sp if isinstance(sp, P) else P()
+
+    return rec(specs, tree)
+
+
+def zero1_specs(specs, params, mesh):
+    """ZeRO-1 optimizer-state sharding: additionally shard each leaf's
+    largest *free* (currently-replicated) dim over the batch axes, when
+    it divides evenly; otherwise leave the spec unchanged."""
+    bax = batch_axes(mesh)
+    nb = _batch_size_of(mesh)
+    if not bax:
+        return specs
+    entry = bax[0] if len(bax) == 1 else tuple(bax)
+
+    def one(sp, p):
+        shape = tuple(p.shape)
+        entries = list(sp) + [None] * (len(shape) - len(sp))
+        free = [i for i, e in enumerate(entries) if e is None and shape[i] % nb == 0]
+        if not free or nb <= 1:
+            return sp
+        i = max(free, key=lambda i: shape[i])
+        entries[i] = entry
+        return P(*entries)
+
+    return jax.tree.map(one, specs, params, is_leaf=_is_spec_leaf)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def lm_param_specs(cfg, mesh) -> Dict[str, Any]:
+    """Megatron-style tensor parallelism over the ``model`` axis, with
+    divisibility guards (a head/ff/vocab count that doesn't divide the
+    axis stays replicated).  Layer params carry a leading stacked-layer
+    dim (scan-over-layers), hence the extra None."""
+    nm = mesh.shape["model"]
+    h_ok = cfg.n_heads % nm == 0
+    kv_ok = cfg.n_kv_heads % nm == 0
+    ff_ok = cfg.d_ff % nm == 0
+
+    def r(k):
+        return P(*([None] * k))
+
+    attn = {
+        "wq": P(None, None, "model", None) if h_ok else r(4),
+        "wk": P(None, None, "model", None) if kv_ok else r(4),
+        "wv": P(None, None, "model", None) if kv_ok else r(4),
+        "wo": P(None, "model", None, None) if h_ok else r(4),
+        # optional biases (dropped by spec_tree_like when absent)
+        "bq": P(None, "model", None) if h_ok else r(3),
+        "bk": P(None, "model", None) if kv_ok else r(3),
+        "bv": P(None, "model", None) if kv_ok else r(3),
+    }
+    if cfg.moe is None:
+        mlp = {
+            "w_up": P(None, None, "model") if ff_ok else r(3),
+            "w_down": P(None, "model", None) if ff_ok else r(3),
+        }
+        if cfg.mlp_kind != "gelu":
+            mlp["w_gate"] = P(None, None, "model") if ff_ok else r(3)
+    else:
+        e_ok = cfg.moe.n_experts % nm == 0
+        mlp = {
+            "router": r(3),
+            "w_gate": P(None, "model", None, None) if e_ok else r(4),
+            "w_up": P(None, "model", None, None) if e_ok else r(4),
+            "w_down": P(None, "model", None, None) if e_ok else r(4),
+        }
+        if cfg.moe.n_shared > 0:
+            sh_ok = (cfg.moe.shared_d_ff * cfg.moe.n_shared) % nm == 0
+            mlp["shared"] = {
+                "w_gate": P(None, None, "model") if sh_ok else r(3),
+                "w_up": P(None, None, "model") if sh_ok else r(3),
+                "w_down": P(None, "model", None) if sh_ok else r(3),
+            }
+    norm = {"scale": P(None), "bias": P(None)}
+    return {
+        "embed": {"table": P("model", None) if cfg.vocab % nm == 0 else r(2)},
+        "layers": {"attn": attn, "ln1": norm, "ln2": norm, "mlp": mlp},
+        "ln_f": norm,
+    }
+
+
+def lm_data_specs(mesh) -> Dict[str, P]:
+    b = _batch_entry(mesh)
+    return {"tokens": P(b, None), "labels": P(b, None)}
+
+
+def lm_cache_specs(
+    cfg,
+    mesh,
+    seq_shard: bool = False,
+    batch_size: Optional[int] = None,
+    seq_axes: Sequence[str] = ("model",),
+) -> Dict[str, P]:
+    """KV-cache specs for decode: (L, B, S, KV, HD).
+
+    Batch shards over the data axes only when it divides (and B > 1);
+    ``seq_shard`` moves the model axis onto the sequence dim for configs
+    whose kv-head count doesn't divide it (or single-sequence shapes).
+    """
+    bax = batch_axes(mesh)
+    nb = _batch_size_of(mesh)
+    b = None
+    if bax and batch_size is not None and batch_size > 1 and batch_size % nb == 0:
+        b = tuple(bax)
+    nm = mesh.shape["model"]
+    kv_ok = cfg.n_kv_heads % nm == 0
+    if seq_shard:
+        kv = P(None, b, tuple(seq_axes), None, None)
+    else:
+        kv = P(None, b, None, "model" if kv_ok else None, None)
+    return {"k": kv, "v": kv, "len": P(b)}
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+
+def gnn_batch_specs(mesh, shard_nodes: bool = False) -> Dict[str, P]:
+    """Full-graph GNN batches: edges shard over the batch axes (they're
+    padded to 512-multiples by the cell builders); node arrays shard
+    over ``model`` only for the large-graph cells."""
+    e = _batch_entry(mesh)
+    node = P("model", None) if shard_nodes else P(None, None)
+    nmask = P("model") if shard_nodes else P(None)
+    return {
+        "x": node,
+        "src": P(e),
+        "dst": P(e),
+        "edge_mask": P(e),
+        "node_mask": nmask,
+        "edge_attr": P(e, None),
+        "graph_ids": nmask,
+    }
+
+
+def sage_sampled_specs(mesh) -> Dict[str, Any]:
+    b = _batch_entry(mesh)
+    return {
+        "x_self": P(b, None),
+        "neigh_feats": [P(b, None, None), P(b, None, None, None)],
+        "neigh_masks": [P(b, None), P(b, None, None)],
+        "labels": P(b),
+    }
+
+
+# ---------------------------------------------------------------------------
+# recsys family
+# ---------------------------------------------------------------------------
+
+
+def dcn_param_specs(params_shape, mesh):
+    """DCN-v2: the embedding tables (n_fields, vocab, dim) dominate —
+    shard the vocab dim over ``model`` when it divides; everything else
+    (cross layers, MLPs) is small and stays replicated."""
+    nm = mesh.shape.get("model", 1)
+
+    def one(p):
+        shape = tuple(p.shape)
+        if len(shape) == 3 and shape[1] >= 1024:
+            return P(None, "model", None) if shape[1] % nm == 0 else P()
+        return P()
+
+    return jax.tree.map(one, params_shape)

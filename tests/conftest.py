@@ -8,7 +8,23 @@ process).
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.dirname(__file__))  # for `proptest` import
+
+
+def pytest_collection_modifyitems(config, items):
+    """CPU-safe marker defaults: ``tpu``-marked tests auto-skip unless a
+    real TPU backend is present (Pallas kernels otherwise run under
+    interpret=True, which the non-marked tests already cover)."""
+    import jax
+
+    if jax.default_backend() == "tpu":
+        return
+    skip_tpu = pytest.mark.skip(reason="requires TPU hardware (CPU run)")
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip_tpu)
 
 try:
     from hypothesis import HealthCheck, settings

@@ -101,6 +101,10 @@ except ImportError:  # offline container: seeded fallback
                         print(f"[proptest] failing case #{case}: args={drawn} kw={drawn_kw}")
                         raise
 
+            # pytest resolves fixture names through __wrapped__; the
+            # drawn parameters are not fixtures, so hide the original
+            # signature or collection fails with "fixture 'a' not found"
+            del wrapper.__wrapped__
             return wrapper
 
         return deco

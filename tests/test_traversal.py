@@ -1,0 +1,309 @@
+"""Unified traversal engine: numpy-vs-jax backend parity, sparse/dense
+direction dispatch, and the Pallas kernel dispatch of the jax dense
+PageRank iteration (interpret mode on CPU)."""
+import numpy as np
+import pytest
+
+from repro.core import flat_graph as fg
+from repro.core import graph as G
+from repro.core.traversal import (
+    NumpyEngine,
+    dense_threshold,
+    make_engine,
+)
+from repro.core.traversal import algorithms as talg
+from repro.data.rmat import rmat_edges, symmetrize
+
+
+@pytest.fixture(scope="module")
+def rmat_graph():
+    edges = symmetrize(rmat_edges(8, 2000, seed=11))  # 256 vertices
+    return 256, edges
+
+
+@pytest.fixture(scope="module")
+def engines(rmat_graph):
+    n, edges = rmat_graph
+    eng_np = NumpyEngine(G.flat_snapshot(G.build_graph(n, edges)))
+    eng_jx = make_engine(fg.from_edges(n, edges))
+    return eng_np, eng_jx
+
+
+# ---------------------------------------------------------------------------
+# backend parity (same algorithm text, both substrates)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("diropt", [False, True])
+def test_bfs_parity(rmat_graph, engines, diropt):
+    n, edges = rmat_graph
+    eng_np, eng_jx = engines
+    src = int(edges[0, 0])
+    p_np = talg.bfs(eng_np, src, direction_optimize=diropt)
+    p_jx = talg.bfs(eng_jx, src, direction_optimize=diropt)
+    # parents may legally differ; reachability and depths may not
+    np.testing.assert_array_equal(p_np >= 0, p_jx >= 0)
+    np.testing.assert_array_equal(
+        talg.bfs_depths(p_np, src), talg.bfs_depths(p_jx, src)
+    )
+    # every claimed parent is a real in-edge on both backends
+    edge_set = set(map(tuple, edges.tolist()))
+    for parents in (p_np, p_jx):
+        for v in range(n):
+            if parents[v] >= 0 and v != src:
+                assert (int(parents[v]), v) in edge_set
+
+
+def test_pagerank_parity(engines):
+    eng_np, eng_jx = engines
+    pr_np = talg.pagerank(eng_np, iters=15)
+    pr_jx = talg.pagerank(eng_jx, iters=15)
+    np.testing.assert_allclose(pr_np.sum(), 1.0, rtol=1e-6)
+    # jax accumulates the kernel reduce in f32: parity to f32 tolerance
+    np.testing.assert_allclose(pr_np, pr_jx, atol=1e-6)
+
+
+def test_cc_parity(rmat_graph, engines):
+    n, edges = rmat_graph
+    eng_np, eng_jx = engines
+    cc_np = talg.connected_components(eng_np)
+    cc_jx = talg.connected_components(eng_jx)
+    # min-label propagation converges to the min vertex id per component
+    # on both backends: labels agree exactly
+    np.testing.assert_array_equal(cc_np, cc_jx)
+    assert (cc_np[edges[:, 0]] == cc_np[edges[:, 1]]).all()
+
+
+def test_bc_parity(rmat_graph, engines):
+    n, edges = rmat_graph
+    eng_np, eng_jx = engines
+    src = int(edges[0, 0])
+    np.testing.assert_allclose(
+        talg.bc(eng_np, src), talg.bc(eng_jx, src), rtol=1e-6, atol=1e-9
+    )
+
+
+def test_jax_engine_on_updated_snapshot(rmat_graph):
+    """Engines bind to immutable snapshots: inserts produce a new graph
+    whose engine sees the new edges while the old engine does not."""
+    n, edges = rmat_graph
+    keep, batch = edges[:-200], edges[-200:]
+    g0 = fg.from_edges(n, keep)
+    g1 = fg.insert_edges_host(g0, batch)
+    e0, e1 = make_engine(g0), make_engine(g1)
+    assert e0.m == keep.shape[0]
+    assert e1.m == edges.shape[0]
+    src = int(edges[0, 0])
+    r0 = (talg.bfs(e0, src) >= 0).sum()
+    r1 = (talg.bfs(e1, src) >= 0).sum()
+    assert r1 >= r0
+
+
+# ---------------------------------------------------------------------------
+# sparse/dense direction-optimized dispatch
+# ---------------------------------------------------------------------------
+
+
+def _count_F(ops, state, us, vs, valid):
+    out = ops.scatter_or(ops.xp.zeros(state.shape[0], dtype=bool), vs, valid)
+    return state, out
+
+
+def _all_C(ops, state, vs):
+    return ops.xp.ones(vs.shape, dtype=bool)
+
+
+def test_numpy_dispatch_follows_beamer_rule(rmat_graph, engines):
+    n, edges = rmat_graph
+    eng_np, _ = engines
+    state = np.zeros(n)
+    # single vertex: |U| + deg(U) <= m/20 -> sparse
+    small = eng_np.frontier_from_ids([int(edges[0, 0])])
+    assert small.size + int(eng_np.degrees[small.to_sparse()].sum()) <= dense_threshold(eng_np.m)
+    eng_np.edge_map(small, _count_F, _all_C, state)
+    assert eng_np.last_mode == "sparse"
+    # whole vertex set: way over the threshold -> dense
+    eng_np.edge_map(eng_np.frontier_all(), _count_F, _all_C, state)
+    assert eng_np.last_mode == "dense"
+    # direction_optimize=False forces sparse regardless of size
+    eng_np.edge_map(eng_np.frontier_all(), _count_F, _all_C, state,
+                    direction_optimize=False)
+    assert eng_np.last_mode == "sparse"
+
+
+@pytest.mark.parametrize("frontier", ["single", "all"])
+def test_jax_modes_agree(rmat_graph, engines, frontier):
+    """auto (traced lax.cond dispatch), forced sparse, and forced dense
+    produce the same U' on the jax backend."""
+    import jax.numpy as jnp
+
+    n, edges = rmat_graph
+    _, eng_jx = engines
+    U = (
+        eng_jx.frontier_from_ids([int(edges[0, 0])])
+        if frontier == "single"
+        else eng_jx.frontier_all()
+    )
+    state = jnp.zeros(n)
+    outs = {}
+    for mode in ("auto", "sparse", "dense"):
+        out, _ = eng_jx.edge_map(U, _count_F, _all_C, state, mode=mode)
+        outs[mode] = np.asarray(out.to_dense())
+    np.testing.assert_array_equal(outs["auto"], outs["sparse"])
+    np.testing.assert_array_equal(outs["auto"], outs["dense"])
+    # and the expansion is the true one-hop neighborhood
+    expect = np.zeros(n, dtype=bool)
+    srcs = U.to_sparse()
+    sel = np.isin(edges[:, 0], srcs)
+    expect[edges[sel, 1]] = True
+    np.testing.assert_array_equal(outs["auto"], expect)
+
+
+def test_cc_relaxes_both_edge_directions():
+    """A single stored direction still yields one weak component (the
+    undirected model: each stored edge carries labels both ways)."""
+    snap = G.flat_snapshot(G.build_graph(2, np.asarray([[1, 0]])))
+    from repro.core import algorithms as alg
+
+    assert alg.connected_components(snap).tolist() == [0, 0]
+    eng_jx = make_engine(fg.from_edges(2, np.asarray([[1, 0]])))
+    assert talg.connected_components(eng_jx).tolist() == [0, 0]
+
+
+def test_engine_cached_on_snapshot(rmat_graph):
+    n, edges = rmat_graph
+    from repro.core.traversal.numpy_backend import engine_of
+
+    snap = G.flat_snapshot(G.build_graph(n, edges))
+    assert engine_of(snap) is engine_of(snap)
+
+
+def test_legacy_edge_map_accepts_F_dense(rmat_graph):
+    """The original custom-dense-direction hook survives the refactor."""
+    from repro.core.edgemap import edge_map, from_ids
+
+    n, edges = rmat_graph
+    snap = G.flat_snapshot(G.build_graph(n, edges))
+    called = {"n": 0}
+
+    def F_dense(candidates, offsets, nbrs, nbr_in_u):
+        called["n"] += 1
+        out = np.zeros(candidates.size, dtype=bool)
+        out[:1] = True
+        return out
+
+    out = edge_map(
+        snap,
+        from_ids(n, np.arange(n)),  # whole vertex set -> dense direction
+        F=lambda us, vs: np.ones(us.shape, dtype=bool),
+        C=lambda vs: np.ones(vs.shape, dtype=bool),
+        F_dense=F_dense,
+    )
+    assert called["n"] == 1 and out.size == 1
+
+
+def test_legacy_edge_map_shim(rmat_graph):
+    """The original Ligra-signature edge_map still works via the shim."""
+    from repro.core.edgemap import edge_map, from_ids
+
+    n, edges = rmat_graph
+    snap = G.flat_snapshot(G.build_graph(n, edges))
+    src = int(edges[0, 0])
+    out = edge_map(
+        snap,
+        from_ids(n, [src]),
+        F=lambda us, vs: np.ones(us.shape, dtype=bool),
+        C=lambda vs: np.ones(vs.shape, dtype=bool),
+        direction_optimize=False,
+    )
+    np.testing.assert_array_equal(
+        out.to_sparse(), np.unique(edges[edges[:, 0] == src][:, 1])
+    )
+
+
+# ---------------------------------------------------------------------------
+# the jax dense PageRank iteration dispatches through the Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def test_jax_pagerank_uses_segment_reduce_kernel(rmat_graph, monkeypatch):
+    import repro.core.traversal.jax_backend as jb
+    from repro.kernels import ops as kops
+
+    n, edges = rmat_graph
+    eng = make_engine(fg.from_edges(n, edges))
+    calls = {"n": 0}
+    real = kops.segment_sum
+
+    def spy(dst, msg, n_out):
+        calls["n"] += 1
+        return real(dst, msg, n_out)
+
+    monkeypatch.setattr(jb.kops, "segment_sum", spy)
+    pr = talg.pagerank(eng, iters=3)
+    assert calls["n"] == 3  # one kernel reduce per power iteration
+    np.testing.assert_allclose(pr.sum(), 1.0, rtol=1e-5)
+
+
+def test_edge_map_reduce_parity(rmat_graph, engines):
+    n, edges = rmat_graph
+    eng_np, eng_jx = engines
+    rng = np.random.default_rng(0)
+    vals = rng.standard_normal(n)
+    out_np = eng_np.edge_map_reduce(vals)
+    out_jx = np.asarray(eng_jx.edge_map_reduce(vals.astype(np.float32)))
+    np.testing.assert_allclose(out_np, out_jx, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# marker-gated variants (tpu auto-skips on CPU; slow deselectable)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.tpu
+def test_segment_reduce_compiled_on_hardware(rmat_graph):
+    """Same kernel path, compiled (interpret=False) — only meaningful on
+    a real TPU, hence the marker."""
+    import jax.numpy as jnp
+
+    from repro.kernels import segment_reduce
+
+    n, edges = rmat_graph
+    dst = jnp.asarray(np.sort(edges[:2048, 1] % 128).astype(np.int32))
+    msg = jnp.ones((2048, 128), jnp.float32)
+    out = segment_reduce.segment_sum_sorted(dst, msg, 128, interpret=False)
+    assert out.shape == (128, 128)
+
+
+@pytest.mark.slow
+def test_parity_at_benchmark_scale():
+    edges = symmetrize(rmat_edges(12, 60_000, seed=0))
+    n = 1 << 12
+    eng_np = NumpyEngine(G.flat_snapshot(G.build_graph(n, edges)))
+    eng_jx = make_engine(fg.from_edges(n, edges))
+    src = int(edges[0, 0])
+    p_np, p_jx = talg.bfs(eng_np, src), talg.bfs(eng_jx, src)
+    np.testing.assert_array_equal(
+        talg.bfs_depths(p_np, src), talg.bfs_depths(p_jx, src)
+    )
+    np.testing.assert_allclose(
+        talg.pagerank(eng_np, iters=10), talg.pagerank(eng_jx, iters=10), atol=1e-6
+    )
+    np.testing.assert_array_equal(
+        talg.connected_components(eng_np), talg.connected_components(eng_jx)
+    )
+
+
+# ---------------------------------------------------------------------------
+# snapshot caching (satellite: vectorized degree sum)
+# ---------------------------------------------------------------------------
+
+
+def test_flat_snapshot_caches_m_and_degrees(rmat_graph):
+    n, edges = rmat_graph
+    snap = G.flat_snapshot(G.build_graph(n, edges))
+    degs = np.zeros(n, dtype=np.int64)
+    np.add.at(degs, edges[:, 0], 1)
+    np.testing.assert_array_equal(snap.degrees, degs)
+    assert snap.m == edges.shape[0]
+    assert snap.degrees is snap.degrees  # cached, not recomputed
