@@ -188,7 +188,9 @@ def bench_concurrent(quick: bool = False) -> List[Row]:
     src = int(edges[0, 0])
 
     # --- structural: alternate update/query on one thread ------------------
-    s0 = AspenStream(G.build_graph(n, keep))
+    # mirror=False: T7 reproduces the paper's tree-level experiment; the
+    # dual-representation serve path has its own STREAM table.
+    s0 = AspenStream(G.build_graph(n, keep), mirror=False)
     iso = []
     snap = s0.flat_snapshot()
     for _ in range(5):
@@ -205,7 +207,7 @@ def bench_concurrent(quick: bool = False) -> List[Row]:
     structural = (np.median(inter) - np.median(iso)) / np.median(iso)
 
     # --- threaded (core-contended on this box) ------------------------------
-    s = AspenStream(G.build_graph(n, keep))
+    s = AspenStream(G.build_graph(n, keep), mirror=False)
     stats = run_concurrent(
         s, stream, query_fn=lambda snap: alg.bfs(snap, src),
         duration_s=1.5 if quick else 4.0, batch_size=1,
@@ -357,6 +359,101 @@ def bench_vs_baselines(quick: bool = False) -> List[Row]:
 
 
 # ---------------------------------------------------------------------------
+# dual-representation streaming: resident mirror vs rebuild-per-query
+# ---------------------------------------------------------------------------
+
+
+def bench_streaming(quick: bool = False) -> List[Row]:
+    """The serve-path numbers the resident FlatGraph mirror buys:
+
+      * updates/s through the dual write path (tree + on-device
+        rank-merge) vs the tree-only stream;
+      * time-to-first-query after a batch lands: rebuild-per-query
+        (mirror=False, O(m) host rebuild + host->device transfer) vs the
+        incremental mirror (jit merge + cached, version-pinned engine);
+      * concurrent query latency over the mirror engine via
+        ``run_concurrent`` (paper §7.3 with the jax substrate).
+    """
+    import jax
+
+    from repro.core import graph as G
+    from repro.core.streaming import AspenStream, make_update_stream, run_concurrent
+    from repro.core.traversal import algorithms as talg
+
+    n, edges = _test_graph(12, 60_000)
+    keep, stream = make_update_stream(edges, 4_000, seed=5)
+    src = int(edges[0, 0])
+    g0 = G.build_graph(n, keep)
+    bsz = 200
+    batches = [stream[i : i + bsz, :2] for i in range(0, 2_000, bsz)]
+
+    rows: List[Row] = []
+
+    # -- updates/s through the dual write path vs tree-only -----------------
+    s_tree = AspenStream(g0, mirror=False)
+    s_dual = AspenStream(g0)
+    s_dual.insert_edges(batches[-1])  # warm the merge jit at this shape
+
+    def dual_run():
+        for b in batches[:4]:
+            s_dual.insert_edges(b)
+        # jit dispatch is async: charge the merge itself, not its enqueue
+        jax.block_until_ready(s_dual.flat_graph().keys)
+
+    t_tree = _timeit(lambda: [s_tree.insert_edges(b) for b in batches[:4]], repeats=1)
+    t_dual = _timeit(dual_run, repeats=1)
+    n_dir = 4 * bsz * 2
+    rows += [
+        (f"STREAM/updates_tree_only/b={bsz}", n_dir / t_tree, "edges/s", "no mirror"),
+        (f"STREAM/updates_dual/b={bsz}", n_dir / t_dual, "edges/s",
+         "tree + on-device rank-merge"),
+        (f"STREAM/dual_write_overhead/b={bsz}", t_dual / t_tree, "x",
+         "mirror maintenance cost"),
+    ]
+
+    # -- time-to-first-query after an update batch --------------------------
+    def ttfq(s: AspenStream, batch) -> float:
+        t0 = time.perf_counter()
+        s.insert_edges(batch)
+        talg.bfs(s.engine("jax"), src)  # first query on the fresh version
+        return time.perf_counter() - t0
+
+    s_rebuild = AspenStream(g0, mirror=False)
+    s_mirror = AspenStream(g0)
+    ttfq(s_rebuild, batches[0])  # warm both paths (compiles, caches)
+    ttfq(s_mirror, batches[0])
+    reps = 2 if quick else 4
+    t_rebuild = min(ttfq(s_rebuild, batches[1 + i]) for i in range(reps))
+    t_mirror = min(ttfq(s_mirror, batches[1 + i]) for i in range(reps))
+    rows += [
+        ("STREAM/ttfq_rebuild", t_rebuild * 1e3, "ms",
+         "O(m) host rebuild per version"),
+        ("STREAM/ttfq_mirror", t_mirror * 1e3, "ms",
+         f"incremental mirror, backend={jax.default_backend()}"),
+        ("STREAM/ttfq_speedup", t_rebuild / max(t_mirror, 1e-12), "x",
+         "rebuild/mirror"),
+    ]
+
+    # -- concurrent updates + mirror-engine queries (§7.3, jax substrate) ---
+    s = AspenStream(g0)
+    s.engine("jax")
+    stats = run_concurrent(
+        s, stream, query_fn=lambda eng: talg.bfs(eng, src),
+        duration_s=1.5 if quick else 4.0, batch_size=bsz,
+        engine_backend="jax",
+    )
+    rows += [
+        ("STREAM/concurrent_updates", stats.updates_per_sec, "edges/s",
+         f"batch={bsz}, dual write"),
+        ("STREAM/query_concurrent", stats.query_latency_concurrent_s * 1e3, "ms",
+         "BFS on mirror engine, threaded"),
+        ("STREAM/query_isolated", stats.query_latency_isolated_s * 1e3, "ms",
+         "BFS on mirror engine"),
+    ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # unified traversal engine: numpy vs jax backend (parity + speed)
 # ---------------------------------------------------------------------------
 
@@ -464,5 +561,6 @@ ALL_BENCHES = {
     "batch_updates": bench_batch_updates,
     "vs_baselines": bench_vs_baselines,
     "traversal": bench_traversal,
+    "streaming": bench_streaming,
     "kernels": bench_kernels,
 }

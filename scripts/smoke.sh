@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Smoke target: tier-1 suite + a ~2s traversal-engine parity probe.
 #
-#   scripts/smoke.sh          # full tier-1 + parity probe
-#   scripts/smoke.sh --fast   # skip slow-marked tests (quick iteration)
+#   scripts/smoke.sh              # full tier-1 + parity probe
+#   scripts/smoke.sh --fast       # skip slow-marked tests (quick iteration)
+#   scripts/smoke.sh --probe-only # just the parity probe (CI runs the
+#                                 # suite as its own step; don't pay it twice)
 #
 # The parity probe catches benchmark-only regressions (e.g. a kernel or
 # engine change that still passes unit tests but breaks numpy-vs-jax
@@ -16,8 +18,10 @@ if [[ "${1:-}" == "--fast" ]]; then
   MARK=(-m "not slow")
 fi
 
-# ${MARK[@]+...} guard: empty-array expansion trips `set -u` on bash < 4.4
-python -m pytest -x -q ${MARK[@]+"${MARK[@]}"}
+if [[ "${1:-}" != "--probe-only" ]]; then
+  # ${MARK[@]+...} guard: empty-array expansion trips `set -u` on bash < 4.4
+  python -m pytest -x -q ${MARK[@]+"${MARK[@]}"}
+fi
 
 echo "== engine parity probe (numpy vs jax traversal) =="
 python - <<'EOF'

@@ -75,6 +75,20 @@ def to_array(t: FlatCTree) -> np.ndarray:
     return d[: int(t.n)]
 
 
+@functools.partial(jax.jit, static_argnums=(1,))
+def from_device(values: jax.Array, cap: int) -> FlatCTree:
+    """Device-side build: sort + dedup + compact, all under jit.
+
+    ``values`` is a dense device array of raw (possibly duplicated,
+    unsorted) elements; sentinel-valued slots are dropped, so a caller
+    may pre-pad to a quantized shape.  The host never touches the data —
+    this is the streaming ingest path (batches arrive device-resident
+    and stay there)."""
+    v = jnp.sort(values.ravel())
+    keep = _dedup_mask(v, jnp.int32(v.shape[0]))
+    return _compact(v, keep, cap)
+
+
 # ---------------------------------------------------------------------------
 # membership / find
 # ---------------------------------------------------------------------------

@@ -123,25 +123,95 @@ def chunk_structure(g: FlatGraph, b: int, seed: int):
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
-def insert_edges(g: FlatGraph, batch: fct.FlatCTree, out_cap: int, optimized: bool = True) -> FlatGraph:
-    """InsertEdges: rank-merge batch keys into the pool, rebuild offsets.
-
-    ``batch`` is a FlatCTree of packed keys (sorted, deduped, padded).
-    """
+def _insert_edges_impl(
+    g: FlatGraph, batch: fct.FlatCTree, out_cap: int, optimized: bool, n_out: int | None
+) -> FlatGraph:
     pool = fct.FlatCTree(g.keys, g.m)
     fn = fct.union_merge if optimized else fct.union_sort
     merged = fn(pool, batch, out_cap)
-    n = g.offsets.shape[0] - 1
+    n = g.offsets.shape[0] - 1 if n_out is None else n_out
     return FlatGraph(_offsets_from_keys(merged.data, merged.n, n), merged.data, merged.n)
 
 
-@functools.partial(jax.jit, static_argnums=(2,))
-def delete_edges(g: FlatGraph, batch: fct.FlatCTree, out_cap: int) -> FlatGraph:
+def _delete_edges_impl(
+    g: FlatGraph, batch: fct.FlatCTree, out_cap: int
+) -> FlatGraph:
     pool = fct.FlatCTree(g.keys, g.m)
     out = fct.difference(pool, batch, out_cap)
     n = g.offsets.shape[0] - 1
     return FlatGraph(_offsets_from_keys(out.data, out.n, n), out.data, out.n)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def insert_edges(
+    g: FlatGraph,
+    batch: fct.FlatCTree,
+    out_cap: int,
+    optimized: bool = True,
+    n_out: int | None = None,
+) -> FlatGraph:
+    """InsertEdges: rank-merge batch keys into the pool, rebuild offsets.
+
+    ``batch`` is a FlatCTree of packed keys (sorted, deduped, padded).
+    ``n_out`` grows the vertex count (offsets array) when the batch
+    introduces vertex ids past the current range.
+    """
+    return _insert_edges_impl(g, batch, out_cap, optimized, n_out)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def delete_edges(g: FlatGraph, batch: fct.FlatCTree, out_cap: int) -> FlatGraph:
+    return _delete_edges_impl(g, batch, out_cap)
+
+
+# donating variants: the old pool buffer is handed back to XLA so the
+# merge can reuse it in place (streaming pipelines that own the sole
+# reference; versioned mirrors shared with live readers must NOT donate).
+_insert_edges_donating = functools.partial(
+    jax.jit, static_argnums=(2, 3, 4), donate_argnums=(0,)
+)(_insert_edges_impl)
+_delete_edges_donating = functools.partial(
+    jax.jit, static_argnums=(2,), donate_argnums=(0,)
+)(_delete_edges_impl)
+
+
+def insert_edges_device(
+    g: FlatGraph,
+    batch: fct.FlatCTree,
+    out_cap: int | None = None,
+    *,
+    optimized: bool = True,
+    n_out: int | None = None,
+    donate: bool = False,
+) -> FlatGraph:
+    """Host-free InsertEdges: ``batch`` is already device-resident (see
+    ``fct.from_device``), no edge data is copied through numpy, and with
+    ``donate=True`` the old pool buffer is donated to the merge.
+
+    NOTE: the ``out_cap=None`` convenience reads two device scalars
+    (``g.m``, ``batch.n``) to size the output pool exactly, which blocks
+    on the previous merge.  Fully-async pipelines must pass ``out_cap``
+    from host-tracked counts, as ``AspenStream`` does.  (Sizing from
+    static shapes instead would grow the pool on every call.)
+
+    Donation invalidates ``g``'s buffers — only pass it when the caller
+    holds the sole reference (NOT for pools shared across live versions;
+    backends without donation support silently copy instead).
+    """
+    if out_cap is None:
+        out_cap = max(g.edge_capacity, fct.grown_capacity(int(g.m) + int(batch.n)))
+    fn = _insert_edges_donating if donate else insert_edges
+    return fn(g, batch, out_cap, optimized, n_out)
+
+
+def delete_edges_device(
+    g: FlatGraph, batch: fct.FlatCTree, out_cap: int | None = None, *, donate: bool = False
+) -> FlatGraph:
+    """Host-free DeleteEdges (see ``insert_edges_device`` for donation)."""
+    if out_cap is None:
+        out_cap = g.edge_capacity
+    fn = _delete_edges_donating if donate else delete_edges
+    return fn(g, batch, out_cap)
 
 
 def batch_from_edges(edges: np.ndarray, cap: int | None = None) -> fct.FlatCTree:
@@ -164,69 +234,30 @@ def delete_edges_host(g: FlatGraph, edges: np.ndarray) -> FlatGraph:
 
 
 # ---------------------------------------------------------------------------
-# edgeMap / traversal (jit): frontier-parallel over the pool
+# traversal (deprecated wrappers): the engine lives in traversal/jax_backend
 # ---------------------------------------------------------------------------
 
 
-@jax.jit
 def edge_map_dense(g: FlatGraph, frontier: jax.Array) -> jax.Array:
-    """One BFS-style expansion: bool[n] frontier -> bool[n] reachable set.
+    """Deprecated: use ``traversal.make_engine(g).edge_map``.  Thin
+    delegation to the jax traversal backend's whole-pool expansion."""
+    from .traversal.jax_backend import dense_expand
 
-    Dense direction of Ligra's EDGEMAP: every edge looks up whether its
-    source is in the frontier; a segment-or over destinations. On TPU this
-    is one gather + one scatter-max — the same shape as GNN aggregation.
-    """
-    src, dst = unpack(g.keys)
-    n = g.offsets.shape[0] - 1
-    valid = jnp.arange(g.keys.shape[0]) < g.m
-    src_c = jnp.clip(src, 0, n - 1)
-    dst_c = jnp.clip(dst, 0, n - 1)
-    msg = frontier[src_c] & valid
-    out = jnp.zeros(n, dtype=bool).at[dst_c].max(msg, mode="drop")
-    return out
+    return dense_expand(g, frontier)
 
 
-@jax.jit
 def bfs(g: FlatGraph, source: jax.Array) -> jax.Array:
-    """Full BFS levels via lax.while_loop (fixed-shape iterations)."""
-    n = g.offsets.shape[0] - 1
-    levels = jnp.full(n, jnp.int32(-1))
-    levels = levels.at[source].set(0)
-    frontier = jnp.zeros(n, dtype=bool).at[source].set(True)
+    """Deprecated: use ``traversal.algorithms.bfs(make_engine(g), src)``.
+    Returns BFS *levels* (the historical signature); delegates to the
+    fully-jit level loop in ``traversal.jax_backend.bfs_levels``."""
+    from .traversal.jax_backend import bfs_levels
 
-    def cond(state):
-        frontier, levels, d = state
-        return frontier.any()
-
-    def body(state):
-        frontier, levels, d = state
-        nxt = edge_map_dense(g, frontier) & (levels < 0)
-        levels = jnp.where(nxt, d + 1, levels)
-        return nxt, levels, d + 1
-
-    _, levels, _ = jax.lax.while_loop(cond, body, (frontier, levels, jnp.int32(0)))
-    return levels
+    return bfs_levels(g, source)
 
 
-@jax.jit
 def connected_components(g: FlatGraph) -> jax.Array:
-    """Min-label propagation to fixpoint (jit while_loop)."""
-    n = g.offsets.shape[0] - 1
-    src, dst = unpack(g.keys)
-    valid = jnp.arange(g.keys.shape[0]) < g.m
-    src_c = jnp.clip(src, 0, n - 1)
-    dst_c = jnp.clip(dst, 0, n - 1)
-    labels0 = jnp.arange(n, dtype=jnp.int32)
+    """Deprecated: use ``traversal.algorithms.connected_components``.
+    Delegates to ``traversal.jax_backend.cc_labels`` (jit fixpoint)."""
+    from .traversal.jax_backend import cc_labels
 
-    def cond(state):
-        labels, changed = state
-        return changed
-
-    def body(state):
-        labels, _ = state
-        msg = jnp.where(valid, labels[src_c], jnp.int32(np.iinfo(np.int32).max))
-        new = labels.at[dst_c].min(msg, mode="drop")
-        return new, (new != labels).any()
-
-    labels, _ = jax.lax.while_loop(cond, body, (labels0, jnp.bool_(True)))
-    return labels
+    return cc_labels(g)

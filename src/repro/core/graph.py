@@ -186,13 +186,9 @@ class FlatSnapshot:
 
 
 def flat_snapshot(g: Graph) -> FlatSnapshot:
-    n = 0
-    refs: List[Optional[ct.CTree]] = []
-    max_v = -1
     pairs = list(_VMOD.iter_entries(g.vtree))
-    if pairs:
-        max_v = pairs[-1][0]
-    refs = [None] * (max_v + 1)
+    max_v = pairs[-1][0] if pairs else -1
+    refs: List[Optional[ct.CTree]] = [None] * (max_v + 1)
     for v, et in pairs:
         refs[v] = et
     return FlatSnapshot(refs, max_v + 1)

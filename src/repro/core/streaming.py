@@ -5,6 +5,18 @@ Ligra-style update API (InsertEdges / DeleteEdges / InsertVertices /
 DeleteVertices).  Updates are functional: each batch produces a new
 version published with SET; readers ACQUIRE snapshots and never block.
 
+Dual representation (DESIGN.md §6): alongside the faithful C-tree
+``Graph``, every version carries a device-resident ``FlatGraph`` mirror
+kept current *incrementally* — each edge batch is applied to the tree
+(functional, faithful) AND rank-merged into the mirror on device
+(O(n+k), amortized capacity doubling), then both are published
+atomically as ONE version.  ``engine("jax")`` over an unchanged version
+is O(1): engines are cached on the version itself (version-pinned, so
+the cache dies with the version), and a fresh version's engine refresh
+is one jit ``engine_aux`` call over the already-merged mirror — no O(m)
+host rebuild, no host argsort.  Streams opened with ``mirror=False``
+keep the historical rebuild-per-query path.
+
 ``run_concurrent`` reproduces the paper's §7.3 experiment: one writer
 thread applying a stream of edge updates while reader threads run global
 queries; reports update throughput, per-edge visibility latency, and
@@ -19,33 +31,140 @@ from typing import Callable, List, NamedTuple, Optional, Tuple
 import numpy as np
 
 from . import graph as G
-from .versioning import VersionedGraph
+from .versioning import Version, VersionedGraph
+
+MIRROR = "flat"  # aux key of the FlatGraph mirror on a Version
 
 
 class AspenStream:
-    def __init__(self, initial: Optional[G.Graph] = None, b: int = 256, seed: int = 0x9E3779B9):
-        self.vg: VersionedGraph[G.Graph] = VersionedGraph(
-            initial if initial is not None else G.empty(b, seed)
+    def __init__(
+        self,
+        initial: Optional[G.Graph] = None,
+        b: int = 256,
+        seed: int = 0x9E3779B9,
+        mirror: bool = True,
+        donate_buffers: bool = False,
+    ):
+        """``mirror=True`` (default) maintains the resident FlatGraph
+        alongside the tree; ``donate_buffers=True`` additionally donates
+        the old mirror pool to each merge — ONLY safe when no reader can
+        still hold a previous version (single-reader pipelines), since
+        donation invalidates the shared buffer."""
+        g0 = initial if initial is not None else G.empty(b, seed)
+        self._mirror_enabled = mirror
+        self._donate = donate_buffers
+        aux = {MIRROR: self._mirror_from_tree(g0)} if mirror else None
+        self.vg: VersionedGraph[G.Graph] = VersionedGraph(g0, aux=aux)
+        self._wlock = threading.Lock()  # serializes writers (incl. mirror merge)
+
+    # -- mirror maintenance -------------------------------------------------
+    @staticmethod
+    def _mirror_from_tree(g: G.Graph):
+        """Full rebuild (O(m) host): construction and the rare vertex-set
+        operations; edge batches take the incremental path instead."""
+        from .traversal import flat_graph_of
+
+        return flat_graph_of(G.flat_snapshot(g))
+
+    @staticmethod
+    def _device_batch(edges: np.ndarray):
+        """Pack an edge batch and ship it to device at a *quantized*
+        shape (padded with the pool sentinel, which ``fct.from_device``
+        drops): batch sizes 1..k all share O(log k) jit traces instead
+        of one per distinct size."""
+        import jax.numpy as jnp
+
+        from . import flat_ctree as fct
+
+        keys = (edges[:, 0] << 32) | edges[:, 1]
+        cap = fct.grown_capacity(keys.size)
+        padded = np.full(cap, fct.SENTINEL64, dtype=np.int64)
+        padded[: keys.size] = keys
+        return fct.from_device(jnp.asarray(padded), cap)
+
+    def _mirror_insert(self, mirror, g_old: G.Graph, edges: np.ndarray):
+        """Apply an insert batch to the mirror on device: pack keys, build
+        the batch pool with the jit sort/dedup, rank-merge.  Capacity and
+        vertex growth are decided from host-known counts (tree edge count
+        via the O(1) augmentation; max source id from the batch), so no
+        device->host sync is needed."""
+        from . import flat_ctree as fct
+        from . import flat_graph as fg
+
+        if edges.shape[0] == 0:
+            return mirror
+        batch = self._device_batch(edges)
+        # vertices are created by their first out-edge (matching the
+        # tree, whose vertex set is the set of inserted sources)
+        n_out = max(mirror.n, int(edges[:, 0].max()) + 1)
+        need = G.num_edges(g_old) + edges.shape[0]
+        cap = max(mirror.edge_capacity, fct.grown_capacity(need))
+        return fg.insert_edges_device(
+            mirror, batch, cap,
+            n_out=None if n_out == mirror.n else n_out,
+            donate=self._donate,
         )
+
+    def _mirror_delete(self, mirror, edges: np.ndarray):
+        from . import flat_graph as fg
+
+        if edges.shape[0] == 0:
+            return mirror
+        return fg.delete_edges_device(
+            mirror, self._device_batch(edges), donate=self._donate
+        )
+
+    def _publish(self, tree_fn, mirror_fn) -> Version[G.Graph]:
+        """One writer transaction: update tree + mirror from the held
+        version, publish both atomically as a single new version.
+
+        Self-healing: if the held version carries no mirror (e.g. it was
+        published through the raw ``vg`` writer API), the mirror is
+        rebuilt from the new tree instead of merged incrementally."""
+
+        def txn(v: Version[G.Graph]):
+            g2 = tree_fn(v.graph)
+            if not self._mirror_enabled:
+                return g2, None
+            m = v.aux.get(MIRROR)
+            m2 = mirror_fn(m, v.graph, g2) if m is not None else self._mirror_from_tree(g2)
+            return g2, {MIRROR: m2}
+
+        with self._wlock:
+            return self.vg.update_with_aux(txn)
 
     # -- update API (paper Appendix 10.4) ---------------------------------
     def insert_edges(self, edges: np.ndarray, symmetric: bool = True):
         edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
         if symmetric:
             edges = np.concatenate([edges, edges[:, ::-1]])
-        return self.vg.update(lambda g: G.insert_edges(g, edges))
+        return self._publish(
+            lambda g: G.insert_edges(g, edges),
+            lambda m, g_old, g_new: self._mirror_insert(m, g_old, edges),
+        )
 
     def delete_edges(self, edges: np.ndarray, symmetric: bool = True):
         edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
         if symmetric:
             edges = np.concatenate([edges, edges[:, ::-1]])
-        return self.vg.update(lambda g: G.delete_edges(g, edges))
+        return self._publish(
+            lambda g: G.delete_edges(g, edges),
+            lambda m, g_old, g_new: self._mirror_delete(m, edges),
+        )
 
     def insert_vertices(self, vs: np.ndarray):
-        return self.vg.update(lambda g: G.insert_vertices(g, vs))
+        # vertex-set ops are control-plane-rare: the mirror takes the
+        # rebuild path (vertex growth/shrink reshapes the offsets array)
+        return self._publish(
+            lambda g: G.insert_vertices(g, vs),
+            lambda m, g_old, g_new: self._mirror_from_tree(g_new),
+        )
 
     def delete_vertices(self, vs: np.ndarray):
-        return self.vg.update(lambda g: G.delete_vertices(g, vs))
+        return self._publish(
+            lambda g: G.delete_vertices(g, vs),
+            lambda m, g_old, g_new: self._mirror_from_tree(g_new),
+        )
 
     # -- read API -----------------------------------------------------------
     def acquire(self):
@@ -61,17 +180,46 @@ class AspenStream:
         finally:
             self.release(v)
 
+    def flat_graph(self):
+        """The current version's FlatGraph: the resident mirror (zero
+        work) or, on mirror-less streams, a one-off rebuild."""
+        v = self.acquire()
+        try:
+            if MIRROR in v.aux:
+                return v.aux[MIRROR]
+            return self._mirror_from_tree(v.graph)
+        finally:
+            self.release(v)
+
     def engine(self, backend: str = "numpy"):
         """Traversal engine over the current version: the caller picks
         the query substrate at snapshot time.
 
         backend="numpy" -> NumpyEngine over a FlatSnapshot (CPU);
-        backend="jax"   -> JaxEngine over a FlatGraph rebuilt from the
-                           snapshot (jit / Pallas query path).
+        backend="jax"   -> JaxEngine over the version's resident
+                           FlatGraph mirror (jit / Pallas query path);
+                           rebuilt from the tree snapshot only when the
+                           stream was opened with mirror=False.
+
+        Engines are cached per (version, backend): repeated calls on an
+        unchanged version are O(1) dict hits, and the cache dies with
+        the version (version-pinned — it can never serve a stale graph).
         """
         from .traversal import make_engine
 
-        return make_engine(self.flat_snapshot(), backend=backend)
+        v = self.acquire()
+        try:
+            key = ("engine", backend)
+            eng = v.cache.get(key)
+            if eng is None:
+                if backend == "jax" and MIRROR in v.aux:
+                    eng = make_engine(v.aux[MIRROR])
+                else:
+                    eng = make_engine(G.flat_snapshot(v.graph), backend=backend)
+                eng = v.cache.setdefault(key, eng)
+            return eng
+        finally:
+            self.release(v)
 
 
 class ConcurrentStats(NamedTuple):
@@ -86,13 +234,18 @@ class ConcurrentStats(NamedTuple):
 def run_concurrent(
     stream: AspenStream,
     updates: np.ndarray,  # (k, 3): src, dst, is_delete
-    query_fn: Callable[[G.FlatSnapshot], object],
+    query_fn: Callable[[object], object],
     duration_s: float = 5.0,
     batch_size: int = 1,
     symmetric: bool = True,
+    engine_backend: Optional[str] = None,
 ) -> ConcurrentStats:
     """Paper §7.3: writer applies updates one batch at a time while a
     reader repeatedly runs query_fn against fresh snapshots.
+
+    ``query_fn`` receives a ``FlatSnapshot`` per query by default; pass
+    ``engine_backend`` ("numpy"/"jax") to hand it the stream's cached
+    traversal engine instead (the dual-representation serve path).
 
     ``symmetric`` is forwarded to the insert/delete calls; the reported
     throughput counts the directed edges actually applied (2x the batch
@@ -122,11 +275,16 @@ def run_concurrent(
 
     q_lat: List[float] = []
 
+    def _substrate():
+        if engine_backend is not None:
+            return stream.engine(engine_backend)
+        return stream.flat_snapshot()
+
     def reader():
         while not stop.is_set():
-            snap = stream.flat_snapshot()
+            sub = _substrate()
             t0 = time.perf_counter()
-            query_fn(snap)
+            query_fn(sub)
             q_lat.append(time.perf_counter() - t0)
 
     tu = threading.Thread(target=updater)
@@ -139,11 +297,11 @@ def run_concurrent(
     tq.join()
 
     # isolated query latency on the final version
-    snap = stream.flat_snapshot()
+    sub = _substrate()
     iso: List[float] = []
     for _ in range(max(3, min(10, len(q_lat)))):
         t0 = time.perf_counter()
-        query_fn(snap)
+        query_fn(sub)
         iso.append(time.perf_counter() - t0)
 
     total_upd_time = sum(upd_lat) if upd_lat else 1e-9

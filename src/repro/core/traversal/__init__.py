@@ -42,7 +42,26 @@ __all__ = [
     "gather_csr",
     "algorithms",
     "make_engine",
+    "flat_graph_of",
+    "FLAT_REBUILDS",
 ]
+
+
+class _RebuildCounter:
+    """Counts FlatSnapshot -> FlatGraph host rebuilds (the O(m) path the
+    resident mirror exists to avoid).  Tests spy on ``count`` to assert
+    the mirror's engine path never falls back to a rebuild."""
+
+    __slots__ = ("count",)
+
+    def __init__(self):
+        self.count = 0
+
+    def bump(self) -> None:
+        self.count += 1
+
+
+FLAT_REBUILDS = _RebuildCounter()
 
 
 def __getattr__(name):
@@ -84,12 +103,20 @@ def make_engine(obj, backend: str | None = None) -> TraversalEngine:
     return engine_of(obj)
 
 
-def _flat_graph_of(snap):
-    """FlatSnapshot -> FlatGraph (host-side CSR rebuild)."""
+def flat_graph_of(snap):
+    """FlatSnapshot -> FlatGraph (host-side O(m) CSR rebuild).
+
+    This is the *fallback* substrate conversion — streams keep a
+    resident mirror precisely so queries never pay this per version
+    (``FLAT_REBUILDS`` counts how often anyone still does)."""
     import numpy as np
 
     from ..flat_graph import from_edges
 
+    FLAT_REBUILDS.bump()
     offsets, nbrs = gather_csr(snap, np.arange(snap.n, dtype=np.int64))
     srcs = np.repeat(np.arange(snap.n, dtype=np.int64), np.diff(offsets))
     return from_edges(snap.n, np.stack([srcs, nbrs], axis=1))
+
+
+_flat_graph_of = flat_graph_of  # backward-compatible alias

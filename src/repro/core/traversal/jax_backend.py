@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.kernels import ops as kops
 
-from ..flat_graph import FlatGraph
+from ..flat_graph import FlatGraph, unpack
 from .base import DENSE_THRESHOLD_DENOM, ArrayOps, TraversalEngine
 
 
@@ -67,8 +67,18 @@ class JaxOps(ArrayOps):
 JAX_OPS = JaxOps()
 
 
-class JaxVertexSubset(NamedTuple):
-    dense: jax.Array  # bool[n]
+class JaxVertexSubset:
+    """Dense bool[n] frontier.  ``size``/``empty`` force a device→host
+    sync (python-level loop control); the count is computed ONCE per
+    subset and cached — algorithms probe ``U.empty`` every round, and a
+    per-access sync was a measurable serial cost inside traversal loops.
+    """
+
+    __slots__ = ("dense", "_size")
+
+    def __init__(self, dense: jax.Array):
+        self.dense = dense  # bool[n]
+        self._size: Optional[int] = None
 
     @property
     def n(self) -> int:
@@ -76,7 +86,9 @@ class JaxVertexSubset(NamedTuple):
 
     @property
     def size(self) -> int:
-        return int(self.dense.sum())  # host sync: python-level loop control
+        if self._size is None:
+            self._size = int(self.dense.sum())
+        return self._size
 
     @property
     def empty(self) -> bool:
@@ -91,6 +103,56 @@ class JaxVertexSubset(NamedTuple):
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# per-snapshot engine auxiliary state (one jit pytree, device-resident)
+# ---------------------------------------------------------------------------
+
+
+class EngineAux(NamedTuple):
+    """Everything ``JaxEngine`` derives from a snapshot, as one pytree.
+
+    Refreshing it is ONE fixed-shape jit call — no host loops, no host
+    argsort — so an engine over a freshly-merged mirror costs O(cap)
+    device work instead of the old O(m log m) host precompute, and the
+    pytree itself can be version-pinned and reused across queries.
+    """
+
+    src_c: jax.Array  # int32[cap] clipped sources
+    dst_c: jax.Array  # int32[cap] clipped destinations
+    evalid: jax.Array  # bool[cap] slot < m
+    degrees: jax.Array  # int32[n]
+    dst_sorted: jax.Array  # int32[cap] destinations ascending (pad=n)
+    src_by_dst: jax.Array  # int32[cap] sources permuted dst-major
+    valid_by_dst: jax.Array  # bool[cap]
+
+
+@jax.jit
+def engine_aux(g: FlatGraph) -> EngineAux:
+    n = g.offsets.shape[0] - 1
+    cap = g.keys.shape[0]
+    src, dst = unpack(g.keys)
+    # a slot is usable iff it holds a real edge AND its destination is a
+    # real vertex: an asymmetric stream can store an edge naming a
+    # never-source vertex id >= n, and every query direction must DROP
+    # it (not fold it into the clipped n-1).
+    evalid = (jnp.arange(cap) < g.m) & (dst >= 0) & (dst < n)
+    src_c = jnp.clip(src, 0, max(n - 1, 0))
+    dst_c = jnp.clip(dst, 0, max(n - 1, 0))
+    # dst-major permutation for the Pallas segment-sum (the pool is
+    # src-major): on-device sort-by-key replaces the old host argsort.
+    dst_key = jnp.where(evalid, dst, jnp.int32(n))
+    order = jnp.argsort(dst_key, stable=True)
+    return EngineAux(
+        src_c=src_c,
+        dst_c=dst_c,
+        evalid=evalid,
+        degrees=jnp.diff(g.offsets),
+        dst_sorted=dst_key[order],
+        src_by_dst=src_c[order],
+        valid_by_dst=evalid[order],
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -140,8 +202,9 @@ def _edge_map_step(
         eidx = starts[seg] + (j - prev)
         ev = j < cum[-1]
         eidx = jnp.where(ev, eidx, 0)
-        vs = (keys[eidx] & 0xFFFFFFFF).astype(jnp.int32)
-        vs = jnp.clip(vs, 0, n - 1)
+        vs_raw = keys[eidx] & 0xFFFFFFFF  # int64: no wraparound
+        ev = ev & (vs_raw < n)  # drop edges naming nonexistent vertices
+        vs = jnp.clip(vs_raw.astype(jnp.int32), 0, n - 1)
         us = ids[seg]
         valid = ev & cmask[vs]
         return F(JAX_OPS, state, us, vs, valid)
@@ -168,31 +231,23 @@ class JaxEngine(TraversalEngine):
 
     ops = JAX_OPS
 
-    def __init__(self, g: FlatGraph):
+    def __init__(self, g: FlatGraph, aux: Optional[EngineAux] = None):
         self.g = g
         self._n = g.n
         self._m = int(g.m)
         cap = g.edge_capacity
 
-        keys = np.asarray(g.keys)
-        evalid = np.arange(cap) < self._m
-        src = (keys >> 32).astype(np.int64)
-        dst = (keys & 0xFFFFFFFF).astype(np.int64)
-        self._src_c = jnp.asarray(np.clip(src, 0, self._n - 1).astype(np.int32))
-        self._dst_c = jnp.asarray(np.clip(dst, 0, self._n - 1).astype(np.int32))
-        self._evalid = jnp.asarray(evalid)
-        self._degrees = jnp.diff(g.offsets)
-
-        # dst-major permutation: the pool is src-major, but the Pallas
-        # segment-sum kernel wants destinations sorted — precompute once
-        # per snapshot (host-side; O(m log m)).
-        dst_key = np.where(evalid, dst, self._n)
-        order = np.argsort(dst_key, kind="stable")
-        self._dst_sorted = jnp.asarray(dst_key[order].astype(np.int32))
-        self._src_by_dst = jnp.asarray(
-            np.clip(src, 0, self._n - 1)[order].astype(np.int32)
-        )
-        self._valid_by_dst = jnp.asarray(evalid[order])
+        # all per-snapshot derived state is one jit call (device-resident;
+        # no host loops / argsort) — or passed in, pre-refreshed, by a
+        # version-pinned caller (AspenStream's engine cache).
+        self.aux = engine_aux(g) if aux is None else aux
+        self._src_c = self.aux.src_c
+        self._dst_c = self.aux.dst_c
+        self._evalid = self.aux.evalid
+        self._degrees = self.aux.degrees
+        self._dst_sorted = self.aux.dst_sorted
+        self._src_by_dst = self.aux.src_by_dst
+        self._valid_by_dst = self.aux.valid_by_dst
 
         # static sparse budgets: a frontier routed sparse obeys
         # |U| + deg(U) <= m/20 <= cap/20, so cap-derived budgets bound
@@ -268,3 +323,85 @@ class JaxEngine(TraversalEngine):
     def vertex_map(self, U: JaxVertexSubset, P: Callable, state) -> JaxVertexSubset:
         keep = P(JAX_OPS, state, jnp.arange(self._n, dtype=jnp.int32))
         return JaxVertexSubset(U.dense & keep)
+
+
+# ---------------------------------------------------------------------------
+# whole-graph jit traversals (single compiled step, no host round-trips) —
+# the device-side counterparts of algorithms.py, used where the entire
+# frontier loop must live inside one trace (launch cells, sharded pool).
+# Formerly ad-hoc copies at the bottom of flat_graph.py.
+# ---------------------------------------------------------------------------
+
+
+def _pool_endpoints(g: FlatGraph):
+    """(src_c, dst_c, evalid) without the dst-major sort — the cheap
+    subset of ``engine_aux`` the whole-graph loops need.  Like
+    ``engine_aux``, edges naming a destination outside [0, n) are
+    masked invalid (dropped), never folded into the clipped n-1."""
+    n = g.offsets.shape[0] - 1
+    src, dst = unpack(g.keys)
+    evalid = (jnp.arange(g.keys.shape[0]) < g.m) & (dst >= 0) & (dst < n)
+    return (
+        jnp.clip(src, 0, max(n - 1, 0)),
+        jnp.clip(dst, 0, max(n - 1, 0)),
+        evalid,
+    )
+
+
+@jax.jit
+def dense_expand(g: FlatGraph, frontier: jax.Array) -> jax.Array:
+    """One dense edgeMap expansion: bool[n] frontier -> bool[n] reached.
+
+    Every pool slot looks up whether its source is in the frontier; a
+    segment-or over destinations (one gather + one masked scatter)."""
+    src_c, dst_c, evalid = _pool_endpoints(g)
+    n = g.offsets.shape[0] - 1
+    msg = frontier[src_c] & evalid
+    return jnp.zeros(n, dtype=bool).at[dst_c].max(msg, mode="drop")
+
+
+@jax.jit
+def bfs_levels(g: FlatGraph, source: jax.Array) -> jax.Array:
+    """Full BFS levels via lax.while_loop (fixed-shape iterations)."""
+    aux = _pool_endpoints(g)
+    n = g.offsets.shape[0] - 1
+    levels = jnp.full(n, jnp.int32(-1))
+    levels = levels.at[source].set(0)
+    frontier = jnp.zeros(n, dtype=bool).at[source].set(True)
+
+    def cond(state):
+        frontier, levels, d = state
+        return frontier.any()
+
+    def body(state):
+        frontier, levels, d = state
+        src_c, dst_c, evalid = aux
+        msg = frontier[src_c] & evalid
+        nxt = jnp.zeros(n, dtype=bool).at[dst_c].max(msg, mode="drop")
+        nxt = nxt & (levels < 0)
+        levels = jnp.where(nxt, d + 1, levels)
+        return nxt, levels, d + 1
+
+    _, levels, _ = jax.lax.while_loop(cond, body, (frontier, levels, jnp.int32(0)))
+    return levels
+
+
+@jax.jit
+def cc_labels(g: FlatGraph) -> jax.Array:
+    """Min-label propagation to fixpoint (jit while_loop)."""
+    src_c, dst_c, evalid = _pool_endpoints(g)
+    n = g.offsets.shape[0] - 1
+    labels0 = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(state):
+        labels, changed = state
+        return changed
+
+    def body(state):
+        labels, _ = state
+        msg = jnp.where(evalid, labels[src_c], jnp.int32(np.iinfo(np.int32).max))
+        new = labels.at[dst_c].min(msg, mode="drop")
+        return new, (new != labels).any()
+
+    labels, _ = jax.lax.while_loop(cond, body, (labels0, jnp.bool_(True)))
+    return labels

@@ -16,35 +16,49 @@ Guarantees preserved from the paper:
     live list, letting shared tree nodes be reclaimed) when its refcount
     reaches zero and it is not current — strict serializability holds
     because every query runs against exactly one immutable version.
+
+Dual representations (DESIGN.md §6): a version may carry *auxiliary*
+representations of the same logical graph alongside the primary one —
+e.g. the C-tree ``Graph`` paired with its device-resident ``FlatGraph``
+mirror.  ``set(graph, aux=...)`` publishes them atomically as ONE
+version, so readers always observe a consistent (graph, aux) pair and
+pick their substrate at acquire time with zero rebuild.  Each version
+also owns a ``cache`` dict (version-pinned derived state, e.g. traversal
+engines keyed by backend); the cache — and everything in it — dies with
+the version when the last reference drops, so engine caches can never
+leak across the version lifecycle or outlive their snapshot.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, Dict, Generic, List, Optional, Tuple, TypeVar
+from typing import Any, Callable, Dict, Generic, Optional, TypeVar
 
 G = TypeVar("G")
 
 
 class Version(Generic[G]):
-    __slots__ = ("graph", "stamp", "_refcount")
+    __slots__ = ("graph", "aux", "cache", "stamp", "_refcount", "__weakref__")
 
-    def __init__(self, graph: G, stamp: int):
+    def __init__(self, graph: G, stamp: int, aux: Optional[Dict[str, Any]] = None):
         self.graph = graph
+        self.aux: Dict[str, Any] = aux if aux is not None else {}
+        self.cache: Dict[Any, Any] = {}
         self.stamp = stamp
         self._refcount = 0
 
     def __repr__(self):
-        return f"Version(stamp={self.stamp}, rc={self._refcount})"
+        tags = ",".join(sorted(self.aux)) or "-"
+        return f"Version(stamp={self.stamp}, rc={self._refcount}, aux={tags})"
 
 
 class VersionedGraph(Generic[G]):
     """Multi-version single-writer / multi-reader graph store."""
 
-    def __init__(self, initial: G):
+    def __init__(self, initial: G, aux: Optional[Dict[str, Any]] = None):
         self._lock = threading.Lock()
         self._stamp = 0
         self._versions: Dict[int, Version[G]] = {}
-        self._current = Version(initial, 0)
+        self._current = Version(initial, 0, aux)
         self._versions[0] = self._current
         self._collected = 0
 
@@ -69,11 +83,13 @@ class VersionedGraph(Generic[G]):
             return False
 
     # -- writer interface ---------------------------------------------------
-    def set(self, graph: G) -> Version[G]:
-        """Publish a new version (single writer)."""
+    def set(self, graph: G, aux: Optional[Dict[str, Any]] = None) -> Version[G]:
+        """Publish a new version (single writer).  ``aux`` rides along
+        atomically: readers acquiring the new version see the primary
+        graph and every auxiliary representation together."""
         with self._lock:
             self._stamp += 1
-            nv = Version(graph, self._stamp)
+            nv = Version(graph, self._stamp, aux)
             old = self._current
             self._current = nv
             self._versions[self._stamp] = nv
@@ -87,6 +103,19 @@ class VersionedGraph(Generic[G]):
         v = self.acquire()
         try:
             return self.set(fn(v.graph))
+        finally:
+            self.release(v)
+
+    def update_with_aux(
+        self, fn: Callable[[Version[G]], "tuple[G, Optional[Dict[str, Any]]]"]
+    ) -> Version[G]:
+        """Writer transaction over the full version: ``fn`` sees the held
+        (graph, aux) pair and returns the next one — both published as a
+        single atomic version."""
+        v = self.acquire()
+        try:
+            graph, aux = fn(v)
+            return self.set(graph, aux)
         finally:
             self.release(v)
 

@@ -488,7 +488,9 @@ def _stream_cell(cfg: registry.StreamConfig, shape, mesh, variant: str = "baseli
             meta,
         )
     if kind == "query":
-        step = fg.bfs
+        from repro.core.traversal.jax_backend import bfs_levels
+
+        step = bfs_levels
         src = _sds((), jnp.int32)
         meta = {"model_flops": 0.0, "pool_bytes": cap * 8, "kind": "stream_bfs"}
         return Cell(

@@ -307,3 +307,36 @@ def test_flat_snapshot_caches_m_and_degrees(rmat_graph):
     np.testing.assert_array_equal(snap.degrees, degs)
     assert snap.m == edges.shape[0]
     assert snap.degrees is snap.degrees  # cached, not recomputed
+
+
+# ---------------------------------------------------------------------------
+# jax frontier: one device->host sync per subset (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_jax_subset_size_cached_single_sync(engines):
+    _, eng_jx = engines
+    U = eng_jx.frontier_from_ids([0, 1, 5])
+    assert U._size is None  # lazy: no sync until loop control asks
+    assert U.size == 3
+    assert U._size == 3
+    # cached: later accesses never re-sum the device array
+    U.dense = None  # a re-sum would now raise
+    assert U.size == 3 and not U.empty
+
+
+def test_jax_engine_aux_device_resident(engines):
+    """The per-snapshot precompute is one jit pytree — its arrays live
+    on device and match the pool layout."""
+    import jax
+
+    _, eng_jx = engines
+    aux = eng_jx.aux
+    cap = eng_jx.g.edge_capacity
+    for arr in aux:
+        assert isinstance(arr, jax.Array)
+        assert arr.shape[0] in (cap, eng_jx.n)
+    # dst-major permutation is sorted ascending with padding at the top
+    dst_sorted = np.asarray(aux.dst_sorted)
+    assert (np.diff(dst_sorted) >= 0).all()
+    assert (dst_sorted[int(eng_jx.m):] == eng_jx.n).all()
