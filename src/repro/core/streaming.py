@@ -221,6 +221,33 @@ class AspenStream:
         finally:
             self.release(v)
 
+    def query_batch(self, sources=None, kind: str = "bfs", backend: str = "jax", **kw):
+        """Serve a coalesced batch of queries against ONE version-pinned
+        engine (DESIGN.md §7): many users' pending single-source queries
+        ride a single engine acquire and — on the jax backend — a single
+        in-trace multi-source dispatch, instead of K independent
+        traversals each paying per-round host syncs.
+
+        kinds: ``"bfs"`` -> int64[B, n] parent rows; ``"distances"`` ->
+        int64[B, n] hop counts (landmark rows); ``"bc"`` -> float[B, n]
+        dependency scores; ``"pagerank"`` -> float[B, n] scores for the
+        personalization rows passed as ``resets`` (``sources`` unused).
+        Extra kwargs are forwarded to the traversal-layer ``*_multi``.
+        """
+        from .traversal import algorithms as talg
+
+        eng = self.engine(backend)
+        if kind == "pagerank":
+            return talg.pagerank_multi(eng, **kw)
+        sources = np.asarray(sources, dtype=np.int64).reshape(-1)
+        if kind == "bfs":
+            return talg.bfs_multi(eng, sources, **kw)[0]
+        if kind == "distances":
+            return talg.landmark_distances(eng, sources, **kw)
+        if kind == "bc":
+            return talg.bc_multi(eng, sources, **kw)
+        raise ValueError(f"unknown query kind {kind!r}")
+
 
 class ConcurrentStats(NamedTuple):
     updates_per_sec: float
@@ -229,6 +256,7 @@ class ConcurrentStats(NamedTuple):
     query_latency_isolated_s: float
     n_updates: int
     n_queries: int
+    queries_per_sec: float = 0.0  # single-source queries served / reader-busy s
 
 
 def run_concurrent(
@@ -239,6 +267,7 @@ def run_concurrent(
     batch_size: int = 1,
     symmetric: bool = True,
     engine_backend: Optional[str] = None,
+    queries_per_call: int = 1,
 ) -> ConcurrentStats:
     """Paper §7.3: writer applies updates one batch at a time while a
     reader repeatedly runs query_fn against fresh snapshots.
@@ -246,6 +275,12 @@ def run_concurrent(
     ``query_fn`` receives a ``FlatSnapshot`` per query by default; pass
     ``engine_backend`` ("numpy"/"jax") to hand it the stream's cached
     traversal engine instead (the dual-representation serve path).
+
+    ``queries_per_call`` declares how many user queries one ``query_fn``
+    invocation serves (a batched reader passes e.g. a ``bfs_multi``
+    over B sources and ``queries_per_call=B``), so the reported
+    ``queries_per_sec`` measures batched vs. serial query throughput on
+    equal terms.
 
     ``symmetric`` is forwarded to the insert/delete calls; the reported
     throughput counts the directed edges actually applied (2x the batch
@@ -311,7 +346,8 @@ def run_concurrent(
         query_latency_concurrent_s=float(np.mean(q_lat)) if q_lat else 0.0,
         query_latency_isolated_s=float(np.mean(iso)),
         n_updates=n_upd[0],
-        n_queries=len(q_lat),
+        n_queries=len(q_lat) * queries_per_call,
+        queries_per_sec=len(q_lat) * queries_per_call / max(sum(q_lat), 1e-9),
     )
 
 

@@ -16,7 +16,14 @@ Quick start::
 from __future__ import annotations
 
 from . import algorithms
-from .base import DENSE_THRESHOLD_DENOM, ArrayOps, TraversalEngine, dense_threshold
+from .base import (
+    DENSE_THRESHOLD_DENOM,
+    HOST_SYNCS,
+    ArrayOps,
+    Counter,
+    TraversalEngine,
+    dense_threshold,
+)
 from .numpy_backend import (
     NumpyEngine,
     VertexSubset,
@@ -44,24 +51,14 @@ __all__ = [
     "make_engine",
     "flat_graph_of",
     "FLAT_REBUILDS",
+    "HOST_SYNCS",
 ]
 
 
-class _RebuildCounter:
-    """Counts FlatSnapshot -> FlatGraph host rebuilds (the O(m) path the
-    resident mirror exists to avoid).  Tests spy on ``count`` to assert
-    the mirror's engine path never falls back to a rebuild."""
-
-    __slots__ = ("count",)
-
-    def __init__(self):
-        self.count = 0
-
-    def bump(self) -> None:
-        self.count += 1
-
-
-FLAT_REBUILDS = _RebuildCounter()
+# Counts FlatSnapshot -> FlatGraph host rebuilds (the O(m) path the
+# resident mirror exists to avoid).  Tests spy on ``count`` to assert
+# the mirror's engine path never falls back to a rebuild.
+FLAT_REBUILDS = Counter()
 
 
 def __getattr__(name):

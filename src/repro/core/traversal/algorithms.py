@@ -5,10 +5,18 @@ One algorithm text per problem; the engine handle picks the substrate
 module-level so the jax backend's jit cache is keyed stably (a closure
 redefined per call would recompile every invocation).
 
-All algorithms python-loop over rounds; each round is one engine
-``edge_map`` (on jax: one compiled fixed-shape step), which is the
-paper's frontier-synchronous model.  Results come back as host numpy
-arrays.
+All single-source algorithms python-loop over rounds; each round is one
+engine ``edge_map`` (on jax: one compiled fixed-shape step), which is
+the paper's frontier-synchronous model.  Results come back as host
+numpy arrays.
+
+The ``*_multi`` variants serve a BATCH of queries against one snapshot:
+on backends with in-trace drivers (``engine.bfs_batch`` /
+``engine.bc_batch`` / ``engine.edge_map_reduce_batch``, the jax
+backend) the whole multi-source traversal is one device dispatch with
+O(1) host syncs; elsewhere they fall back to a per-source python loop,
+so the SAME call site serves both substrates (the one-algorithm-text
+contract, extended to batches).
 """
 from __future__ import annotations
 
@@ -53,6 +61,43 @@ def bfs(engine: TraversalEngine, src: int, direction_optimize: bool = True) -> n
             direction_optimize=direction_optimize,
         )
     return engine.to_host(parents)
+
+
+def bfs_multi(
+    engine: TraversalEngine, sources, direction_optimize: bool = True
+) -> tuple:
+    """Multi-source BFS: ``(parents, depths)``, each int64[B, n].
+
+    With ``direction_optimize`` on an engine exposing ``bfs_batch``
+    (jax), all B traversals run as ONE in-trace dispatch; otherwise B
+    serial ``bfs`` calls (the numpy fallback).  Parents agree between
+    the two paths: both resolve write contention with the same
+    max-parent rule."""
+    sources = np.asarray(sources, dtype=np.int64).reshape(-1)
+    n = engine.n
+    batch = getattr(engine, "bfs_batch", None)
+    if batch is not None and direction_optimize and sources.size:
+        parents, depths = batch(sources)
+        return (
+            engine.to_host(parents).astype(np.int64),
+            engine.to_host(depths).astype(np.int64),
+        )
+    ps, ds = [], []
+    for s in sources:
+        p = bfs(engine, int(s), direction_optimize=direction_optimize)
+        ps.append(np.asarray(p, dtype=np.int64))
+        ds.append(bfs_depths(p, int(s)))
+    empty = np.empty((0, n), np.int64)
+    return (np.stack(ps) if ps else empty, np.stack(ds) if ds else empty)
+
+
+def landmark_distances(
+    engine: TraversalEngine, landmarks, direction_optimize: bool = True
+) -> np.ndarray:
+    """Hop-distance rows int64[B, n] from each landmark (-1 =
+    unreached): the distance-sketch building block — B columns of a
+    landmark/distance-oracle table in one batched traversal."""
+    return bfs_multi(engine, landmarks, direction_optimize=direction_optimize)[1]
 
 
 def bfs_depths(parents: np.ndarray, src: int) -> np.ndarray:
@@ -143,6 +188,39 @@ def pagerank(
     return engine.to_host(pr)
 
 
+def pagerank_multi(
+    engine: TraversalEngine,
+    resets=None,
+    iters: int = 10,
+    damping: float = 0.85,
+) -> np.ndarray:
+    """B PageRank queries against one snapshot: float[B, n].
+
+    ``resets`` is a (B, n) batch of personalization rows (each summing
+    to 1); ``None`` runs one uniform row (global PageRank, matching
+    ``pagerank``).  Dangling mass is redistributed by each lane's reset
+    row — with the uniform row that reduces exactly to ``pagerank``'s
+    ``/ n`` term.  Every iteration pushes ALL lanes through one
+    ``edge_map_reduce_batch`` (on jax: one Pallas segment-sum whose
+    feature dim carries the lanes)."""
+    xp = engine.ops.xp
+    fdt = engine.ops.float_dtype
+    n = engine.n
+    deg = engine.degrees.astype(fdt)
+    dangling = deg == 0
+    if resets is None:
+        resets = xp.full((1, n), 1.0 / n, dtype=fdt)
+    else:
+        resets = xp.asarray(resets, dtype=fdt)
+    pr = resets
+    for _ in range(iters):
+        w = pr / xp.maximum(deg, 1.0)[None, :]
+        contrib = engine.edge_map_reduce_batch(w).astype(fdt)
+        dang = xp.where(dangling[None, :], pr, 0.0).sum(axis=1, keepdims=True)
+        pr = (1.0 - damping) * resets + damping * (contrib + dang * resets)
+    return engine.to_host(pr)
+
+
 # ---------------------------------------------------------------------------
 # Betweenness centrality (Brandes, single source; paper §7 "BC")
 # ---------------------------------------------------------------------------
@@ -210,3 +288,20 @@ def bc(engine: TraversalEngine, src: int, direction_optimize: bool = True) -> np
         dep = state[0]
     dep = ops.set_at(dep, _as_index(ops, src), 0.0)
     return engine.to_host(dep)
+
+
+def bc_multi(engine: TraversalEngine, sources) -> np.ndarray:
+    """B single-source BC queries: dependency scores float64[B, n].
+
+    Uses the engine's in-trace ``bc_batch`` driver when available (jax:
+    one dispatch per Brandes phase); otherwise B serial ``bc`` calls.
+    The two paths agree to float32 tolerance (the batched pull rounds
+    reduce via segmented scans rather than scatter-adds, so float
+    summation order differs)."""
+    sources = np.asarray(sources, dtype=np.int64).reshape(-1)
+    batch = getattr(engine, "bc_batch", None)
+    if batch is not None and sources.size:
+        return engine.to_host(batch(sources)).astype(np.float64)
+    if not sources.size:
+        return np.empty((0, engine.n), np.float64)
+    return np.stack([np.asarray(bc(engine, int(s)), np.float64) for s in sources])

@@ -33,9 +33,30 @@ An engine exposes:
                       semiring: out[v] = sum_{u->v} values[u].  This is
                       PageRank's whole inner loop; the jax backend
                       lowers it to kernels/segment_reduce.py.
+  edge_map_reduce_batch(values)
+                      the same reduce over a (B, n) batch of value rows
+                      (one lane per query).  The base class loops over
+                      ``edge_map_reduce``; the jax backend runs all B
+                      lanes through ONE Pallas segment-sum call.
   vertex_map(U, P, state)
                       VERTEXMAP: filter U by predicate P.
   to_host(x)          any backend array -> np.ndarray
+
+Batched multi-source queries
+----------------------------
+Backends MAY additionally expose in-trace batched drivers:
+
+  bfs_batch(sources)  -> (parents, depths), each (B, n)
+  bc_batch(sources)   -> dependency scores (B, n)
+
+where a whole multi-source traversal (every frontier round of every
+lane) runs as ONE device dispatch with O(1) host syncs total, instead
+of D serial round-trip-synced steps per source.  The backend-generic
+wrappers in ``algorithms.py`` (``bfs_multi`` / ``bc_multi`` /
+``landmark_distances`` / ``pagerank_multi``) dispatch to these via
+``getattr`` and fall back to a per-source python loop, so the same
+call site serves both substrates.  ``HOST_SYNCS`` below is the spy
+counter tests use to pin the O(1)-sync contract.
 
 F and C are *pure, functional* callbacks written against ``ops`` (which
 is numpy-or-jnp, so one definition serves both backends):
@@ -61,6 +82,25 @@ import numpy as np
 # Ligra/Beamer direction-optimization threshold: dense when
 # |U| + deg(U) > m / DENSE_THRESHOLD_DENOM (paper §5.1).
 DENSE_THRESHOLD_DENOM = 20
+
+
+class Counter:
+    """A spy counter tests assert against (FLAT_REBUILDS, HOST_SYNCS)."""
+
+    __slots__ = ("count",)
+
+    def __init__(self):
+        self.count = 0
+
+    def bump(self) -> None:
+        self.count += 1
+
+
+# Counts blocking device->host syncs issued by the traversal layer (jax
+# frontier-size probes, result fetches).  A serial BFS pays one sync per
+# round per query; the batched in-trace drivers pay O(1) per BATCH —
+# tests spy on this to pin that contract.
+HOST_SYNCS = Counter()
 
 
 class ArrayOps:
@@ -129,6 +169,13 @@ class TraversalEngine:
 
     def edge_map_reduce(self, values):  # pragma: no cover - interface
         raise NotImplementedError
+
+    def edge_map_reduce_batch(self, values):
+        """(B, n) value rows -> (B, n) reduced rows.  Default: loop the
+        scalar reduce per lane (the numpy fallback); backends with a
+        batched kernel path override this."""
+        xp = self.ops.xp
+        return xp.stack([self.edge_map_reduce(v) for v in values])
 
     def vertex_map(self, U, P: Callable, state):  # pragma: no cover
         raise NotImplementedError

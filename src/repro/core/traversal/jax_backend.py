@@ -22,6 +22,31 @@ the jit step as a ``lax.cond``, so one compiled step serves both
 directions; the sparse branch's static budgets are sized from the
 threshold (a frontier routed sparse can never exceed cap/20 ids or
 pool-capacity/20 edges).
+
+Batched multi-source queries (DESIGN.md §7)
+-------------------------------------------
+``_edge_map_step_batch`` generalizes the step over a ``(B, n)``
+frontier batch: the per-lane Beamer rule feeds a *batched* ``lax.cond``
+(any over-threshold lane routes the whole round dense — dense is
+correct for every frontier size, while the sparse budgets only hold for
+under-threshold lanes), so exactly one branch executes per round.  The
+in-trace drivers ``bfs_batch`` / ``bc_batch`` fuse whole frontier loops
+into one ``lax.while_loop`` — a multi-source traversal is ONE device
+dispatch with ONE final sync instead of D·B round-trip-synced steps —
+and their pull rounds are the (or, and)/(+, x) semiring
+specializations of the dense direction: a segmented row-cumsum over the
+dst-major pool (scatter-free; the batched analogue of
+``edge_map_reduce``).
+
+Precision contract: the engine computes in ``float32`` by default —
+the TPU-native dtype, and what the kernel reduce always accumulated in
+anyway (the old ``float_dtype = jnp.float64`` default contradicted the
+hardcoded f32 cast in ``_reduce_msgs``, and outside this repo — which
+enables ``jax_enable_x64`` globally for the packed int64 keys — it
+would silently downcast to f32).  Pass ``float_dtype=jnp.float64`` to
+``JaxEngine`` for double-precision state arrays AND reduce
+accumulation (requires x64; repro enables it).  Cross-backend parity
+versus the float64 numpy engine is to float32 tolerance by default.
 """
 from __future__ import annotations
 
@@ -35,13 +60,31 @@ import numpy as np
 from repro.kernels import ops as kops
 
 from ..flat_graph import FlatGraph, unpack
-from .base import DENSE_THRESHOLD_DENOM, ArrayOps, TraversalEngine
+from .base import DENSE_THRESHOLD_DENOM, HOST_SYNCS, ArrayOps, TraversalEngine
 
 
 class JaxOps(ArrayOps):
+    """Functional array helpers for jit-traced F/C callbacks.
+
+    ``float_dtype`` defaults to float32 — the engine's explicit compute
+    dtype (see the module docstring's precision contract).  Instances
+    hash/compare by dtype so they can be jit-static arguments without
+    fragmenting the trace cache across engines.
+    """
+
     xp = jnp
     int_dtype = jnp.int32
-    float_dtype = jnp.float64
+
+    def __init__(self, float_dtype=jnp.float32):
+        self.float_dtype = float_dtype
+
+    def __eq__(self, other):
+        return type(other) is type(self) and (
+            np.dtype(other.float_dtype) == np.dtype(self.float_dtype)
+        )
+
+    def __hash__(self):
+        return hash((type(self), np.dtype(self.float_dtype).name))
 
     def set_at(self, arr, idx, vals):
         return arr.at[idx].set(vals)
@@ -87,6 +130,7 @@ class JaxVertexSubset:
     @property
     def size(self) -> int:
         if self._size is None:
+            HOST_SYNCS.bump()
             self._size = int(self.dense.sum())
         return self._size
 
@@ -116,7 +160,9 @@ class EngineAux(NamedTuple):
     Refreshing it is ONE fixed-shape jit call — no host loops, no host
     argsort — so an engine over a freshly-merged mirror costs O(cap)
     device work instead of the old O(m log m) host precompute, and the
-    pytree itself can be version-pinned and reused across queries.
+    pytree itself can be version-pinned and reused across queries (the
+    whole-graph loops and batched drivers below all accept it
+    prebuilt).
     """
 
     src_c: jax.Array  # int32[cap] clipped sources
@@ -126,32 +172,49 @@ class EngineAux(NamedTuple):
     dst_sorted: jax.Array  # int32[cap] destinations ascending (pad=n)
     src_by_dst: jax.Array  # int32[cap] sources permuted dst-major
     valid_by_dst: jax.Array  # bool[cap]
+    dst_offsets: jax.Array  # int32[n+1] segment bounds into dst_sorted
+
+
+def _pool_endpoints(g: FlatGraph):
+    """(src_c, dst_c, evalid): the clipped-endpoint subset of
+    ``EngineAux`` (shared by ``engine_aux`` and, as a fallback when no
+    prebuilt aux is supplied, by the whole-graph loops).  A slot is
+    usable iff it holds a real edge AND its destination is a real
+    vertex: an asymmetric stream can store an edge naming a
+    never-source vertex id >= n, and every query direction must DROP it
+    (not fold it into the clipped n-1)."""
+    n = g.offsets.shape[0] - 1
+    src, dst = unpack(g.keys)
+    evalid = (jnp.arange(g.keys.shape[0]) < g.m) & (dst >= 0) & (dst < n)
+    return (
+        jnp.clip(src, 0, max(n - 1, 0)),
+        jnp.clip(dst, 0, max(n - 1, 0)),
+        evalid,
+    )
 
 
 @jax.jit
 def engine_aux(g: FlatGraph) -> EngineAux:
     n = g.offsets.shape[0] - 1
-    cap = g.keys.shape[0]
-    src, dst = unpack(g.keys)
-    # a slot is usable iff it holds a real edge AND its destination is a
-    # real vertex: an asymmetric stream can store an edge naming a
-    # never-source vertex id >= n, and every query direction must DROP
-    # it (not fold it into the clipped n-1).
-    evalid = (jnp.arange(cap) < g.m) & (dst >= 0) & (dst < n)
-    src_c = jnp.clip(src, 0, max(n - 1, 0))
-    dst_c = jnp.clip(dst, 0, max(n - 1, 0))
-    # dst-major permutation for the Pallas segment-sum (the pool is
-    # src-major): on-device sort-by-key replaces the old host argsort.
-    dst_key = jnp.where(evalid, dst, jnp.int32(n))
+    src_c, dst_c, evalid = _pool_endpoints(g)
+    # dst-major permutation for the Pallas segment-sum and the batched
+    # pull rounds (the pool is src-major): on-device sort-by-key
+    # replaces the old host argsort.  valid => dst == dst_c, so the
+    # clipped endpoints are exact here.
+    dst_key = jnp.where(evalid, dst_c, jnp.int32(n))
     order = jnp.argsort(dst_key, stable=True)
+    dst_sorted = dst_key[order]
     return EngineAux(
         src_c=src_c,
         dst_c=dst_c,
         evalid=evalid,
         degrees=jnp.diff(g.offsets),
-        dst_sorted=dst_key[order],
+        dst_sorted=dst_sorted,
         src_by_dst=src_c[order],
         valid_by_dst=evalid[order],
+        dst_offsets=jnp.searchsorted(
+            dst_sorted, jnp.arange(n + 1, dtype=jnp.int32)
+        ).astype(jnp.int32),
     )
 
 
@@ -160,9 +223,33 @@ def engine_aux(g: FlatGraph) -> EngineAux:
 # ---------------------------------------------------------------------------
 
 
+def _sparse_expand(offsets, keys, U, n: int, ids_budget: int, edge_budget: int):
+    """Fixed-shape push expansion of one bool[n] frontier:
+    (us, vs, ev) edge lanes where ``ev`` masks the padded tail and
+    edges naming nonexistent destination vertices."""
+    ids_raw = jnp.nonzero(U, size=ids_budget, fill_value=n)[0]
+    vid = ids_raw < n
+    ids = jnp.where(vid, ids_raw, 0).astype(jnp.int32)
+    starts = offsets[ids].astype(jnp.int64)
+    degs = jnp.where(vid, (offsets[ids + 1] - offsets[ids]), 0).astype(jnp.int64)
+    cum = jnp.cumsum(degs)
+    j = jnp.arange(edge_budget, dtype=jnp.int64)
+    seg = jnp.searchsorted(cum, j, side="right")
+    seg = jnp.clip(seg, 0, ids_budget - 1)
+    prev = jnp.where(seg > 0, cum[jnp.maximum(seg - 1, 0)], 0)
+    eidx = starts[seg] + (j - prev)
+    ev = j < cum[-1]
+    eidx = jnp.where(ev, eidx, 0)
+    vs_raw = keys[eidx] & 0xFFFFFFFF  # int64: no wraparound
+    ev = ev & (vs_raw < n)  # drop edges naming nonexistent vertices
+    vs = jnp.clip(vs_raw.astype(jnp.int32), 0, n - 1)
+    us = ids[seg]
+    return us, vs, ev
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("F", "C", "mode", "n", "ids_budget", "edge_budget"),
+    static_argnames=("F", "C", "mode", "n", "ids_budget", "edge_budget", "ops"),
 )
 def _edge_map_step(
     offsets,  # int32[n+1]
@@ -181,33 +268,17 @@ def _edge_map_step(
     n: int,
     ids_budget: int,
     edge_budget: int,
+    ops: JaxOps = JAX_OPS,
 ):
-    cmask = C(JAX_OPS, state, jnp.arange(n, dtype=jnp.int32))
+    cmask = C(ops, state, jnp.arange(n, dtype=jnp.int32))
 
     def dense_branch(state):
         valid = evalid & U[src_c] & cmask[dst_c]
-        return F(JAX_OPS, state, src_c, dst_c, valid)
+        return F(ops, state, src_c, dst_c, valid)
 
     def sparse_branch(state):
-        ids_raw = jnp.nonzero(U, size=ids_budget, fill_value=n)[0]
-        vid = ids_raw < n
-        ids = jnp.where(vid, ids_raw, 0).astype(jnp.int32)
-        starts = offsets[ids].astype(jnp.int64)
-        degs = jnp.where(vid, (offsets[ids + 1] - offsets[ids]), 0).astype(jnp.int64)
-        cum = jnp.cumsum(degs)
-        j = jnp.arange(edge_budget, dtype=jnp.int64)
-        seg = jnp.searchsorted(cum, j, side="right")
-        seg = jnp.clip(seg, 0, ids_budget - 1)
-        prev = jnp.where(seg > 0, cum[jnp.maximum(seg - 1, 0)], 0)
-        eidx = starts[seg] + (j - prev)
-        ev = j < cum[-1]
-        eidx = jnp.where(ev, eidx, 0)
-        vs_raw = keys[eidx] & 0xFFFFFFFF  # int64: no wraparound
-        ev = ev & (vs_raw < n)  # drop edges naming nonexistent vertices
-        vs = jnp.clip(vs_raw.astype(jnp.int32), 0, n - 1)
-        us = ids[seg]
-        valid = ev & cmask[vs]
-        return F(JAX_OPS, state, us, vs, valid)
+        us, vs, ev = _sparse_expand(offsets, keys, U, n, ids_budget, edge_budget)
+        return F(ops, state, us, vs, ev & cmask[vs])
 
     if mode == "dense":
         state, out = dense_branch(state)
@@ -221,21 +292,242 @@ def _edge_map_step(
     return state, out
 
 
-@jax.jit
-def _reduce_msgs(values, src_by_dst, valid_by_dst):
-    return jnp.where(valid_by_dst, values[src_by_dst], 0.0).astype(jnp.float32)
+@functools.partial(
+    jax.jit,
+    static_argnames=("F", "C", "mode", "n", "ids_budget", "edge_budget", "ops"),
+)
+def _edge_map_step_batch(
+    offsets,
+    keys,
+    src_c,
+    dst_c,
+    evalid,
+    degrees,
+    m,
+    U_b,  # bool[B, n] frontier batch (one lane per query)
+    state_b,  # pytree with (B, ...) leaves
+    *,
+    F: Callable,
+    C: Callable,
+    mode: str,
+    n: int,
+    ids_budget: int,
+    edge_budget: int,
+    ops: JaxOps = JAX_OPS,
+):
+    """The edgeMap step vmapped over a (B, n) frontier batch.
+
+    Direction optimization becomes a *batched* cond: the per-lane
+    Beamer rule is evaluated for every lane, and the round routes dense
+    iff ANY lane is over threshold — dense is correct for any frontier
+    size, while the sparse budgets only bound under-threshold lanes, so
+    this is the exact aggregate of the per-lane rule that still
+    executes exactly one branch (a per-lane select would pay for both
+    branches on every round)."""
+
+    def dense_lane(U, state):
+        cmask = C(ops, state, jnp.arange(n, dtype=jnp.int32))
+        valid = evalid & U[src_c] & cmask[dst_c]
+        return F(ops, state, src_c, dst_c, valid)
+
+    def sparse_lane(U, state):
+        cmask = C(ops, state, jnp.arange(n, dtype=jnp.int32))
+        us, vs, ev = _sparse_expand(offsets, keys, U, n, ids_budget, edge_budget)
+        return F(ops, state, us, vs, ev & cmask[vs])
+
+    if mode == "dense":
+        return jax.vmap(dense_lane)(U_b, state_b)
+    if mode == "sparse":
+        return jax.vmap(sparse_lane)(U_b, state_b)
+    size_b = U_b.sum(axis=1)
+    deg_b = jnp.where(U_b, degrees[None, :], 0).sum(axis=1)
+    use_dense = (size_b + deg_b) > jnp.maximum(1, m // DENSE_THRESHOLD_DENOM)
+    return jax.lax.cond(
+        use_dense.any(),
+        lambda s: jax.vmap(dense_lane)(U_b, s),
+        lambda s: jax.vmap(sparse_lane)(U_b, s),
+        state_b,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def _reduce_msgs(values, src_by_dst, valid_by_dst, dtype=jnp.float32):
+    return jnp.where(valid_by_dst, values[src_by_dst], 0.0).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def _reduce_msgs_batch(values_b, src_by_dst, valid_by_dst, dtype=jnp.float32):
+    # (B, n) value rows -> (cap, B) dst-major message columns
+    return jnp.where(valid_by_dst[None, :], values_b[:, src_by_dst], 0.0).T.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# in-trace batched drivers: whole multi-source traversals, ONE dispatch
+# ---------------------------------------------------------------------------
+
+
+def _segsum_rows(msg_b: jax.Array, bounds: jax.Array) -> jax.Array:
+    """Row-wise segmented sum over a contiguously-segmented axis:
+    (B, cap) messages + int32[S+1] segment bounds -> (B, S) sums.
+
+    cumsum + boundary-difference instead of a scatter: XLA scatters
+    serialize per element (they are the batched drivers' bottleneck on
+    CPU), while a row cumsum and two gathers vectorize on any backend.
+    The pool IS the segmentation: src-major segments are ``g.offsets``,
+    dst-major segments are ``aux.dst_offsets``."""
+    csum = jnp.cumsum(msg_b, axis=1)
+    z = jnp.zeros((msg_b.shape[0], 1), csum.dtype)
+    padded = jnp.concatenate([z, csum], axis=1)
+    return padded[:, bounds[1:]] - padded[:, bounds[:-1]]
+
+
+@functools.partial(jax.jit, static_argnames=("ids_budget", "edge_budget"))
+def bfs_batch(
+    g: FlatGraph,
+    aux: EngineAux,
+    sources: jax.Array,  # int32[B], each in [0, n)
+    *,
+    ids_budget: int,
+    edge_budget: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Multi-source direction-optimized BFS, fully in-trace.
+
+    Returns ``(parents, depths)`` int32[B, n] (-1 = unreached; a
+    source's parent is itself).  The whole frontier loop of all B lanes
+    is one ``lax.while_loop`` — one device dispatch, zero per-round
+    host syncs.  Per round the batched Beamer rule picks push
+    (budget-bounded vmapped expand) or pull; the pull round is the
+    (or, and) semiring specialization of the dense direction — a
+    segmented row-cumsum over the dst-major pool, no scatter.  Parents
+    are assigned in ONE masked scatter-max pass at the end
+    (parent(v) = max u with depth(u) = depth(v) - 1 and u->v — exactly
+    the per-round max-contention rule of ``_bfs_relax``), instead of a
+    cap-sized scatter per round."""
+    n = g.offsets.shape[0] - 1
+    cap = g.keys.shape[0]
+    B = sources.shape[0]
+    lane = jnp.arange(B)
+    sources = sources.astype(jnp.int32)
+    depths = jnp.full((B, n), -1, jnp.int32).at[lane, sources].set(0)
+    frontier = jnp.zeros((B, n), bool).at[lane, sources].set(True)
+    thresh = jnp.maximum(1, g.m // DENSE_THRESHOLD_DENOM)
+
+    def push(f_b):
+        def one(U):
+            us, vs, ev = _sparse_expand(g.offsets, g.keys, U, n, ids_budget, edge_budget)
+            return jnp.zeros(n, bool).at[jnp.where(ev, vs, n)].max(True, mode="drop")
+
+        return jax.vmap(one)(f_b)
+
+    def pull(f_b):
+        msg = (f_b[:, aux.src_by_dst] & aux.valid_by_dst[None, :]).astype(jnp.int32)
+        return _segsum_rows(msg, aux.dst_offsets) > 0
+
+    def cond(carry):
+        return carry[0].any()
+
+    def body(carry):
+        f, dep, d = carry
+        size_b = f.sum(axis=1)
+        deg_b = jnp.where(f, aux.degrees[None, :], 0).sum(axis=1)
+        reached = jax.lax.cond(((size_b + deg_b) > thresh).any(), pull, push, f)
+        newly = reached & (dep < 0)
+        return newly, jnp.where(newly, d + 1, dep), d + 1
+
+    _, depths, _ = jax.lax.while_loop(cond, body, (frontier, depths, jnp.int32(0)))
+
+    du = depths[:, aux.src_c]
+    dv = depths[:, aux.dst_c]
+    ok = aux.evalid[None, :] & (du >= 0) & (dv == du + 1)
+    safe = jnp.where(ok, aux.dst_c[None, :], n)
+    cand = jnp.full((B, n), -1, jnp.int32).at[lane[:, None], safe].max(
+        jnp.broadcast_to(aux.src_c[None, :], (B, cap)), mode="drop"
+    )
+    vid = jnp.arange(n, dtype=jnp.int32)[None, :]
+    parents = jnp.where(depths == 0, vid, jnp.where(depths > 0, cand, -1))
+    return parents, depths
+
+
+@functools.partial(jax.jit, static_argnames=("float_dtype",))
+def bc_batch(
+    g: FlatGraph,
+    aux: EngineAux,
+    sources: jax.Array,  # int32[B], each in [0, n)
+    *,
+    float_dtype=jnp.float32,
+) -> jax.Array:
+    """Multi-source Brandes betweenness contributions, fully in-trace.
+
+    Returns dependency scores float[B, n].  Forward pass: sigma
+    accumulates per-round shortest-path counts via the (+, x) segmented
+    row-cumsum over the dst-major pool; backward pass walks depths from
+    the deepest round down, accumulating dependencies per SOURCE — the
+    src-major pool is already the CSR segmentation, so that reduce is
+    scatter-free too.  Lanes with shallower BFS trees see empty
+    frontiers on the extra rounds (no-ops), which keeps both loops as
+    single ``lax.while_loop``s over the whole batch."""
+    n = g.offsets.shape[0] - 1
+    B = sources.shape[0]
+    lane = jnp.arange(B)
+    sources = sources.astype(jnp.int32)
+    sigma = jnp.zeros((B, n), float_dtype).at[lane, sources].set(1.0)
+    depth = jnp.full((B, n), -1, jnp.int32).at[lane, sources].set(0)
+    frontier = jnp.zeros((B, n), bool).at[lane, sources].set(True)
+
+    def fcond(carry):
+        return carry[0].any()
+
+    def fbody(carry):
+        f, sig, dep, d = carry
+        w = jnp.where(
+            f[:, aux.src_by_dst] & aux.valid_by_dst[None, :],
+            sig[:, aux.src_by_dst],
+            jnp.zeros((), float_dtype),
+        )
+        contrib = _segsum_rows(w, aux.dst_offsets)
+        newly = (contrib > 0) & (dep < 0)
+        sig = sig + jnp.where(newly, contrib, 0)
+        return newly, sig, jnp.where(newly, d + 1, dep), d + 1
+
+    _, sigma, depth, d_final = jax.lax.while_loop(
+        fcond, fbody, (frontier, sigma, depth, jnp.int32(0))
+    )
+
+    du = depth[:, aux.src_c]
+    dv = depth[:, aux.dst_c]
+
+    def bcond(carry):
+        return carry[1] >= 0
+
+    def bbody(carry):
+        dep_acc, dd = carry
+        ok = aux.evalid[None, :] & (du == dd) & (dv == dd + 1)
+        ratio = sigma[:, aux.src_c] / jnp.maximum(sigma[:, aux.dst_c], 1e-30)
+        contrib = jnp.where(ok, ratio * (1.0 + dep_acc[:, aux.dst_c]), 0)
+        return dep_acc + _segsum_rows(contrib, g.offsets), dd - 1
+
+    dep, _ = jax.lax.while_loop(
+        bcond, bbody, (jnp.zeros((B, n), float_dtype), d_final - 2)
+    )
+    return dep.at[lane, sources].set(0.0)
 
 
 class JaxEngine(TraversalEngine):
     """Engine over an (immutable) ``FlatGraph`` snapshot."""
 
-    ops = JAX_OPS
-
-    def __init__(self, g: FlatGraph, aux: Optional[EngineAux] = None):
+    def __init__(
+        self,
+        g: FlatGraph,
+        aux: Optional[EngineAux] = None,
+        float_dtype=None,
+    ):
         self.g = g
         self._n = g.n
         self._m = int(g.m)
         cap = g.edge_capacity
+        # explicit compute dtype (float32 default — see the module
+        # docstring's precision contract)
+        self.ops = JAX_OPS if float_dtype is None else JaxOps(float_dtype)
 
         # all per-snapshot derived state is one jit call (device-resident;
         # no host loops / argsort) — or passed in, pre-refreshed, by a
@@ -248,6 +540,7 @@ class JaxEngine(TraversalEngine):
         self._dst_sorted = self.aux.dst_sorted
         self._src_by_dst = self.aux.src_by_dst
         self._valid_by_dst = self.aux.valid_by_dst
+        self._dst_offsets = self.aux.dst_offsets
 
         # static sparse budgets: a frontier routed sparse obeys
         # |U| + deg(U) <= m/20 <= cap/20, so cap-derived budgets bound
@@ -278,6 +571,11 @@ class JaxEngine(TraversalEngine):
     def frontier_from_dense(self, mask) -> JaxVertexSubset:
         return JaxVertexSubset(jnp.asarray(mask, dtype=bool))
 
+    def _budgets(self, mode: str) -> Tuple[int, int]:
+        if mode == "sparse":
+            return self._full_ids_budget, self._full_edge_budget
+        return self._auto_ids_budget, self._auto_edge_budget
+
     # -- edgeMap ------------------------------------------------------------
     def edge_map(
         self,
@@ -290,10 +588,7 @@ class JaxEngine(TraversalEngine):
     ) -> Tuple[JaxVertexSubset, object]:
         if mode == "auto" and not direction_optimize:
             mode = "sparse"
-        if mode == "sparse":
-            ids_b, edge_b = self._full_ids_budget, self._full_edge_budget
-        else:
-            ids_b, edge_b = self._auto_ids_budget, self._auto_edge_budget
+        ids_b, edge_b = self._budgets(mode)
         state, out = _edge_map_step(
             self.g.offsets,
             self.g.keys,
@@ -310,60 +605,147 @@ class JaxEngine(TraversalEngine):
             n=self._n,
             ids_budget=ids_b,
             edge_budget=edge_b,
+            ops=self.ops,
         )
         return JaxVertexSubset(out), state
 
+    def edge_map_batch(
+        self,
+        U_b,  # bool[B, n] frontier batch
+        F: Callable,
+        C: Callable,
+        state_b,  # pytree with (B, ...) leaves
+        direction_optimize: bool = True,
+        mode: str = "auto",
+    ):
+        """One edgeMap round for B independent frontier lanes: returns
+        ``(out_b, state_b')`` where ``out_b`` is the bool[B, n] next
+        frontier batch.  Frontiers and state are raw batched arrays
+        (not VertexSubsets): batched callers thread them through
+        in-trace loops and sync once at the end."""
+        if mode == "auto" and not direction_optimize:
+            mode = "sparse"
+        ids_b, edge_b = self._budgets(mode)
+        state_b, out = _edge_map_step_batch(
+            self.g.offsets,
+            self.g.keys,
+            self._src_c,
+            self._dst_c,
+            self._evalid,
+            self._degrees,
+            self.g.m,
+            jnp.asarray(U_b, dtype=bool),
+            state_b,
+            F=F,
+            C=C,
+            mode=mode,
+            n=self._n,
+            ids_budget=ids_b,
+            edge_budget=edge_b,
+            ops=self.ops,
+        )
+        return out, state_b
+
+    # -- in-trace batched drivers ------------------------------------------
+    @staticmethod
+    def _quantized_sources(sources) -> Tuple[jax.Array, int]:
+        """Pad a source batch to power-of-two length (duplicating the
+        first source into the pad lanes, whose rows the caller slices
+        off) so a serving path with varying batch sizes shares
+        O(log max_B) jit traces instead of recompiling the whole
+        while_loop driver per distinct B — the same quantization the
+        streaming write path applies to update batches."""
+        sources = np.asarray(sources).reshape(-1)
+        B = sources.size
+        pad = max(1, int(2 ** np.ceil(np.log2(max(B, 1)))))
+        padded = np.full(pad, sources[0] if B else 0, dtype=np.int32)
+        padded[:B] = sources
+        return jnp.asarray(padded), B
+
+    def bfs_batch(self, sources) -> Tuple[jax.Array, jax.Array]:
+        """(parents, depths) int32[B, n]; ONE dispatch for the whole
+        multi-source traversal (see module-level ``bfs_batch``)."""
+        padded, B = self._quantized_sources(sources)
+        parents, depths = bfs_batch(
+            self.g,
+            self.aux,
+            padded,
+            ids_budget=self._auto_ids_budget,
+            edge_budget=self._auto_edge_budget,
+        )
+        return parents[:B], depths[:B]
+
+    def bc_batch(self, sources) -> jax.Array:
+        """Dependency scores float[B, n]; ONE dispatch per phase (see
+        module-level ``bc_batch``)."""
+        padded, B = self._quantized_sources(sources)
+        return bc_batch(
+            self.g, self.aux, padded, float_dtype=self.ops.float_dtype
+        )[:B]
+
+    def cc_labels(self) -> jax.Array:
+        """Whole-graph min-label CC, fully in-trace over the prebuilt
+        aux (the unified entry point for the jit fixpoint loop)."""
+        return cc_labels(self.g, aux=self.aux)
+
     # -- dense semiring reduce (Pallas segment-sum) -------------------------
     def edge_map_reduce(self, values: jax.Array) -> jax.Array:
-        msg = _reduce_msgs(values, self._src_by_dst, self._valid_by_dst)
+        msg = _reduce_msgs(
+            values, self._src_by_dst, self._valid_by_dst, dtype=self.ops.float_dtype
+        )
         out = kops.segment_sum(self._dst_sorted, msg[:, None], self._n)
         return out[:, 0].astype(values.dtype)
 
+    def edge_map_reduce_batch(self, values: jax.Array) -> jax.Array:
+        """(B, n) value rows through ONE Pallas segment-sum call: the
+        kernel's message feature dim carries the B query lanes."""
+        msg = _reduce_msgs_batch(
+            values, self._src_by_dst, self._valid_by_dst, dtype=self.ops.float_dtype
+        )
+        out = kops.segment_sum(self._dst_sorted, msg, self._n)
+        return out.T.astype(values.dtype)
+
     # -- vertexMap ----------------------------------------------------------
     def vertex_map(self, U: JaxVertexSubset, P: Callable, state) -> JaxVertexSubset:
-        keep = P(JAX_OPS, state, jnp.arange(self._n, dtype=jnp.int32))
+        keep = P(self.ops, state, jnp.arange(self._n, dtype=jnp.int32))
         return JaxVertexSubset(U.dense & keep)
+
+    def to_host(self, x) -> np.ndarray:
+        HOST_SYNCS.bump()
+        return np.asarray(x)
 
 
 # ---------------------------------------------------------------------------
 # whole-graph jit traversals (single compiled step, no host round-trips) —
 # the device-side counterparts of algorithms.py, used where the entire
 # frontier loop must live inside one trace (launch cells, sharded pool).
-# Formerly ad-hoc copies at the bottom of flat_graph.py.
+# All accept a prebuilt ``EngineAux`` (version-pinned, from the stream's
+# mirror cache) so repeated calls stop re-deriving the endpoint clipping.
 # ---------------------------------------------------------------------------
 
 
-def _pool_endpoints(g: FlatGraph):
-    """(src_c, dst_c, evalid) without the dst-major sort — the cheap
-    subset of ``engine_aux`` the whole-graph loops need.  Like
-    ``engine_aux``, edges naming a destination outside [0, n) are
-    masked invalid (dropped), never folded into the clipped n-1."""
-    n = g.offsets.shape[0] - 1
-    src, dst = unpack(g.keys)
-    evalid = (jnp.arange(g.keys.shape[0]) < g.m) & (dst >= 0) & (dst < n)
-    return (
-        jnp.clip(src, 0, max(n - 1, 0)),
-        jnp.clip(dst, 0, max(n - 1, 0)),
-        evalid,
-    )
+def _endpoints(g: FlatGraph, aux: Optional[EngineAux]):
+    if aux is not None:
+        return aux.src_c, aux.dst_c, aux.evalid
+    return _pool_endpoints(g)
 
 
 @jax.jit
-def dense_expand(g: FlatGraph, frontier: jax.Array) -> jax.Array:
+def dense_expand(g: FlatGraph, frontier: jax.Array, aux: Optional[EngineAux] = None) -> jax.Array:
     """One dense edgeMap expansion: bool[n] frontier -> bool[n] reached.
 
     Every pool slot looks up whether its source is in the frontier; a
     segment-or over destinations (one gather + one masked scatter)."""
-    src_c, dst_c, evalid = _pool_endpoints(g)
+    src_c, dst_c, evalid = _endpoints(g, aux)
     n = g.offsets.shape[0] - 1
     msg = frontier[src_c] & evalid
     return jnp.zeros(n, dtype=bool).at[dst_c].max(msg, mode="drop")
 
 
 @jax.jit
-def bfs_levels(g: FlatGraph, source: jax.Array) -> jax.Array:
+def bfs_levels(g: FlatGraph, source: jax.Array, aux: Optional[EngineAux] = None) -> jax.Array:
     """Full BFS levels via lax.while_loop (fixed-shape iterations)."""
-    aux = _pool_endpoints(g)
+    endpoints = _endpoints(g, aux)
     n = g.offsets.shape[0] - 1
     levels = jnp.full(n, jnp.int32(-1))
     levels = levels.at[source].set(0)
@@ -375,7 +757,7 @@ def bfs_levels(g: FlatGraph, source: jax.Array) -> jax.Array:
 
     def body(state):
         frontier, levels, d = state
-        src_c, dst_c, evalid = aux
+        src_c, dst_c, evalid = endpoints
         msg = frontier[src_c] & evalid
         nxt = jnp.zeros(n, dtype=bool).at[dst_c].max(msg, mode="drop")
         nxt = nxt & (levels < 0)
@@ -387,9 +769,9 @@ def bfs_levels(g: FlatGraph, source: jax.Array) -> jax.Array:
 
 
 @jax.jit
-def cc_labels(g: FlatGraph) -> jax.Array:
+def cc_labels(g: FlatGraph, aux: Optional[EngineAux] = None) -> jax.Array:
     """Min-label propagation to fixpoint (jit while_loop)."""
-    src_c, dst_c, evalid = _pool_endpoints(g)
+    src_c, dst_c, evalid = _endpoints(g, aux)
     n = g.offsets.shape[0] - 1
     labels0 = jnp.arange(n, dtype=jnp.int32)
 

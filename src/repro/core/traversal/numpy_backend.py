@@ -3,7 +3,8 @@
 This is the CPU engine: the vertexSubset / edgeMap machinery formerly
 in ``repro.core.edgemap`` plus the frontier loops formerly inlined in
 ``repro.core.algorithms``, refactored behind the backend contract in
-``base.py``.  ``repro.core.edgemap`` remains as a thin re-export shim.
+``base.py``.  (The ``repro.core.edgemap`` re-export shim is gone;
+import from ``repro.core.traversal``.)
 
 The map/cond functions are vectorized over numpy arrays (the paper's
 CPU parallel-for maps to vector lanes here).  Sparse ("push") direction

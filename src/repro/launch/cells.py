@@ -488,14 +488,37 @@ def _stream_cell(cfg: registry.StreamConfig, shape, mesh, variant: str = "baseli
             meta,
         )
     if kind == "query":
-        from repro.core.traversal.jax_backend import bfs_levels
+        from repro.core.traversal.jax_backend import EngineAux, bfs_levels
 
+        # the query cell consumes the version-pinned EngineAux (the
+        # stream's mirror cache precomputes it once per version), so the
+        # lowered program never re-derives the endpoint clipping per call
+        aux_abs = EngineAux(
+            src_c=_sds((cap,), jnp.int32),
+            dst_c=_sds((cap,), jnp.int32),
+            evalid=_sds((cap,), jnp.bool_),
+            degrees=_sds((n,), jnp.int32),
+            dst_sorted=_sds((cap,), jnp.int32),
+            src_by_dst=_sds((cap,), jnp.int32),
+            valid_by_dst=_sds((cap,), jnp.bool_),
+            dst_offsets=_sds((n + 1,), jnp.int32),
+        )
+        aux_specs = EngineAux(
+            src_c=P(all_axes),
+            dst_c=P(all_axes),
+            evalid=P(all_axes),
+            degrees=P(None),
+            dst_sorted=P(all_axes),
+            src_by_dst=P(all_axes),
+            valid_by_dst=P(all_axes),
+            dst_offsets=P(None),
+        )
         step = bfs_levels
         src = _sds((), jnp.int32)
         meta = {"model_flops": 0.0, "pool_bytes": cap * 8, "kind": "stream_bfs"}
         return Cell(
-            step, (g_abs, src),
-            _named(mesh, (g_specs, P())),
+            step, (g_abs, src, aux_abs),
+            _named(mesh, (g_specs, P(), aux_specs)),
             None,
             meta,
         )

@@ -10,7 +10,7 @@ from repro.core import baselines as bl
 from repro.core import ctree as ct
 from repro.core import flat_graph as fg
 from repro.core import graph as G
-from repro.core.edgemap import from_ids, edge_map
+from repro.core.traversal import from_ids, edge_map
 from repro.core.streaming import AspenStream, make_update_stream, run_concurrent
 from repro.core.versioning import VersionedGraph
 from repro.data.rmat import rmat_edges, symmetrize

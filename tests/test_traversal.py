@@ -180,7 +180,7 @@ def test_engine_cached_on_snapshot(rmat_graph):
 
 def test_legacy_edge_map_accepts_F_dense(rmat_graph):
     """The original custom-dense-direction hook survives the refactor."""
-    from repro.core.edgemap import edge_map, from_ids
+    from repro.core.traversal import edge_map, from_ids
 
     n, edges = rmat_graph
     snap = G.flat_snapshot(G.build_graph(n, edges))
@@ -202,9 +202,11 @@ def test_legacy_edge_map_accepts_F_dense(rmat_graph):
     assert called["n"] == 1 and out.size == 1
 
 
-def test_legacy_edge_map_shim(rmat_graph):
-    """The original Ligra-signature edge_map still works via the shim."""
-    from repro.core.edgemap import edge_map, from_ids
+def test_legacy_edge_map_signature(rmat_graph):
+    """The original Ligra-signature edge_map still works (now imported
+    from the traversal package; the ``repro.core.edgemap`` shim is
+    gone)."""
+    from repro.core.traversal import edge_map, from_ids
 
     n, edges = rmat_graph
     snap = G.flat_snapshot(G.build_graph(n, edges))
@@ -253,6 +255,99 @@ def test_edge_map_reduce_parity(rmat_graph, engines):
     out_np = eng_np.edge_map_reduce(vals)
     out_jx = np.asarray(eng_jx.edge_map_reduce(vals.astype(np.float32)))
     np.testing.assert_allclose(out_np, out_jx, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# precision contract: the jax engine computes in an EXPLICIT float dtype
+# ---------------------------------------------------------------------------
+
+
+def test_jax_engine_float_dtype_contract(rmat_graph, engines):
+    """Default engine dtype is float32 explicitly (jnp.float64 would
+    silently downcast without jax_enable_x64), it is configurable per
+    engine, and PageRank agrees with the float64 numpy engine to f32
+    tolerance through the kernel reduce."""
+    import jax.numpy as jnp
+
+    from repro.core.traversal.jax_backend import JaxEngine
+
+    n, edges = rmat_graph
+    eng_np, eng_jx = engines
+    assert np.dtype(eng_jx.ops.float_dtype) == np.dtype(np.float32)
+    assert np.dtype(eng_np.ops.float_dtype) == np.dtype(np.float64)
+    # the reduce path accumulates in the declared engine dtype
+    out = eng_jx.edge_map_reduce(jnp.ones(n, jnp.float32))
+    assert out.dtype == jnp.float32
+    # configurable: an explicit-dtype engine shares the jit cache key
+    # with the default (JaxOps hashes by dtype, not identity)
+    eng32 = JaxEngine(eng_jx.g, aux=eng_jx.aux, float_dtype=jnp.float32)
+    assert eng32.ops == eng_jx.ops and hash(eng32.ops) == hash(eng_jx.ops)
+    # numpy (f64) vs jax (f32): parity to f32 tolerance, not f64
+    pr_np = talg.pagerank(eng_np, iters=12)
+    pr_jx = talg.pagerank(eng32, iters=12)
+    np.testing.assert_allclose(pr_np, pr_jx, atol=1e-6)
+    assert pr_jx.dtype == np.float32
+
+
+# ---------------------------------------------------------------------------
+# sparse-branch budgets at the direction threshold boundary
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_budget_exact_threshold_boundary():
+    """A frontier whose |U| + deg(U) sits EXACTLY at the Beamer cutoff
+    m // DENSE_THRESHOLD_DENOM routes sparse (the rule is strict >) and
+    must fit the auto-mode ids/edge budgets even when the pool has no
+    slack capacity (cap == m).  Overflow would silently truncate the
+    expansion, so correctness against forced-dense is the probe."""
+    import jax.numpy as jnp
+
+    from repro.core.traversal.base import DENSE_THRESHOLD_DENOM
+
+    rng = np.random.default_rng(42)
+    n = 512
+    m = 20 * DENSE_THRESHOLD_DENOM * 2  # 800 directed edges
+    edges = np.unique(rng.integers(0, n, (4 * m, 2)), axis=0)
+    edges = edges[edges[:, 0] != edges[:, 1]][:m]
+    assert edges.shape[0] == m
+    # no slack: capacity exactly the edge count
+    gf = fg.from_edges(n, edges, edge_capacity=m)
+    eng = make_engine(gf)
+    threshold = eng.m // DENSE_THRESHOLD_DENOM
+
+    # frontier sized so |U| + deg(U) == threshold exactly
+    deg = np.asarray(eng.degrees)
+    order = np.argsort(-deg)
+    ids, total = [], 0
+    for v in order:
+        if total + 1 + deg[v] <= threshold:
+            ids.append(int(v))
+            total += 1 + int(deg[v])
+        if total == threshold:
+            break
+    # pad with isolated/low-degree vertices to land exactly on it
+    for v in order[::-1]:
+        if total == threshold:
+            break
+        if int(v) not in ids and total + 1 + deg[v] <= threshold:
+            ids.append(int(v))
+            total += 1 + int(deg[v])
+    assert total == threshold, "fixture must hit the boundary exactly"
+    assert len(ids) + int(deg[ids].sum()) == threshold
+
+    U = eng.frontier_from_ids(ids)
+    state = jnp.zeros(n)
+    out_auto, _ = eng.edge_map(U, _count_F, _all_C, state, mode="auto")
+    out_dense, _ = eng.edge_map(U, _count_F, _all_C, state, mode="dense")
+    np.testing.assert_array_equal(
+        np.asarray(out_auto.to_dense()), np.asarray(out_dense.to_dense())
+    )
+    expect = np.zeros(n, dtype=bool)
+    sel = np.isin(edges[:, 0], np.asarray(ids))
+    expect[edges[sel, 1]] = True
+    np.testing.assert_array_equal(np.asarray(out_auto.to_dense()), expect)
+    # one over the boundary routes dense — results must still agree
+    assert len(ids) + int(deg[ids].sum()) <= threshold < eng._auto_ids_budget
 
 
 # ---------------------------------------------------------------------------
@@ -335,8 +430,15 @@ def test_jax_engine_aux_device_resident(engines):
     cap = eng_jx.g.edge_capacity
     for arr in aux:
         assert isinstance(arr, jax.Array)
-        assert arr.shape[0] in (cap, eng_jx.n)
+        assert arr.shape[0] in (cap, eng_jx.n, eng_jx.n + 1)
     # dst-major permutation is sorted ascending with padding at the top
     dst_sorted = np.asarray(aux.dst_sorted)
     assert (np.diff(dst_sorted) >= 0).all()
     assert (dst_sorted[int(eng_jx.m):] == eng_jx.n).all()
+    # dst_offsets segments the dst-major pool: counts per destination
+    # equal the in-degree, and the top bound is the valid edge count
+    offs = np.asarray(aux.dst_offsets)
+    indeg = np.zeros(eng_jx.n, dtype=np.int64)
+    np.add.at(indeg, dst_sorted[: int(eng_jx.m)], 1)
+    np.testing.assert_array_equal(np.diff(offs), indeg)
+    assert offs[-1] == eng_jx.m
