@@ -595,6 +595,101 @@ def bench_query_batch(quick: bool = False) -> List[Row]:
 
 
 # ---------------------------------------------------------------------------
+# WEIGHT: weighted edgeMap (SSSP + weighted PageRank, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def bench_weighted(quick: bool = False) -> List[Row]:
+    """The property-graph v2 serve path on both substrates:
+
+      * SSSP (Bellman–Ford through the weighted edgeMap; jax runs the
+        serial round loop AND the one-dispatch ``sssp_batch`` driver)
+        and weighted PageRank (weighted Pallas segment-sum reduce) —
+        numpy-vs-jax parity columns are the point on CPU, same caveat
+        as the TRAV table;
+      * weighted-vs-unweighted ``edge_map_reduce`` overhead per
+        backend: what carrying the value array costs the hot reduce
+        (the unweighted side compiles the exact pre-v2 trace)."""
+    import jax
+
+    from repro.core import flat_graph as fg
+    from repro.core import graph as G
+    from repro.core.traversal import NumpyEngine, make_engine
+    from repro.core.traversal import algorithms as talg
+
+    n, edges = _test_graph(12, 60_000)
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    w = ((lo * 1000003 + hi) % 7 + 1).astype(np.float64)  # symmetric, integer
+    src = int(edges[0, 0])
+    tag = f"n=2^12,m={edges.shape[0]}"
+
+    eng_np = NumpyEngine(G.flat_snapshot(G.build_graph(n, edges, weights=w)))
+    eng_jx = make_engine(fg.from_edges(n, edges, weights=w))
+    eng_npu = NumpyEngine(G.flat_snapshot(G.build_graph(n, edges)))
+    eng_jxu = make_engine(fg.from_edges(n, edges))
+
+    rows: List[Row] = []
+    runs = [
+        ("sssp", lambda e: talg.sssp(e, src),
+         lambda a, b: np.array_equal(np.asarray(a, np.float64), np.asarray(b, np.float64))),
+        ("wpagerank", lambda e: talg.weighted_pagerank(e, iters=5),
+         lambda a, b: np.allclose(a, b, atol=1e-5)),
+    ]
+    for name, run, check in runs:
+        out_np = run(eng_np)  # warms CSR caches / jit
+        out_jx = run(eng_jx)
+        t_np = _timeit(lambda: run(eng_np), repeats=2)
+        t_jx = _timeit(lambda: run(eng_jx), repeats=2)
+        rows += [
+            (f"WEIGHT/{name}_numpy/{tag}", t_np * 1e3, "ms", "NumpyEngine(weighted FlatSnapshot)"),
+            (f"WEIGHT/{name}_jax/{tag}", t_jx * 1e3, "ms",
+             f"JaxEngine(weighted FlatGraph) backend={jax.default_backend()}"),
+            (f"WEIGHT/{name}_parity/{tag}", float(check(out_np, out_jx)), "bool",
+             "1.0 = backends agree" + (" (exact, integer weights)" if name == "sssp" else "")),
+        ]
+
+    # one-dispatch batched SSSP vs B serial calls (the QBATCH story, weighted)
+    B = 4 if quick else 16
+    srcs = np.random.default_rng(0).integers(0, n, B)
+    talg.sssp_multi(eng_jx, srcs)  # warm the while_loop driver at this B
+    t_batch = _timeit(lambda: talg.sssp_multi(eng_jx, srcs), repeats=2)
+    t_serial = _timeit(lambda: [talg.sssp(eng_jx, int(x)) for x in srcs], repeats=2)
+    rows += [
+        (f"WEIGHT/sssp_serial_qps/B={B}", B / t_serial, "queries/s", "B serial sssp()"),
+        (f"WEIGHT/sssp_batched_qps/B={B}", B / t_batch, "queries/s",
+         "one in-trace sssp_batch dispatch"),
+        (f"WEIGHT/sssp_batch_speedup/B={B}", t_serial / t_batch, "x", ""),
+    ]
+
+    # weighted-vs-unweighted reduce overhead (the hot PageRank step)
+    vals64 = np.random.default_rng(1).standard_normal(n)
+    vals32 = jax_asarray_f32(vals64)
+    for name, ew, eu, v in (
+        ("numpy", eng_np, eng_npu, vals64),
+        ("jax", eng_jx, eng_jxu, vals32),
+    ):
+        ew.edge_map_reduce(v), eu.edge_map_reduce(v)  # warm
+        t_w = _timeit(lambda: jax_block(ew.edge_map_reduce(v)), repeats=3)
+        t_u = _timeit(lambda: jax_block(eu.edge_map_reduce(v)), repeats=3)
+        rows += [
+            (f"WEIGHT/reduce_weighted_{name}/{tag}", t_w * 1e6, "us",
+             "edge_map_reduce, weighted (+,x) semiring"),
+            (f"WEIGHT/reduce_unweighted_{name}/{tag}", t_u * 1e6, "us",
+             "edge_map_reduce, pre-v2 trace"),
+            (f"WEIGHT/reduce_overhead_{name}/{tag}", t_w / max(t_u, 1e-12), "x",
+             "weighted/unweighted"),
+        ]
+    return rows
+
+
+def jax_asarray_f32(x):
+    import jax.numpy as jnp
+
+    return jnp.asarray(x, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # kernel micro-benchmarks (§Perf support; CPU = oracle timings only)
 # ---------------------------------------------------------------------------
 
@@ -645,5 +740,6 @@ ALL_BENCHES = {
     "traversal": bench_traversal,
     "streaming": bench_streaming,
     "query_batch": bench_query_batch,
+    "weighted": bench_weighted,
     "kernels": bench_kernels,
 }

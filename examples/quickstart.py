@@ -43,3 +43,17 @@ v1 = stream.acquire()
 print(f"reader v0 sees {G.num_edges(v0.graph)} edges; "
       f"v1 sees {G.num_edges(v1.graph)} (serializable snapshots)")
 stream.release(v0), stream.release(v1)
+
+# --- 5. Property graphs: per-edge values, weighted traversal ---------------
+# insert_edges(weights=...) attaches one value per edge (both directions
+# of a symmetric insert); re-inserting an edge overwrites its weight.
+from repro.core.traversal import algorithms as talg
+
+wedges = np.array([[0, 1], [1, 2], [0, 2]])
+wstream = AspenStream(G.build_graph(3, np.empty((0, 2), np.int64)))
+wstream.insert_edges(wedges, weights=np.array([1.0, 1.0, 10.0]))
+dist = talg.sssp(wstream.engine("numpy"), 0)  # Bellman-Ford (min, +)
+print(f"SSSP 0->2: {dist[2]:g} (2-hop cheap path beats the 10.0 edge)")
+wstream.insert_edges(wedges[2:], weights=np.array([0.5]))  # overwrite
+print(f"after overwrite: {talg.sssp(wstream.engine('numpy'), 0)[2]:g} "
+      f"(direct edge now wins)")

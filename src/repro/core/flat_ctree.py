@@ -43,10 +43,26 @@ def sentinel_for(dtype) -> int:
 
 
 class FlatCTree(NamedTuple):
-    """Flat sorted pool with a valid count; a jax pytree (shardable)."""
+    """Flat sorted pool with a valid count; a jax pytree (shardable).
+
+    ``vals`` optionally carries ONE associated value per element (the
+    PaC-tree key->value generalization): ``vals[i]`` belongs to
+    ``data[i]`` and is permuted by every merge / compaction alongside
+    its key.  ``vals is None`` is the plain-set layout — no value array
+    is allocated and every operation traces exactly as before (the
+    weighted branches below are Python-level, decided at trace time).
+
+    Value semantics across set operations:
+      * union (merge or sort): a batch element whose key already exists
+        OVERWRITES the pool element's value (last-writer-wins per
+        batch); within one batch the FIRST occurrence of a duplicate
+        key wins (``from_array`` / ``from_device`` dedup keep-first).
+      * difference: dropping a key drops its value.
+    """
 
     data: jax.Array  # [capacity] sorted; data[n:] == SENTINEL
     n: jax.Array  # int32 scalar
+    vals: jax.Array | None = None  # [capacity] associated values (pad 0)
 
 
 def capacity(t: FlatCTree) -> int:
@@ -59,15 +75,33 @@ def empty(cap: int, dtype=jnp.int32) -> FlatCTree:
     )
 
 
-def from_array(values: np.ndarray, cap: int | None = None, dtype=jnp.int32) -> FlatCTree:
-    """Host-side build: sort+dedup then pad to capacity."""
-    v = np.unique(np.asarray(values))
+def from_array(
+    values: np.ndarray,
+    cap: int | None = None,
+    dtype=jnp.int32,
+    vals: np.ndarray | None = None,
+    val_dtype=jnp.float32,
+) -> FlatCTree:
+    """Host-side build: sort+dedup then pad to capacity.  ``vals``
+    optionally attaches one value per element (duplicate keys keep the
+    FIRST occurrence's value)."""
+    raw = np.asarray(values)
+    if vals is None:
+        v = np.unique(raw)
+        w = None
+    else:
+        v, first = np.unique(raw, return_index=True)
+        w = np.asarray(vals, dtype=np.dtype(val_dtype)).reshape(-1)[first]
     if cap is None:
         cap = max(8, int(2 ** np.ceil(np.log2(max(v.size, 1) + 1))))
     assert v.size <= cap
     data = np.full(cap, sentinel_for(dtype), dtype=np.dtype(dtype))
     data[: v.size] = v
-    return FlatCTree(jnp.asarray(data), jnp.int32(v.size))
+    if w is None:
+        return FlatCTree(jnp.asarray(data), jnp.int32(v.size))
+    wdata = np.zeros(cap, dtype=np.dtype(val_dtype))
+    wdata[: v.size] = w
+    return FlatCTree(jnp.asarray(data), jnp.int32(v.size), jnp.asarray(wdata))
 
 
 def to_array(t: FlatCTree) -> np.ndarray:
@@ -75,18 +109,30 @@ def to_array(t: FlatCTree) -> np.ndarray:
     return d[: int(t.n)]
 
 
+def to_val_array(t: FlatCTree) -> np.ndarray | None:
+    """The valid prefix of the value array (None on plain sets)."""
+    return None if t.vals is None else np.asarray(t.vals)[: int(t.n)]
+
+
 @functools.partial(jax.jit, static_argnums=(1,))
-def from_device(values: jax.Array, cap: int) -> FlatCTree:
+def from_device(values: jax.Array, cap: int, vals: jax.Array | None = None) -> FlatCTree:
     """Device-side build: sort + dedup + compact, all under jit.
 
     ``values`` is a dense device array of raw (possibly duplicated,
     unsorted) elements; sentinel-valued slots are dropped, so a caller
     may pre-pad to a quantized shape.  The host never touches the data —
     this is the streaming ingest path (batches arrive device-resident
-    and stay there)."""
-    v = jnp.sort(values.ravel())
+    and stay there).  ``vals`` rides along through a stable argsort, so
+    the first occurrence of a duplicate key keeps its value (matching
+    ``from_array``)."""
+    if vals is None:
+        v = jnp.sort(values.ravel())
+        keep = _dedup_mask(v, jnp.int32(v.shape[0]))
+        return _compact(v, keep, cap)
+    order = jnp.argsort(values.ravel(), stable=True)
+    v = values.ravel()[order]
     keep = _dedup_mask(v, jnp.int32(v.shape[0]))
-    return _compact(v, keep, cap)
+    return _compact(v, keep, cap, vals=vals.ravel()[order])
 
 
 # ---------------------------------------------------------------------------
@@ -141,14 +187,36 @@ def _dedup_mask(sorted_data: jax.Array, n_total: jax.Array) -> jax.Array:
     return keep
 
 
-def _compact(values: jax.Array, keep: jax.Array, out_cap: int) -> FlatCTree:
-    """Scatter kept values to the front of a fresh pool."""
+def _compact(
+    values: jax.Array, keep: jax.Array, out_cap: int, vals: jax.Array | None = None
+) -> FlatCTree:
+    """Scatter kept values to the front of a fresh pool (associated
+    values, when present, ride the same permutation)."""
     sent = sentinel_for(values.dtype)
     pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
     pos = jnp.where(keep, pos, out_cap)  # dropped via OOB
     out = jnp.full((out_cap,), sent, dtype=values.dtype)
     out = out.at[pos].set(values, mode="drop")
-    return FlatCTree(out, keep.sum().astype(jnp.int32))
+    n_out = keep.sum().astype(jnp.int32)
+    if vals is None:
+        return FlatCTree(out, n_out)
+    vout = jnp.zeros((out_cap,), dtype=vals.dtype).at[pos].set(vals, mode="drop")
+    return FlatCTree(out, n_out, vout)
+
+
+def _aligned_vals(t: FlatCTree, batch: FlatCTree):
+    """(vals_a, vals_b) for a union, or (None, None) when both inputs
+    are plain sets.  A mixed union is upgraded at trace time: the
+    value-less side is materialized as unit weights (the streaming
+    auto-upgrade — an unweighted pool receiving its first weighted
+    batch, or a weighted pool receiving a weight-less batch)."""
+    if t.vals is None and batch.vals is None:
+        return None, None
+    va = t.vals if t.vals is not None else jnp.ones(t.data.shape[0], batch.vals.dtype)
+    vb = batch.vals if batch.vals is not None else jnp.ones(
+        batch.data.shape[0], t.vals.dtype
+    )
+    return va, vb
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
@@ -157,10 +225,27 @@ def union_sort(t: FlatCTree, batch: FlatCTree, out_cap: int) -> FlatCTree:
 
     O((n+k) log(n+k)) compares; one XLA sort. The paper-faithful analogue
     of rebuilding; kept as the reference and the §Perf 'before'.
+
+    With associated values the sort becomes a stable argsort so values
+    ride the permutation; a duplicated key keeps the BATCH value (the
+    pool copy sorts first, and each kept slot reads the last value of
+    its equal-run — runs are length <= 2 since both inputs are deduped).
     """
-    allv = jnp.sort(jnp.concatenate([t.data, batch.data]))
+    va, vb = _aligned_vals(t, batch)
+    if va is None:
+        allv = jnp.sort(jnp.concatenate([t.data, batch.data]))
+        keep = _dedup_mask(allv, t.n + batch.n)
+        return _compact(allv, keep, out_cap)
+    allk = jnp.concatenate([t.data, batch.data])
+    order = jnp.argsort(allk, stable=True)
+    allv = allk[order]
+    vals = jnp.concatenate([va, vb])[order]
     keep = _dedup_mask(allv, t.n + batch.n)
-    return _compact(allv, keep, out_cap)
+    nxt_same = jnp.concatenate(
+        [allv[1:] == allv[:-1], jnp.zeros((1,), dtype=bool)]
+    )
+    vals = jnp.where(nxt_same, jnp.roll(vals, -1), vals)  # batch overwrites
+    return _compact(allv, keep, out_cap, vals=vals)
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
@@ -199,21 +284,32 @@ def union_merge(t: FlatCTree, batch: FlatCTree, out_cap: int) -> FlatCTree:
     out = out.at[pos_a].set(a, mode="drop")
     out = out.at[pos_b].set(b, mode="drop")
     n_out = (t.n + keep_b.sum()).astype(jnp.int32)
-    return FlatCTree(out, n_out)
+    va, vb = _aligned_vals(t, batch)
+    if va is None:
+        return FlatCTree(out, n_out)
+    # values ride the same two scatters; a duplicate b key lands its
+    # value on the matched a slot (insert overwrites, PaC-tree style)
+    vout = jnp.zeros((out_cap,), dtype=va.dtype)
+    vout = vout.at[pos_a].set(va, mode="drop")
+    vout = vout.at[pos_b].set(vb, mode="drop")
+    pos_dup = jnp.where(dup_b, pos_a[ia], out_cap)
+    vout = vout.at[pos_dup].set(vb, mode="drop")
+    return FlatCTree(out, n_out, vout)
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
 def difference(t: FlatCTree, batch: FlatCTree, out_cap: int) -> FlatCTree:
-    """MultiDelete: drop elements of t found in batch; compact."""
+    """MultiDelete: drop elements of t found in batch; compact (a
+    dropped key drops its associated value)."""
     drop = member(batch, t.data)
     valid = jnp.arange(t.data.shape[0]) < t.n
-    return _compact(t.data, valid & ~drop, out_cap)
+    return _compact(t.data, valid & ~drop, out_cap, vals=t.vals)
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
 def intersect(t: FlatCTree, batch: FlatCTree, out_cap: int) -> FlatCTree:
     keep = member(batch, t.data) & (jnp.arange(t.data.shape[0]) < t.n)
-    return _compact(t.data, keep, out_cap)
+    return _compact(t.data, keep, out_cap, vals=t.vals)
 
 
 # ---------------------------------------------------------------------------
@@ -226,9 +322,14 @@ def grown_capacity(n_needed: int) -> int:
     return max(8, int(2 ** np.ceil(np.log2(n_needed + 1))))
 
 
-def multi_insert(t: FlatCTree, values: np.ndarray, optimized: bool = True) -> FlatCTree:
+def multi_insert(
+    t: FlatCTree,
+    values: np.ndarray,
+    optimized: bool = True,
+    vals: np.ndarray | None = None,
+) -> FlatCTree:
     """Host-driven batch insert: build batch, pick capacity, run union."""
-    batch = from_array(values, dtype=t.data.dtype)
+    batch = from_array(values, dtype=t.data.dtype, vals=vals)
     need = int(t.n) + int(batch.n)
     cap = max(capacity(t), grown_capacity(need))
     fn = union_merge if optimized else union_sort

@@ -34,11 +34,20 @@ SENT64 = fct.sentinel_for(jnp.int64)
 
 
 class FlatGraph(NamedTuple):
-    """Immutable graph snapshot; a jax pytree (shardable over edges)."""
+    """Immutable graph snapshot; a jax pytree (shardable over edges).
+
+    ``weights`` optionally carries one float32 per pool slot, parallel
+    to ``keys`` (the property-graph value array, DESIGN.md §8): every
+    rank-merge / compaction permutes it alongside the keys, inserting a
+    duplicate key overwrites its weight, deleting a key drops it.
+    ``weights is None`` is the unweighted layout — no value array is
+    allocated and every kernel traces exactly as before.
+    """
 
     offsets: jax.Array  # int32[n+1] CSR offsets (valid prefix of pool)
     keys: jax.Array  # int64[cap] sorted packed (src<<32|dst); pad SENT64
     m: jax.Array  # int32 scalar: valid edge count
+    weights: jax.Array | None = None  # float32[cap] per-edge values (pad 0)
 
     @property
     def n(self) -> int:
@@ -64,10 +73,22 @@ def _offsets_from_keys(keys: jax.Array, m: jax.Array, n: int) -> jax.Array:
     return jnp.minimum(offs, m.astype(jnp.int32))
 
 
-def from_edges(n: int, edges: np.ndarray, edge_capacity: int | None = None) -> FlatGraph:
-    """Host build from a (k, 2) directed edge array (dedups)."""
+def from_edges(
+    n: int,
+    edges: np.ndarray,
+    edge_capacity: int | None = None,
+    weights: np.ndarray | None = None,
+) -> FlatGraph:
+    """Host build from a (k, 2) directed edge array (dedups; a
+    duplicated edge keeps the FIRST occurrence's weight)."""
     edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
-    keys = np.unique((edges[:, 0] << 32) | edges[:, 1])
+    packed = (edges[:, 0] << 32) | edges[:, 1]
+    if weights is None:
+        keys = np.unique(packed)
+        w = None
+    else:
+        keys, first = np.unique(packed, return_index=True)
+        w = np.asarray(weights, dtype=np.float32).reshape(-1)[first]
     if edge_capacity is None:
         edge_capacity = fct.grown_capacity(keys.size)
     assert keys.size <= edge_capacity
@@ -75,12 +96,31 @@ def from_edges(n: int, edges: np.ndarray, edge_capacity: int | None = None) -> F
     pool[: keys.size] = keys
     keys_j = jnp.asarray(pool)
     m = jnp.int32(keys.size)
-    return FlatGraph(_offsets_from_keys(keys_j, m, n), keys_j, m)
+    wpool = None
+    if w is not None:
+        wbuf = np.zeros(edge_capacity, dtype=np.float32)
+        wbuf[: keys.size] = w
+        wpool = jnp.asarray(wbuf)
+    return FlatGraph(_offsets_from_keys(keys_j, m, n), keys_j, m, wpool)
+
+
+def with_unit_weights(g: FlatGraph) -> FlatGraph:
+    """Attach a unit value array to an unweighted graph (the upgrade an
+    unweighted pool takes when its first weighted batch arrives)."""
+    if g.weights is not None:
+        return g
+    return g._replace(weights=jnp.ones(g.edge_capacity, jnp.float32))
 
 
 def to_edge_array(g: FlatGraph) -> np.ndarray:
     k = np.asarray(g.keys)[: int(g.m)]
     return np.stack([k >> 32, k & 0xFFFFFFFF], axis=1)
+
+
+def to_weight_array(g: FlatGraph) -> np.ndarray | None:
+    """Per-edge weights aligned with ``to_edge_array`` (None when
+    unweighted)."""
+    return None if g.weights is None else np.asarray(g.weights)[: int(g.m)]
 
 
 # ---------------------------------------------------------------------------
@@ -126,20 +166,22 @@ def chunk_structure(g: FlatGraph, b: int, seed: int):
 def _insert_edges_impl(
     g: FlatGraph, batch: fct.FlatCTree, out_cap: int, optimized: bool, n_out: int | None
 ) -> FlatGraph:
-    pool = fct.FlatCTree(g.keys, g.m)
+    pool = fct.FlatCTree(g.keys, g.m, g.weights)
     fn = fct.union_merge if optimized else fct.union_sort
     merged = fn(pool, batch, out_cap)
     n = g.offsets.shape[0] - 1 if n_out is None else n_out
-    return FlatGraph(_offsets_from_keys(merged.data, merged.n, n), merged.data, merged.n)
+    return FlatGraph(
+        _offsets_from_keys(merged.data, merged.n, n), merged.data, merged.n, merged.vals
+    )
 
 
 def _delete_edges_impl(
     g: FlatGraph, batch: fct.FlatCTree, out_cap: int
 ) -> FlatGraph:
-    pool = fct.FlatCTree(g.keys, g.m)
+    pool = fct.FlatCTree(g.keys, g.m, g.weights)
     out = fct.difference(pool, batch, out_cap)
     n = g.offsets.shape[0] - 1
-    return FlatGraph(_offsets_from_keys(out.data, out.n, n), out.data, out.n)
+    return FlatGraph(_offsets_from_keys(out.data, out.n, n), out.data, out.n, out.vals)
 
 
 @functools.partial(jax.jit, static_argnums=(2, 3, 4))
@@ -214,15 +256,26 @@ def delete_edges_device(
     return fn(g, batch, out_cap)
 
 
-def batch_from_edges(edges: np.ndarray, cap: int | None = None) -> fct.FlatCTree:
+def batch_from_edges(
+    edges: np.ndarray, cap: int | None = None, weights: np.ndarray | None = None
+) -> fct.FlatCTree:
     edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
     keys = (edges[:, 0] << 32) | edges[:, 1]
-    return fct.from_array(keys, cap=cap, dtype=jnp.int64)
+    return fct.from_array(keys, cap=cap, dtype=jnp.int64, vals=weights)
 
 
-def insert_edges_host(g: FlatGraph, edges: np.ndarray, optimized: bool = True) -> FlatGraph:
-    """Host-driven insert with capacity policy (quantized growth)."""
-    batch = batch_from_edges(edges)
+def insert_edges_host(
+    g: FlatGraph,
+    edges: np.ndarray,
+    optimized: bool = True,
+    weights: np.ndarray | None = None,
+) -> FlatGraph:
+    """Host-driven insert with capacity policy (quantized growth).  A
+    weighted batch against an unweighted pool upgrades the pool to unit
+    weights first (insert overwrites the weight of an existing edge)."""
+    if weights is not None and g.weights is None:
+        g = with_unit_weights(g)
+    batch = batch_from_edges(edges, weights=weights)
     need = int(g.m) + int(batch.n)
     cap = max(g.edge_capacity, fct.grown_capacity(need))
     return insert_edges(g, batch, cap, optimized)
@@ -233,31 +286,6 @@ def delete_edges_host(g: FlatGraph, edges: np.ndarray) -> FlatGraph:
     return delete_edges(g, batch, g.edge_capacity)
 
 
-# ---------------------------------------------------------------------------
-# traversal (deprecated wrappers): the engine lives in traversal/jax_backend
-# ---------------------------------------------------------------------------
-
-
-def edge_map_dense(g: FlatGraph, frontier: jax.Array) -> jax.Array:
-    """Deprecated: use ``traversal.make_engine(g).edge_map``.  Thin
-    delegation to the jax traversal backend's whole-pool expansion."""
-    from .traversal.jax_backend import dense_expand
-
-    return dense_expand(g, frontier)
-
-
-def bfs(g: FlatGraph, source: jax.Array) -> jax.Array:
-    """Deprecated: use ``traversal.algorithms.bfs(make_engine(g), src)``.
-    Returns BFS *levels* (the historical signature); delegates to the
-    fully-jit level loop in ``traversal.jax_backend.bfs_levels``."""
-    from .traversal.jax_backend import bfs_levels
-
-    return bfs_levels(g, source)
-
-
-def connected_components(g: FlatGraph) -> jax.Array:
-    """Deprecated: use ``traversal.algorithms.connected_components``.
-    Delegates to ``traversal.jax_backend.cc_labels`` (jit fixpoint)."""
-    from .traversal.jax_backend import cc_labels
-
-    return cc_labels(g)
+# NOTE: the deprecated traversal wrappers (``edge_map_dense`` / ``bfs`` /
+# ``connected_components``) are gone — use ``traversal.jax_backend``'s
+# ``dense_expand`` / ``bfs_levels`` / ``cc_labels`` (or the engine API).

@@ -67,11 +67,12 @@ class AspenStream:
         return flat_graph_of(G.flat_snapshot(g))
 
     @staticmethod
-    def _device_batch(edges: np.ndarray):
+    def _device_batch(edges: np.ndarray, weights: Optional[np.ndarray] = None):
         """Pack an edge batch and ship it to device at a *quantized*
         shape (padded with the pool sentinel, which ``fct.from_device``
         drops): batch sizes 1..k all share O(log k) jit traces instead
-        of one per distinct size."""
+        of one per distinct size.  ``weights`` rides along as the batch
+        pool's value array (pad 0; dropped with the sentinel keys)."""
         import jax.numpy as jnp
 
         from . import flat_ctree as fct
@@ -80,20 +81,39 @@ class AspenStream:
         cap = fct.grown_capacity(keys.size)
         padded = np.full(cap, fct.SENTINEL64, dtype=np.int64)
         padded[: keys.size] = keys
-        return fct.from_device(jnp.asarray(padded), cap)
+        if weights is None:
+            return fct.from_device(jnp.asarray(padded), cap)
+        wpad = np.zeros(cap, dtype=np.float32)
+        wpad[: keys.size] = weights
+        return fct.from_device(jnp.asarray(padded), cap, vals=jnp.asarray(wpad))
 
-    def _mirror_insert(self, mirror, g_old: G.Graph, edges: np.ndarray):
+    def _mirror_insert(
+        self,
+        mirror,
+        g_old: G.Graph,
+        edges: np.ndarray,
+        weights: Optional[np.ndarray] = None,
+    ):
         """Apply an insert batch to the mirror on device: pack keys, build
         the batch pool with the jit sort/dedup, rank-merge.  Capacity and
         vertex growth are decided from host-known counts (tree edge count
         via the O(1) augmentation; max source id from the batch), so no
-        device->host sync is needed."""
+        device->host sync is needed.
+
+        A weighted batch against an unweighted mirror upgrades the
+        mirror to unit weights first (the rank-merge then permutes the
+        value array alongside the keys; an existing edge's weight is
+        overwritten).  Unweighted streams never take these branches —
+        no value array is allocated, and the merge compiles the exact
+        pre-v2 traces."""
         from . import flat_ctree as fct
         from . import flat_graph as fg
 
         if edges.shape[0] == 0:
             return mirror
-        batch = self._device_batch(edges)
+        if weights is not None and mirror.weights is None:
+            mirror = fg.with_unit_weights(mirror)
+        batch = self._device_batch(edges, weights)
         # vertices are created by their first out-edge (matching the
         # tree, whose vertex set is the set of inserted sources)
         n_out = max(mirror.n, int(edges[:, 0].max()) + 1)
@@ -134,13 +154,32 @@ class AspenStream:
             return self.vg.update_with_aux(txn)
 
     # -- update API (paper Appendix 10.4) ---------------------------------
-    def insert_edges(self, edges: np.ndarray, symmetric: bool = True):
+    def insert_edges(
+        self,
+        edges: np.ndarray,
+        symmetric: bool = True,
+        weights: Optional[np.ndarray] = None,
+    ):
+        """InsertEdges, optionally weighted: ``weights`` is one value
+        per batch edge (a symmetric insert carries the value on both
+        directions).  Inserting an edge that already exists overwrites
+        its weight; the tree and the device mirror are updated through
+        their own value paths and published atomically as one version.
+        The first weighted batch upgrades an unweighted stream (prior
+        edges read as unit weight); weight-less batches on a weighted
+        stream insert at unit weight."""
         edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if weights is not None:
+            weights = np.asarray(weights, dtype=np.float64).reshape(-1)
+            if weights.size != edges.shape[0]:
+                raise ValueError("one weight per edge")
         if symmetric:
             edges = np.concatenate([edges, edges[:, ::-1]])
+            if weights is not None:
+                weights = np.concatenate([weights, weights])
         return self._publish(
-            lambda g: G.insert_edges(g, edges),
-            lambda m, g_old, g_new: self._mirror_insert(m, g_old, edges),
+            lambda g: G.insert_edges(g, edges, weights=weights),
+            lambda m, g_old, g_new: self._mirror_insert(m, g_old, edges, weights),
         )
 
     def delete_edges(self, edges: np.ndarray, symmetric: bool = True):
@@ -230,9 +269,12 @@ class AspenStream:
 
         kinds: ``"bfs"`` -> int64[B, n] parent rows; ``"distances"`` ->
         int64[B, n] hop counts (landmark rows); ``"bc"`` -> float[B, n]
-        dependency scores; ``"pagerank"`` -> float[B, n] scores for the
-        personalization rows passed as ``resets`` (``sources`` unused).
-        Extra kwargs are forwarded to the traversal-layer ``*_multi``.
+        dependency scores; ``"sssp"`` -> float64[B, n] weighted
+        shortest-path distances (+inf = unreached; the in-trace
+        Bellman–Ford driver on jax); ``"pagerank"`` -> float[B, n]
+        scores for the personalization rows passed as ``resets``
+        (``sources`` unused).  Extra kwargs are forwarded to the
+        traversal-layer ``*_multi``.
         """
         from .traversal import algorithms as talg
 
@@ -246,6 +288,8 @@ class AspenStream:
             return talg.landmark_distances(eng, sources, **kw)
         if kind == "bc":
             return talg.bc_multi(eng, sources, **kw)
+        if kind == "sssp":
+            return talg.sssp_multi(eng, sources, **kw)
         raise ValueError(f"unknown query kind {kind!r}")
 
 

@@ -101,7 +101,8 @@ def make_engine(obj, backend: str | None = None) -> TraversalEngine:
 
 
 def flat_graph_of(snap):
-    """FlatSnapshot -> FlatGraph (host-side O(m) CSR rebuild).
+    """FlatSnapshot -> FlatGraph (host-side O(m) CSR rebuild; weighted
+    snapshots carry their per-edge values into the pool's value array).
 
     This is the *fallback* substrate conversion — streams keep a
     resident mirror precisely so queries never pay this per version
@@ -113,7 +114,12 @@ def flat_graph_of(snap):
     FLAT_REBUILDS.bump()
     offsets, nbrs = gather_csr(snap, np.arange(snap.n, dtype=np.int64))
     srcs = np.repeat(np.arange(snap.n, dtype=np.int64), np.diff(offsets))
-    return from_edges(snap.n, np.stack([srcs, nbrs], axis=1))
+    weights = (
+        snap.edge_weights(srcs, nbrs)
+        if getattr(snap, "weighted", False)
+        else None
+    )
+    return from_edges(snap.n, np.stack([srcs, nbrs], axis=1), weights=weights)
 
 
 _flat_graph_of = flat_graph_of  # backward-compatible alias

@@ -5,6 +5,12 @@ One algorithm text per problem; the engine handle picks the substrate
 module-level so the jax backend's jit cache is keyed stably (a closure
 redefined per call would recompile every invocation).
 
+Contract v2: every F callback takes the per-edge value lane ``ws``
+(None on unweighted engines).  BFS / CC / BC ignore it; SSSP
+(Bellman–Ford over the (min, +) semiring) and the PageRank family
+(weighted (+, x) semiring, normalized by ``engine.weighted_degrees``)
+consume it — the same one-text-two-substrates style throughout.
+
 All single-source algorithms python-loop over rounds; each round is one
 engine ``edge_map`` (on jax: one compiled fixed-shape step), which is
 the paper's frontier-synchronous model.  Results come back as host
@@ -40,7 +46,7 @@ def _bfs_unvisited(ops, parents, vs):
     return parents[vs] < 0
 
 
-def _bfs_relax(ops, parents, us, vs, valid):
+def _bfs_relax(ops, parents, us, vs, ws, valid):
     """Claim parents: any in-frontier neighbor is a valid BFS parent;
     scatter-max resolves write contention deterministically."""
     cand = ops.scatter_max(ops.xp.full_like(parents, -1), vs, us.astype(parents.dtype), valid)
@@ -128,7 +134,7 @@ def _cc_any(ops, labels, vs):
     return ops.xp.ones(vs.shape, dtype=bool)
 
 
-def _cc_relax(ops, labels, us, vs, valid):
+def _cc_relax(ops, labels, us, vs, ws, valid):
     """Min-label relax over BOTH endpoints of each touched edge (the
     graph is undirected; each stored direction carries labels both
     ways, like the pre-refactor implementation)."""
@@ -165,27 +171,45 @@ def connected_components(
 
 
 # ---------------------------------------------------------------------------
-# PageRank (dense edgeMap reduced over the (+, x) semiring)
+# PageRank (dense edgeMap reduced over the weighted (+, x) semiring)
 # ---------------------------------------------------------------------------
 
 
 def pagerank(
     engine: TraversalEngine, iters: int = 10, damping: float = 0.85
 ) -> np.ndarray:
-    """Power iteration; the push step out[v] = sum_{u->v} pr[u]/deg[u]
-    is ``engine.edge_map_reduce`` — on the jax backend that's the Pallas
-    segment-sum kernel, on numpy a vectorized scatter-add."""
+    """Power iteration over the weighted (+, x) semiring; the push step
+    out[v] = sum_{u->v} w(u,v) * pr[u] / wdeg[u] is
+    ``engine.edge_map_reduce`` — on the jax backend that's the Pallas
+    segment-sum kernel (weighted variant on weighted graphs), on numpy
+    a vectorized scatter-add.  ``wdeg`` is the weighted out-degree,
+    which equals the plain degree on unweighted graphs — so this IS
+    classic PageRank there (identical floats: a dangling vertex's value
+    is never read by the reduce), and transition-probability-correct
+    weighted PageRank on weighted graphs (mass is conserved because
+    each vertex's outgoing weight normalizes to 1)."""
     xp = engine.ops.xp
     n = engine.n
-    deg = engine.degrees.astype(engine.ops.float_dtype)
-    dangling = deg == 0
+    wdeg = engine.weighted_degrees.astype(engine.ops.float_dtype)
+    dangling = wdeg == 0
     pr = xp.full(n, 1.0 / n, dtype=engine.ops.float_dtype)
     for _ in range(iters):
-        w = pr / xp.maximum(deg, 1.0)
+        w = xp.where(dangling, 0.0, pr / xp.where(dangling, 1.0, wdeg))
         contrib = engine.edge_map_reduce(w).astype(engine.ops.float_dtype)
         contrib = contrib + xp.where(dangling, pr, 0.0).sum() / n
         pr = (1.0 - damping) / n + damping * contrib
     return engine.to_host(pr)
+
+
+def weighted_pagerank(
+    engine: TraversalEngine, iters: int = 10, damping: float = 0.85
+) -> np.ndarray:
+    """Weighted PageRank — the explicit name for the weighted (+, x)
+    semiring text: ``pagerank`` above is already weight-aware (one
+    algorithm text, both substrates, weighted or not), so this simply
+    delegates; on an unweighted engine it returns exactly
+    ``pagerank``'s output."""
+    return pagerank(engine, iters=iters, damping=damping)
 
 
 def pagerank_multi(
@@ -202,23 +226,95 @@ def pagerank_multi(
     row — with the uniform row that reduces exactly to ``pagerank``'s
     ``/ n`` term.  Every iteration pushes ALL lanes through one
     ``edge_map_reduce_batch`` (on jax: one Pallas segment-sum whose
-    feature dim carries the lanes)."""
+    feature dim carries the lanes; weighted graphs dispatch the
+    weighted kernel and normalize by weighted out-degree, like
+    ``pagerank``)."""
     xp = engine.ops.xp
     fdt = engine.ops.float_dtype
     n = engine.n
-    deg = engine.degrees.astype(fdt)
-    dangling = deg == 0
+    wdeg = engine.weighted_degrees.astype(fdt)
+    dangling = wdeg == 0
     if resets is None:
         resets = xp.full((1, n), 1.0 / n, dtype=fdt)
     else:
         resets = xp.asarray(resets, dtype=fdt)
     pr = resets
+    denom = xp.where(dangling, 1.0, wdeg)[None, :]
     for _ in range(iters):
-        w = pr / xp.maximum(deg, 1.0)[None, :]
+        w = xp.where(dangling[None, :], 0.0, pr / denom)
         contrib = engine.edge_map_reduce_batch(w).astype(fdt)
         dang = xp.where(dangling[None, :], pr, 0.0).sum(axis=1, keepdims=True)
         pr = (1.0 - damping) * resets + damping * (contrib + dang * resets)
     return engine.to_host(pr)
+
+
+# ---------------------------------------------------------------------------
+# SSSP (Bellman–Ford over the (min, +) semiring; weighted edgeMap)
+# ---------------------------------------------------------------------------
+
+
+def _sssp_any(ops, dist, vs):
+    return ops.xp.ones(vs.shape, dtype=bool)
+
+
+def _sssp_relax(ops, dist, us, vs, ws, valid):
+    """Relax every frontier edge: cand[v] = min dist[u] + w(u, v);
+    scatter-min resolves write contention.  ``ws is None`` (an
+    unweighted engine) runs unit weights — hop distances, the BFS
+    metric — decided at trace time."""
+    vals = dist[us] + (1.0 if ws is None else ws.astype(dist.dtype))
+    cand = ops.scatter_min(ops.xp.full_like(dist, ops.xp.inf), vs, vals, valid)
+    newly = cand < dist
+    return ops.xp.where(newly, cand, dist), newly
+
+
+def sssp(engine: TraversalEngine, src: int, direction_optimize: bool = True) -> np.ndarray:
+    """Single-source shortest-path distances (float, +inf = unreached)
+    by frontier-synchronous Bellman–Ford: the frontier is the set of
+    vertices whose distance improved last round, each round is one
+    ``edge_map`` with the Beamer rule intact (sparse relaxes only the
+    frontier's out-edges; dense is the (min, +) pull over all
+    candidates).  At most n-1 rounds for non-negative weights."""
+    ops = engine.ops
+    xp = ops.xp
+    dist = ops.set_at(
+        xp.full(engine.n, xp.inf, dtype=ops.float_dtype), _as_index(ops, src), 0.0
+    )
+    U = engine.frontier_from_ids([src])
+    for _ in range(max(engine.n, 1)):
+        if U.empty:
+            break
+        U, dist = engine.edge_map(
+            U, _sssp_relax, _sssp_any, dist,
+            direction_optimize=direction_optimize,
+        )
+    return engine.to_host(dist)
+
+
+def sssp_multi(
+    engine: TraversalEngine, sources, direction_optimize: bool = True
+) -> np.ndarray:
+    """B SSSP queries against one snapshot: distances float64[B, n].
+
+    Uses the engine's in-trace ``sssp_batch`` driver when available
+    (jax: the whole multi-source Bellman–Ford is ONE dispatch with O(1)
+    host syncs, like ``bfs_batch``); otherwise B serial ``sssp`` calls
+    (the numpy fallback) — same call site, both substrates."""
+    sources = np.asarray(sources, dtype=np.int64).reshape(-1)
+    batch = getattr(engine, "sssp_batch", None)
+    if batch is not None and direction_optimize and sources.size:
+        return engine.to_host(batch(sources)).astype(np.float64)
+    if not sources.size:
+        return np.empty((0, engine.n), np.float64)
+    return np.stack(
+        [
+            np.asarray(
+                sssp(engine, int(s), direction_optimize=direction_optimize),
+                np.float64,
+            )
+            for s in sources
+        ]
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -231,7 +327,7 @@ def _bc_unvisited(ops, state, vs):
     return ~visited[vs]
 
 
-def _bc_forward(ops, state, us, vs, valid):
+def _bc_forward(ops, state, us, vs, ws, valid):
     """sigma[v] += sum of sigma over in-frontier predecessors."""
     sigma, visited = state
     contrib = ops.scatter_add(
@@ -248,7 +344,7 @@ def _bc_next_level(ops, state, vs):
     return level_of[vs] == tgt
 
 
-def _bc_backward(ops, state, us, vs, valid):
+def _bc_backward(ops, state, us, vs, ws, valid):
     """dep[u] += sigma[u]/sigma[v] * (1 + dep[v]) over u@d -> v@d+1."""
     dep, sigma, level_of, tgt = state
     contrib = (sigma[us] / ops.xp.maximum(sigma[vs], 1e-30)) * (1.0 + dep[vs])

@@ -22,6 +22,15 @@ An engine exposes:
   ops                 an ``ArrayOps`` namespace (numpy or jax flavour)
   frontier_from_ids / frontier_from_dense / frontier_all
                       VertexSubset constructors
+  weights             per-edge value array, or None on an unweighted
+                      graph (the property-graph contract, v2): the jax
+                      engine exposes the pool-parallel float32[cap]
+                      array, the numpy engine a per-CSR-edge float64
+                      array.  ``weighted`` is the derived bool.
+  weighted_degrees    sum of out-edge weights per vertex (backend float
+                      array); equals ``degrees`` cast to float on an
+                      unweighted graph, so weighted algorithm texts run
+                      unchanged on both.
   edge_map(U, F, C, state, direction_optimize=True, mode="auto")
                       EDGEMAP(G, U, F, C) -> (U', state').  Dispatches
                       sparse (push) vs dense (pull) by the Ligra/Beamer
@@ -29,10 +38,14 @@ An engine exposes:
                       ``mode`` in {"auto", "sparse", "dense"} forces a
                       direction (tests, benchmarks).
   edge_map_reduce(values)
-                      the dense edgeMap specialized to the (+, x)
-                      semiring: out[v] = sum_{u->v} values[u].  This is
+                      the dense edgeMap specialized to the weighted
+                      (+, x) semiring: out[v] = sum_{u->v} w(u,v) *
+                      values[u] (w == 1 on unweighted graphs).  This is
                       PageRank's whole inner loop; the jax backend
-                      lowers it to kernels/segment_reduce.py.
+                      lowers it to kernels/segment_reduce.py — the
+                      weighted form dispatches the weighted segment-sum
+                      kernel, the unweighted form compiles exactly the
+                      pre-v2 trace (no value array is touched).
   edge_map_reduce_batch(values)
                       the same reduce over a (B, n) batch of value rows
                       (one lane per query).  The base class loops over
@@ -48,6 +61,7 @@ Backends MAY additionally expose in-trace batched drivers:
 
   bfs_batch(sources)  -> (parents, depths), each (B, n)
   bc_batch(sources)   -> dependency scores (B, n)
+  sssp_batch(sources) -> shortest-path distances (B, n) (+inf = unreached)
 
 where a whole multi-source traversal (every frontier round of every
 lane) runs as ONE device dispatch with O(1) host syncs total, instead
@@ -59,23 +73,31 @@ call site serves both substrates.  ``HOST_SYNCS`` below is the spy
 counter tests use to pin the O(1)-sync contract.
 
 F and C are *pure, functional* callbacks written against ``ops`` (which
-is numpy-or-jnp, so one definition serves both backends):
+is numpy-or-jnp, so one definition serves both backends).  Contract v2
+adds the per-edge value lane ``ws`` between ``vs`` and ``valid``:
 
-  C(ops, state, vs)            -> bool mask over vs (target filter)
-  F(ops, state, us, vs, valid) -> (state', out_mask) where out_mask is a
-                                  dense bool[n] marking U' membership
+  C(ops, state, vs)                -> bool mask over vs (target filter)
+  F(ops, state, us, vs, ws, valid) -> (state', out_mask) where out_mask
+                                      is a dense bool[n] marking U'
+                                      membership
 
-``valid`` masks padding / non-selected lanes: the numpy engine passes
-exactly the selected edges (valid all-True); the jax engine passes
-fixed-shape arrays where ``valid`` carries the selection.  All state
-writes MUST go through the masked ``ops.scatter_*`` helpers so the same
-callback is correct on both.  State is an arbitrary pytree of backend
-arrays and is threaded functionally (the jax engine jit-traces F/C, so
-closure mutation would silently not happen).
+``ws`` is the per-edge value array aligned with ``(us, vs)`` — or None
+when the engine's graph is unweighted, so weight-agnostic callbacks
+(BFS, CC, BC) simply ignore it and weighted callbacks (SSSP) branch on
+``ws is None`` at trace time (v1 callbacks migrate by inserting the
+``ws`` parameter; nothing else changes).  ``valid`` masks padding /
+non-selected lanes: the numpy engine passes exactly the selected edges
+(valid all-True); the jax engine passes fixed-shape arrays where
+``valid`` carries the selection.  All state writes MUST go through the
+masked ``ops.scatter_*`` helpers so the same callback is correct on
+both.  State is an arbitrary pytree of backend arrays and is threaded
+functionally (the jax engine jit-traces F/C, so closure mutation would
+silently not happen).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+import threading
+from typing import Any, Callable, Optional, Tuple
 
 import numpy as np
 
@@ -85,15 +107,22 @@ DENSE_THRESHOLD_DENOM = 20
 
 
 class Counter:
-    """A spy counter tests assert against (FLAT_REBUILDS, HOST_SYNCS)."""
+    """A spy counter tests assert against (FLAT_REBUILDS, HOST_SYNCS).
 
-    __slots__ = ("count",)
+    Thread-safe: ``bump`` is hit from ``run_concurrent`` reader threads
+    (every jax frontier-size probe), and an unlocked ``count += 1`` is
+    a racy read-modify-write that would undercount under concurrency.
+    """
+
+    __slots__ = ("count", "_lock")
 
     def __init__(self):
         self.count = 0
+        self._lock = threading.Lock()
 
     def bump(self) -> None:
-        self.count += 1
+        with self._lock:
+            self.count += 1
 
 
 # Counts blocking device->host syncs issued by the traversal layer (jax
@@ -146,6 +175,23 @@ class TraversalEngine:
     @property
     def degrees(self):  # pragma: no cover - interface
         raise NotImplementedError
+
+    @property
+    def weights(self) -> Optional[Any]:
+        """Per-edge value array (backend layout), or None when the
+        underlying graph carries no edge values."""
+        return None
+
+    @property
+    def weighted(self) -> bool:
+        return self.weights is not None
+
+    @property
+    def weighted_degrees(self):
+        """Sum of out-edge weights per vertex; == ``degrees`` (as float)
+        on unweighted graphs, so one weighted algorithm text serves
+        both.  Backends with real weights override."""
+        return self.degrees.astype(self.ops.float_dtype)
 
     def frontier_from_ids(self, ids):  # pragma: no cover - interface
         raise NotImplementedError

@@ -38,6 +38,19 @@ specializations of the dense direction: a segmented row-cumsum over the
 dst-major pool (scatter-free; the batched analogue of
 ``edge_map_reduce``).
 
+Weighted graphs (contract v2, DESIGN.md §8)
+-------------------------------------------
+A ``FlatGraph`` carrying a value array threads it through every path:
+the sparse branch gathers ``weights[eidx]`` alongside the expanded
+edge lanes, the dense branch hands F the pool-parallel array directly,
+``edge_map_reduce`` dispatches the WEIGHTED Pallas segment-sum
+(``out[v] = sum w(u,v) * values[u]``), and the in-trace ``sssp_batch``
+driver runs the (min, +) semiring via a segmented row-min scan over
+the dst-major pool.  When ``g.weights is None`` every one of these
+branches folds away at trace time: no value array is allocated or
+read, and the compiled steps are byte-identical to the unweighted
+engine's (tests spy on the kernel dispatch to pin this).
+
 Precision contract: the engine computes in ``float32`` by default —
 the TPU-native dtype, and what the kernel reduce always accumulated in
 anyway (the old ``float_dtype = jnp.float64`` default contradicted the
@@ -162,7 +175,10 @@ class EngineAux(NamedTuple):
     device work instead of the old O(m log m) host precompute, and the
     pytree itself can be version-pinned and reused across queries (the
     whole-graph loops and batched drivers below all accept it
-    prebuilt).
+    prebuilt).  ``w_by_dst`` is the per-edge value array permuted
+    dst-major (for weighted pull rounds and the weighted kernel
+    reduce); it is None — no array, no extra leaves, identical traces —
+    on unweighted graphs.
     """
 
     src_c: jax.Array  # int32[cap] clipped sources
@@ -173,6 +189,7 @@ class EngineAux(NamedTuple):
     src_by_dst: jax.Array  # int32[cap] sources permuted dst-major
     valid_by_dst: jax.Array  # bool[cap]
     dst_offsets: jax.Array  # int32[n+1] segment bounds into dst_sorted
+    w_by_dst: Optional[jax.Array] = None  # float32[cap] values dst-major
 
 
 def _pool_endpoints(g: FlatGraph):
@@ -215,6 +232,7 @@ def engine_aux(g: FlatGraph) -> EngineAux:
         dst_offsets=jnp.searchsorted(
             dst_sorted, jnp.arange(n + 1, dtype=jnp.int32)
         ).astype(jnp.int32),
+        w_by_dst=None if g.weights is None else g.weights[order],
     )
 
 
@@ -225,8 +243,9 @@ def engine_aux(g: FlatGraph) -> EngineAux:
 
 def _sparse_expand(offsets, keys, U, n: int, ids_budget: int, edge_budget: int):
     """Fixed-shape push expansion of one bool[n] frontier:
-    (us, vs, ev) edge lanes where ``ev`` masks the padded tail and
-    edges naming nonexistent destination vertices."""
+    (us, vs, ev, eidx) edge lanes where ``ev`` masks the padded tail
+    and edges naming nonexistent destination vertices; ``eidx`` is each
+    lane's pool slot (for gathering per-edge values alongside)."""
     ids_raw = jnp.nonzero(U, size=ids_budget, fill_value=n)[0]
     vid = ids_raw < n
     ids = jnp.where(vid, ids_raw, 0).astype(jnp.int32)
@@ -244,7 +263,7 @@ def _sparse_expand(offsets, keys, U, n: int, ids_budget: int, edge_budget: int):
     ev = ev & (vs_raw < n)  # drop edges naming nonexistent vertices
     vs = jnp.clip(vs_raw.astype(jnp.int32), 0, n - 1)
     us = ids[seg]
-    return us, vs, ev
+    return us, vs, ev, eidx
 
 
 @functools.partial(
@@ -259,6 +278,7 @@ def _edge_map_step(
     evalid,  # bool[cap] slot < m
     degrees,  # int32[n]
     m,  # int32 scalar
+    weights,  # float32[cap] per-edge values, or None (unweighted)
     U,  # bool[n] frontier
     state,  # pytree
     *,
@@ -274,11 +294,12 @@ def _edge_map_step(
 
     def dense_branch(state):
         valid = evalid & U[src_c] & cmask[dst_c]
-        return F(ops, state, src_c, dst_c, valid)
+        return F(ops, state, src_c, dst_c, weights, valid)
 
     def sparse_branch(state):
-        us, vs, ev = _sparse_expand(offsets, keys, U, n, ids_budget, edge_budget)
-        return F(ops, state, us, vs, ev & cmask[vs])
+        us, vs, ev, eidx = _sparse_expand(offsets, keys, U, n, ids_budget, edge_budget)
+        ws = None if weights is None else weights[eidx]
+        return F(ops, state, us, vs, ws, ev & cmask[vs])
 
     if mode == "dense":
         state, out = dense_branch(state)
@@ -304,6 +325,7 @@ def _edge_map_step_batch(
     evalid,
     degrees,
     m,
+    weights,  # float32[cap] per-edge values, or None (unweighted)
     U_b,  # bool[B, n] frontier batch (one lane per query)
     state_b,  # pytree with (B, ...) leaves
     *,
@@ -328,12 +350,13 @@ def _edge_map_step_batch(
     def dense_lane(U, state):
         cmask = C(ops, state, jnp.arange(n, dtype=jnp.int32))
         valid = evalid & U[src_c] & cmask[dst_c]
-        return F(ops, state, src_c, dst_c, valid)
+        return F(ops, state, src_c, dst_c, weights, valid)
 
     def sparse_lane(U, state):
         cmask = C(ops, state, jnp.arange(n, dtype=jnp.int32))
-        us, vs, ev = _sparse_expand(offsets, keys, U, n, ids_budget, edge_budget)
-        return F(ops, state, us, vs, ev & cmask[vs])
+        us, vs, ev, eidx = _sparse_expand(offsets, keys, U, n, ids_budget, edge_budget)
+        ws = None if weights is None else weights[eidx]
+        return F(ops, state, us, vs, ws, ev & cmask[vs])
 
     if mode == "dense":
         return jax.vmap(dense_lane)(U_b, state_b)
@@ -381,6 +404,33 @@ def _segsum_rows(msg_b: jax.Array, bounds: jax.Array) -> jax.Array:
     return padded[:, bounds[1:]] - padded[:, bounds[:-1]]
 
 
+def _segmin_rows(msg_b: jax.Array, bounds: jax.Array) -> jax.Array:
+    """Row-wise segmented MIN over a contiguously-segmented axis:
+    (B, cap) messages + int32[S+1] segment bounds -> (B, S) minima
+    (+inf for empty segments).
+
+    min has no inverse, so the cumsum/boundary-difference trick of
+    ``_segsum_rows`` does not apply; instead this is the classic
+    *segmented scan*: an ``associative_scan`` over (value, start-flag)
+    pairs whose operator resets at segment starts, then one gather of
+    each segment's last position.  Still scatter-free and one
+    log-depth pass — the (min, +) analogue of the pull rounds'
+    row-cumsum, used by ``sssp_batch``."""
+    cap = msg_b.shape[1]
+    flags = jnp.zeros(cap, dtype=bool).at[bounds[:-1]].set(True, mode="drop")
+    flags_b = jnp.broadcast_to(flags, msg_b.shape)
+
+    def op(x, y):
+        mx, fx = x
+        my, fy = y
+        return jnp.where(fy, my, jnp.minimum(mx, my)), fx | fy
+
+    scanned, _ = jax.lax.associative_scan(op, (msg_b, flags_b), axis=1)
+    inf = jnp.asarray(jnp.inf, msg_b.dtype)
+    ends = jnp.clip(bounds[1:] - 1, 0, cap - 1)
+    return jnp.where(bounds[1:] > bounds[:-1], scanned[:, ends], inf)
+
+
 @functools.partial(jax.jit, static_argnames=("ids_budget", "edge_budget"))
 def bfs_batch(
     g: FlatGraph,
@@ -414,7 +464,7 @@ def bfs_batch(
 
     def push(f_b):
         def one(U):
-            us, vs, ev = _sparse_expand(g.offsets, g.keys, U, n, ids_budget, edge_budget)
+            us, vs, ev, _ = _sparse_expand(g.offsets, g.keys, U, n, ids_budget, edge_budget)
             return jnp.zeros(n, bool).at[jnp.where(ev, vs, n)].max(True, mode="drop")
 
         return jax.vmap(one)(f_b)
@@ -512,6 +562,93 @@ def bc_batch(
     return dep.at[lane, sources].set(0.0)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("ids_budget", "edge_budget", "float_dtype")
+)
+def sssp_batch(
+    g: FlatGraph,
+    aux: EngineAux,
+    sources: jax.Array,  # int32[B], each in [0, n)
+    *,
+    ids_budget: int,
+    edge_budget: int,
+    float_dtype=jnp.float32,
+) -> jax.Array:
+    """Multi-source Bellman–Ford over the weighted (min, +) semiring,
+    fully in-trace: returns distances float[B, n] (+inf = unreached).
+
+    The whole frontier loop (frontier = vertices whose distance
+    improved last round) of all B lanes is one ``lax.while_loop`` —
+    one device dispatch, zero per-round host syncs, exactly the
+    ``bfs_batch`` contract.  Per round the batched Beamer rule picks
+    push (budget-bounded vmapped expand + masked scatter-min) or pull;
+    the pull round is the (min, +) semiring specialization of the
+    dense direction — a segmented row-MIN scan over the dst-major pool
+    (``_segmin_rows``), the weighted analogue of the BFS pull's
+    row-cumsum.  An unweighted graph runs the same driver with unit
+    weights (hop distances), so ``sssp_batch`` never changes what an
+    unweighted stream compiles for BFS/BC/PageRank.
+    """
+    n = g.offsets.shape[0] - 1
+    cap = g.keys.shape[0]
+    B = sources.shape[0]
+    lane = jnp.arange(B)
+    sources = sources.astype(jnp.int32)
+    inf = jnp.asarray(jnp.inf, float_dtype)
+    w_pool = (
+        jnp.ones(cap, float_dtype)
+        if g.weights is None
+        else g.weights.astype(float_dtype)
+    )
+    w_by_dst = (
+        jnp.ones(cap, float_dtype)
+        if aux.w_by_dst is None
+        else aux.w_by_dst.astype(float_dtype)
+    )
+    dist = jnp.full((B, n), inf, float_dtype).at[lane, sources].set(0.0)
+    frontier = jnp.zeros((B, n), bool).at[lane, sources].set(True)
+    thresh = jnp.maximum(1, g.m // DENSE_THRESHOLD_DENOM)
+
+    def push(args):
+        f_b, d_b = args
+
+        def one(U, d):
+            us, vs, ev, eidx = _sparse_expand(
+                g.offsets, g.keys, U, n, ids_budget, edge_budget
+            )
+            vals = d[us] + w_pool[eidx]
+            return (
+                jnp.full(n, inf, float_dtype)
+                .at[jnp.where(ev, vs, n)]
+                .min(vals, mode="drop")
+            )
+
+        return jax.vmap(one)(f_b, d_b)
+
+    def pull(args):
+        f_b, d_b = args
+        msg = jnp.where(
+            f_b[:, aux.src_by_dst] & aux.valid_by_dst[None, :],
+            d_b[:, aux.src_by_dst] + w_by_dst[None, :],
+            inf,
+        )
+        return _segmin_rows(msg, aux.dst_offsets)
+
+    def cond(carry):
+        return carry[0].any()
+
+    def body(carry):
+        f, d = carry
+        size_b = f.sum(axis=1)
+        deg_b = jnp.where(f, aux.degrees[None, :], 0).sum(axis=1)
+        cand = jax.lax.cond(((size_b + deg_b) > thresh).any(), pull, push, (f, d))
+        newly = cand < d
+        return newly, jnp.where(newly, cand, d)
+
+    _, dist = jax.lax.while_loop(cond, body, (frontier, dist))
+    return dist
+
+
 class JaxEngine(TraversalEngine):
     """Engine over an (immutable) ``FlatGraph`` snapshot."""
 
@@ -541,6 +678,8 @@ class JaxEngine(TraversalEngine):
         self._src_by_dst = self.aux.src_by_dst
         self._valid_by_dst = self.aux.valid_by_dst
         self._dst_offsets = self.aux.dst_offsets
+        self._w_by_dst = self.aux.w_by_dst  # None on unweighted graphs
+        self._wdeg = None  # lazy weighted out-degree cache
 
         # static sparse budgets: a frontier routed sparse obeys
         # |U| + deg(U) <= m/20 <= cap/20, so cap-derived budgets bound
@@ -562,6 +701,26 @@ class JaxEngine(TraversalEngine):
     @property
     def degrees(self) -> jax.Array:
         return self._degrees
+
+    @property
+    def weights(self) -> Optional[jax.Array]:
+        """The pool-parallel per-edge value array (float32[cap]), or
+        None on unweighted graphs."""
+        return self.g.weights
+
+    @property
+    def weighted_degrees(self) -> jax.Array:
+        """Sum of out-edge weights per vertex.  The src-major pool is
+        its own CSR segmentation, so this is one scatter-free segmented
+        row-cumsum over ``g.offsets`` (cached per engine)."""
+        if self.g.weights is None:
+            return self._degrees.astype(self.ops.float_dtype)
+        if self._wdeg is None:
+            msg = jnp.where(
+                self._evalid, self.g.weights.astype(self.ops.float_dtype), 0.0
+            )
+            self._wdeg = _segsum_rows(msg[None, :], self.g.offsets)[0]
+        return self._wdeg
 
     # -- frontiers ----------------------------------------------------------
     def frontier_from_ids(self, ids) -> JaxVertexSubset:
@@ -597,6 +756,7 @@ class JaxEngine(TraversalEngine):
             self._evalid,
             self._degrees,
             self.g.m,
+            self.g.weights,
             U.dense,
             state,
             F=F,
@@ -634,6 +794,7 @@ class JaxEngine(TraversalEngine):
             self._evalid,
             self._degrees,
             self.g.m,
+            self.g.weights,
             jnp.asarray(U_b, dtype=bool),
             state_b,
             F=F,
@@ -683,17 +844,40 @@ class JaxEngine(TraversalEngine):
             self.g, self.aux, padded, float_dtype=self.ops.float_dtype
         )[:B]
 
+    def sssp_batch(self, sources) -> jax.Array:
+        """Shortest-path distances float[B, n] (+inf = unreached); ONE
+        dispatch for the whole multi-source Bellman–Ford (see
+        module-level ``sssp_batch``)."""
+        padded, B = self._quantized_sources(sources)
+        return sssp_batch(
+            self.g,
+            self.aux,
+            padded,
+            ids_budget=self._auto_ids_budget,
+            edge_budget=self._auto_edge_budget,
+            float_dtype=self.ops.float_dtype,
+        )[:B]
+
     def cc_labels(self) -> jax.Array:
         """Whole-graph min-label CC, fully in-trace over the prebuilt
         aux (the unified entry point for the jit fixpoint loop)."""
         return cc_labels(self.g, aux=self.aux)
 
     # -- dense semiring reduce (Pallas segment-sum) -------------------------
+    # Weighted graphs dispatch the WEIGHTED kernel (out[v] = sum w(u,v)
+    # * values[u], the per-edge weight multiplied on the MXU inside the
+    # one-hot matmul); unweighted graphs compile exactly the pre-v2
+    # trace — no value array is read, no weighted kernel is built.
     def edge_map_reduce(self, values: jax.Array) -> jax.Array:
         msg = _reduce_msgs(
             values, self._src_by_dst, self._valid_by_dst, dtype=self.ops.float_dtype
         )
-        out = kops.segment_sum(self._dst_sorted, msg[:, None], self._n)
+        if self._w_by_dst is None:
+            out = kops.segment_sum(self._dst_sorted, msg[:, None], self._n)
+        else:
+            out = kops.segment_sum_weighted(
+                self._dst_sorted, self._w_by_dst, msg[:, None], self._n
+            )
         return out[:, 0].astype(values.dtype)
 
     def edge_map_reduce_batch(self, values: jax.Array) -> jax.Array:
@@ -702,7 +886,12 @@ class JaxEngine(TraversalEngine):
         msg = _reduce_msgs_batch(
             values, self._src_by_dst, self._valid_by_dst, dtype=self.ops.float_dtype
         )
-        out = kops.segment_sum(self._dst_sorted, msg, self._n)
+        if self._w_by_dst is None:
+            out = kops.segment_sum(self._dst_sorted, msg, self._n)
+        else:
+            out = kops.segment_sum_weighted(
+                self._dst_sorted, self._w_by_dst, msg, self._n
+            )
         return out.T.astype(values.dtype)
 
     # -- vertexMap ----------------------------------------------------------

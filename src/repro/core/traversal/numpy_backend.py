@@ -107,7 +107,11 @@ NP_OPS = NumpyOps()
 class NumpyEngine(TraversalEngine):
     """Engine over any object with the FlatSnapshot protocol:
     ``.n``, ``.neighbors(v)``, ``.degree(v)`` (and optionally cached
-    ``.degrees`` / ``.m``, which ``graph.FlatSnapshot`` provides)."""
+    ``.degrees`` / ``.m``, which ``graph.FlatSnapshot`` provides).
+    Weighted snapshots additionally expose ``.weighted`` and
+    ``.edge_weights(srcs, dsts)`` (vectorized per-edge values), which
+    the engine threads into the ``ws`` lane of every F callback and
+    into the weighted ``edge_map_reduce`` semiring."""
 
     ops = NP_OPS
 
@@ -124,6 +128,10 @@ class NumpyEngine(TraversalEngine):
         self._m = int(self._degrees.sum()) if m is None else int(m)
         self._full_csr = None
         self._rev_csr_cache = None
+        self._weighted = bool(getattr(snap, "weighted", False))
+        self._csr_w: Optional[np.ndarray] = None
+        self._csr_starts_cache: Optional[np.ndarray] = None
+        self._wdeg: Optional[np.ndarray] = None
         self.last_mode: Optional[str] = None  # "sparse" | "dense" (for tests)
 
     # -- graph shape --------------------------------------------------------
@@ -139,6 +147,41 @@ class NumpyEngine(TraversalEngine):
     def degrees(self) -> np.ndarray:
         return self._degrees
 
+    @property
+    def weights(self) -> Optional[np.ndarray]:
+        """Per-edge weights aligned with the full CSR (``_csr()``), or
+        None on unweighted snapshots.  Materialized ONCE per engine
+        (one vectorized lookup against the snapshot's weight export);
+        every edgeMap round slices this cache by CSR position instead
+        of re-deriving weights per selected edge."""
+        if not self._weighted:
+            return None
+        if self._csr_w is None:
+            srcs, nbrs = self._csr()
+            self._csr_w = self.snap.edge_weights(srcs, nbrs)
+        return self._csr_w
+
+    @property
+    def weighted_degrees(self) -> np.ndarray:
+        if not self._weighted:
+            return self._degrees.astype(np.float64)
+        if self._wdeg is None:
+            srcs, _ = self._csr()
+            wdeg = np.zeros(self._n, dtype=np.float64)
+            np.add.at(wdeg, srcs, self.weights)
+            self._wdeg = wdeg
+        return self._wdeg
+
+    def _csr_starts(self) -> np.ndarray:
+        """offsets[v] of the full CSR: vertex v's adjacency list (in
+        ``snap.neighbors(v)`` order, the same order every gather uses)
+        occupies csr positions [starts[v], starts[v] + deg(v))."""
+        if self._csr_starts_cache is None:
+            starts = np.zeros(self._n + 1, dtype=np.int64)
+            np.cumsum(self._degrees, out=starts[1:])
+            self._csr_starts_cache = starts
+        return self._csr_starts_cache
+
     def _csr(self):
         """Cached full CSR (srcs, nbrs) for whole-graph passes."""
         if self._full_csr is None:
@@ -148,11 +191,12 @@ class NumpyEngine(TraversalEngine):
         return self._full_csr
 
     def _rev_csr(self):
-        """Cached reverse CSR (in_offsets[n+1], in_srcs sorted by dst):
-        the dense ("pull") direction scans candidates' IN-neighbors, so
-        it must be direction-exact even on asymmetric edge sets (the
-        jax backend is; symmetric graphs make the two views coincide).
-        Built once per snapshot, amortized over every dense round."""
+        """Cached reverse CSR (in_offsets[n+1], in_srcs sorted by dst,
+        in_w weights in the same order or None): the dense ("pull")
+        direction scans candidates' IN-neighbors, so it must be
+        direction-exact even on asymmetric edge sets (the jax backend
+        is; symmetric graphs make the two views coincide).  Built once
+        per snapshot, amortized over every dense round."""
         if self._rev_csr_cache is None:
             srcs, nbrs = self._csr()
             order = np.argsort(nbrs, kind="stable")
@@ -161,7 +205,8 @@ class NumpyEngine(TraversalEngine):
             in_offsets = np.searchsorted(
                 sorted_dst, np.arange(self._n + 1, dtype=np.int64)
             )
-            self._rev_csr_cache = (in_offsets, in_srcs)
+            in_w = self.weights[order] if self._weighted else None
+            self._rev_csr_cache = (in_offsets, in_srcs, in_w)
         return self._rev_csr_cache
 
     # -- frontiers ----------------------------------------------------------
@@ -196,10 +241,19 @@ class NumpyEngine(TraversalEngine):
 
     def _edge_map_sparse(self, us, F, C, state):
         offsets, nbrs = gather_csr(self.snap, us)
-        srcs = np.repeat(us, np.diff(offsets))
+        degs = np.diff(offsets)
+        srcs = np.repeat(us, degs)
         keep = C(NP_OPS, state, nbrs) if nbrs.size else np.empty(0, bool)
         u_e, v_e = srcs[keep], nbrs[keep]
-        state, out = F(NP_OPS, state, u_e, v_e, np.ones(u_e.size, dtype=bool))
+        ws = None
+        if self._weighted:
+            # the frontier gather lists each vertex's neighbors in the
+            # same order as the full CSR, so weights are a slice of the
+            # per-engine cache at csr_starts[u] + within-list position
+            # (no per-round key lookups)
+            within = np.arange(nbrs.size) - np.repeat(offsets[:-1], degs)
+            ws = self.weights[np.repeat(self._csr_starts()[us], degs) + within][keep]
+        state, out = F(NP_OPS, state, u_e, v_e, ws, np.ones(u_e.size, dtype=bool))
         return from_dense(out), state
 
     def _edge_map_dense(self, U, F, C, state):
@@ -207,22 +261,27 @@ class NumpyEngine(TraversalEngine):
         candidates = np.flatnonzero(C(NP_OPS, state, np.arange(self._n, dtype=np.int64)))
         if candidates.size == 0:
             return from_dense(np.zeros(self._n, dtype=bool)), state
-        in_offsets, in_srcs = self._rev_csr()
+        in_offsets, in_srcs, in_w = self._rev_csr()
         counts = in_offsets[candidates + 1] - in_offsets[candidates]
         starts = in_offsets[candidates]
         dsts = np.repeat(candidates, counts)
         pos = np.arange(dsts.size) - np.repeat(np.cumsum(counts) - counts, counts)
-        srcs = in_srcs[np.repeat(starts, counts) + pos]
+        gidx = np.repeat(starts, counts) + pos
+        srcs = in_srcs[gidx]
         sel = in_u[srcs] if srcs.size else np.empty(0, bool)
         u_e, v_e = srcs[sel], dsts[sel]
-        state, out = F(NP_OPS, state, u_e, v_e, np.ones(u_e.size, dtype=bool))
+        ws = in_w[gidx][sel] if in_w is not None else None
+        state, out = F(NP_OPS, state, u_e, v_e, ws, np.ones(u_e.size, dtype=bool))
         return from_dense(out), state
 
-    # -- dense semiring reduce ---------------------------------------------
+    # -- dense semiring reduce (weighted (+, x): w == 1 when unweighted) ----
     def edge_map_reduce(self, values: np.ndarray) -> np.ndarray:
         srcs, nbrs = self._csr()
         out = np.zeros(self._n, dtype=np.result_type(values.dtype, np.float64))
-        np.add.at(out, nbrs, values[srcs])
+        contrib = values[srcs]
+        if self._weighted:
+            contrib = contrib * self.weights
+        np.add.at(out, nbrs, contrib)
         return out
 
     # -- vertexMap ----------------------------------------------------------
@@ -288,7 +347,7 @@ def edge_map(
     def C2(ops, state, vs):
         return C(vs)
 
-    def F2(ops, state, us, vs, valid):
+    def F2(ops, state, us, vs, ws, valid):
         out = np.zeros(eng.n, dtype=bool)
         if us.size:
             hit = F(us, vs)

@@ -102,6 +102,23 @@ def segment_sum(dst: jax.Array, msg: jax.Array, n_out: int) -> jax.Array:
     return out[:n_out]
 
 
+def segment_sum_weighted(
+    dst: jax.Array, w: jax.Array, msg: jax.Array, n_out: int
+) -> jax.Array:
+    """Weighted sorted segment-sum (out[d] = sum w[e] * msg[e]); same
+    padding contract as ``segment_sum`` (weight pads are 0, so padding
+    edges contribute nothing even before the OOB dst drop)."""
+    n_pad = n_out + (-n_out) % segment_reduce.DST_BLOCK
+    d = _pad_to(dst, segment_reduce.EDGE_BLOCK, 0, value=n_pad)
+    wp = _pad_to(w, segment_reduce.EDGE_BLOCK, 0)
+    m = _pad_to(msg, segment_reduce.EDGE_BLOCK, 0)
+    n_with_pad = n_pad + segment_reduce.DST_BLOCK
+    out = segment_reduce.segment_sum_weighted_sorted(
+        d, wp, m, n_with_pad, interpret=_interpret()
+    )
+    return out[:n_out]
+
+
 def fanout_aggregate(feats: jax.Array, mask: jax.Array, op: str = "mean") -> jax.Array:
     B = feats.shape[0]
     f = _pad_to(feats, 8, 0)

@@ -76,6 +76,68 @@ def segment_sum_sorted(
     )(dst.reshape(1, -1).astype(jnp.int32), msg).astype(msg.dtype)
 
 
+def _segsum_weighted_kernel(dst_ref, w_ref, msg_ref, out_ref):
+    """One (DST_BLOCK out-rows) x (EDGE_BLOCK edges) tile of the
+    WEIGHTED segment sum: out[d] = sum_{e: dst[e]=d} w[e] * msg[e].
+
+    The per-edge weight is folded into the one-hot selection matrix
+    (``M[r, e] = w[e] * 1[dst[e] == r]``) so the weighting rides the
+    same MXU matmul — no extra pass over the message block, and the
+    unweighted kernel above stays untouched (unweighted graphs never
+    build or dispatch this kernel)."""
+    i = pl.program_id(0)  # dst block
+    j = pl.program_id(1)  # edge block
+
+    @pl.when(j == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dst = dst_ref[...]  # (1, E) int32 destination ids of this edge block
+    w = w_ref[...]  # (1, E) per-edge weights
+    d0 = i * out_ref.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (out_ref.shape[0], dst.shape[1]), 0)
+    onehot_w = jnp.where(dst - d0 == rows, w, 0.0).astype(msg_ref.dtype)  # (R, E)
+    out_ref[...] += jax.lax.dot(
+        onehot_w, msg_ref[...], precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_out", "edge_block", "dst_block", "interpret")
+)
+def segment_sum_weighted_sorted(
+    dst: jax.Array,  # int32 (E,) sorted ascending; pad with n_out (OOB)
+    w: jax.Array,  # float (E,) per-edge weights; pad 0
+    msg: jax.Array,  # (E, D) messages
+    n_out: int,
+    edge_block: int = EDGE_BLOCK,
+    dst_block: int = DST_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[d, :] = sum of w[e] * msg[e, :] over edges with dst == d.
+    Same layout contract as ``segment_sum_sorted`` (ops.py pads)."""
+    E, D = msg.shape
+    assert E % edge_block == 0 and n_out % dst_block == 0
+    grid = (n_out // dst_block, E // edge_block)
+    return pl.pallas_call(
+        _segsum_weighted_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, edge_block), lambda i, j: (0, j)),
+            pl.BlockSpec((1, edge_block), lambda i, j: (0, j)),
+            pl.BlockSpec((edge_block, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((dst_block, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_out, D), jnp.float32),
+        interpret=interpret,
+    )(
+        dst.reshape(1, -1).astype(jnp.int32),
+        w.reshape(1, -1).astype(msg.dtype),
+        msg,
+    ).astype(msg.dtype)
+
+
 # ---------------------------------------------------------------------------
 # fixed-fanout aggregation (sampled GNN regime: GraphSAGE minibatch)
 # ---------------------------------------------------------------------------

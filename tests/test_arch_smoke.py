@@ -142,12 +142,13 @@ def test_dcn_v2_smoke_all_heads():
 def test_aspen_stream_smoke():
     """The paper's own config: streaming update + query on the flat level."""
     from repro.core import flat_graph as fg
+    from repro.core.traversal.jax_backend import bfs_levels
     from repro.data.rmat import rmat_edges, symmetrize
 
     edges = symmetrize(rmat_edges(8, 1000, seed=0))
     g = fg.from_edges(256, edges[:-100])
     g2 = fg.insert_edges_host(g, edges[-100:])
-    levels = np.asarray(fg.bfs(g2, int(edges[0, 0])))
+    levels = np.asarray(bfs_levels(g2, int(edges[0, 0])))
     assert levels.shape == (256,)
     assert levels[int(edges[0, 0])] == 0
 

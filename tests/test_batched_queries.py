@@ -121,7 +121,7 @@ def test_bfs_batch_duplicate_and_isolated_sources(rmat_graph):
 # ---------------------------------------------------------------------------
 
 
-def _count_F(ops, state, us, vs, valid):
+def _count_F(ops, state, us, vs, ws, valid):
     out = ops.scatter_or(ops.xp.zeros(state.shape[0], dtype=bool), vs, valid)
     return state, out
 

@@ -1,0 +1,381 @@
+"""Property-graph API v2: weighted edgeMap end to end (DESIGN.md §8).
+
+Pins the PR's contract:
+  (1) backend-generic ``sssp`` / ``weighted_pagerank`` with EXACT
+      numpy-vs-jax parity on random weighted RMAT graphs (integer
+      weights: every (min, +) distance is exact in f32), plus a scipy
+      ``csgraph.bellman_ford`` cross-check;
+  (2) value-array storage semantics: insert overwrites the weight of a
+      duplicate key, delete drops it, through the flat rank-merge AND
+      the tree-side weight map, published atomically by the stream;
+  (3) the unweighted path is untouched: no value array is allocated
+      anywhere and the weighted segment-sum kernel is never dispatched
+      (spy), while weighted engines DO dispatch it;
+  (4) ``sssp_batch`` keeps the O(1)-host-syncs contract (HOST_SYNCS
+      spy) and matches serial ``sssp`` on both backends;
+  (5) the ``Counter`` spy is thread-safe (bump() from reader threads).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import flat_graph as fg
+from repro.core import graph as G
+from repro.core.streaming import AspenStream
+from repro.core.traversal import HOST_SYNCS, Counter, NumpyEngine, make_engine
+from repro.core.traversal import algorithms as talg
+from repro.data.rmat import rmat_edges, symmetrize
+
+
+def _pair_weights(edges: np.ndarray, mod: int = 7) -> np.ndarray:
+    """Deterministic symmetric integer weights in [1, mod]: both
+    directions of an undirected pair get the same value, and integer
+    weights keep every shortest-path sum exact in float32 (so the f32
+    jax backend and the f64 numpy backend agree EXACTLY)."""
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    return ((lo * 1000003 + hi) % mod + 1).astype(np.float64)
+
+
+@pytest.fixture(scope="module")
+def weighted_graph():
+    edges = symmetrize(rmat_edges(8, 2000, seed=21))  # 256 vertices
+    return 256, edges, _pair_weights(edges)
+
+
+@pytest.fixture(scope="module")
+def engines(weighted_graph):
+    n, edges, w = weighted_graph
+    eng_np = NumpyEngine(G.flat_snapshot(G.build_graph(n, edges, weights=w)))
+    eng_jx = make_engine(fg.from_edges(n, edges, weights=w))
+    return eng_np, eng_jx
+
+
+@pytest.fixture(scope="module")
+def sources(weighted_graph):
+    n, _, _ = weighted_graph
+    return np.random.default_rng(5).integers(0, n, 8)
+
+
+# ---------------------------------------------------------------------------
+# backend parity: SSSP and weighted PageRank (one text, two substrates)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("diropt", [False, True])
+def test_sssp_parity_exact(weighted_graph, engines, diropt):
+    n, edges, w = weighted_graph
+    eng_np, eng_jx = engines
+    src = int(edges[0, 0])
+    d_np = talg.sssp(eng_np, src, direction_optimize=diropt)
+    d_jx = talg.sssp(eng_jx, src, direction_optimize=diropt)
+    # integer weights: f32 sums are exact -> parity is EXACT, not approx
+    np.testing.assert_array_equal(d_np, np.asarray(d_jx, np.float64))
+    assert d_np[src] == 0.0
+    # unreachable vertices are +inf on both
+    np.testing.assert_array_equal(np.isinf(d_np), np.isinf(np.asarray(d_jx)))
+
+
+def test_sssp_scipy_bellman_ford_cross_check(weighted_graph, engines):
+    scipy = pytest.importorskip("scipy")
+    from scipy.sparse import csr_matrix
+    from scipy.sparse.csgraph import bellman_ford
+
+    n, edges, w = weighted_graph
+    eng_np, eng_jx = engines
+    src = int(edges[0, 0])
+    # duplicate directed edges would sum in the COO->CSR conversion;
+    # build from the deduped pool (the graph the engines actually see)
+    ea = fg.to_edge_array(eng_jx.g)
+    wa = fg.to_weight_array(eng_jx.g)
+    A = csr_matrix((wa, (ea[:, 0], ea[:, 1])), shape=(n, n))
+    d_ref = bellman_ford(A, directed=True, indices=src)
+    np.testing.assert_allclose(talg.sssp(eng_np, src), d_ref)
+    np.testing.assert_allclose(
+        np.asarray(talg.sssp(eng_jx, src), np.float64), d_ref
+    )
+
+
+def test_sssp_respects_weights_not_hops(engines):
+    """A 2-hop cheap path must beat a 1-hop expensive edge."""
+    gf = fg.from_edges(
+        4,
+        np.array([[0, 1], [1, 2], [0, 2]]),
+        weights=np.array([1.0, 1.0, 10.0]),
+    )
+    for eng in (make_engine(gf), ):
+        d = talg.sssp(eng, 0)
+        assert d[2] == 2.0  # via 0->1->2, not the direct 10.0 edge
+    # numpy engine over the weighted tree agrees
+    gt = G.build_graph(
+        4, np.array([[0, 1], [1, 2], [0, 2]]),
+        weights=np.array([1.0, 1.0, 10.0]),
+    )
+    assert talg.sssp(NumpyEngine(G.flat_snapshot(gt)), 0)[2] == 2.0
+
+
+def test_weighted_pagerank_parity(engines):
+    eng_np, eng_jx = engines
+    pr_np = talg.weighted_pagerank(eng_np, iters=12)
+    pr_jx = talg.weighted_pagerank(eng_jx, iters=12)
+    np.testing.assert_allclose(pr_np.sum(), 1.0, rtol=1e-6)  # mass conserved
+    np.testing.assert_allclose(pr_np, pr_jx, atol=1e-6)
+    # weights matter: the unweighted ranking differs
+    pr_unw = talg.pagerank(
+        NumpyEngine(G.flat_snapshot(G.build_graph(eng_np.n, fg.to_edge_array(eng_jx.g)))),
+        iters=12,
+    )
+    assert not np.allclose(pr_np, pr_unw, atol=1e-6)
+
+
+def test_weighted_pagerank_equals_pagerank_when_unweighted(weighted_graph):
+    n, edges, _ = weighted_graph
+    eng = NumpyEngine(G.flat_snapshot(G.build_graph(n, edges)))
+    np.testing.assert_array_equal(
+        talg.weighted_pagerank(eng, iters=8), talg.pagerank(eng, iters=8)
+    )
+
+
+def test_weighted_degrees(weighted_graph, engines):
+    n, edges, w = weighted_graph
+    eng_np, eng_jx = engines
+    ea = fg.to_edge_array(eng_jx.g)
+    wa = fg.to_weight_array(eng_jx.g)
+    expect = np.zeros(n)
+    np.add.at(expect, ea[:, 0], wa)
+    np.testing.assert_allclose(eng_np.weighted_degrees, expect)
+    np.testing.assert_allclose(
+        np.asarray(eng_jx.weighted_degrees, np.float64), expect, rtol=1e-6
+    )
+    # unweighted engines fall back to plain degrees (as float)
+    eng_u = make_engine(fg.from_edges(n, edges))
+    np.testing.assert_array_equal(
+        np.asarray(eng_u.weighted_degrees), np.asarray(eng_u.degrees, np.float32)
+    )
+
+
+def test_edge_map_reduce_weighted_semiring(weighted_graph, engines):
+    """out[v] = sum w(u,v) * values[u] on both backends."""
+    n, edges, w = weighted_graph
+    eng_np, eng_jx = engines
+    vals = np.random.default_rng(0).standard_normal(n)
+    ea = fg.to_edge_array(eng_jx.g)
+    wa = fg.to_weight_array(eng_jx.g)
+    expect = np.zeros(n)
+    np.add.at(expect, ea[:, 1], wa * vals[ea[:, 0]])
+    np.testing.assert_allclose(eng_np.edge_map_reduce(vals), expect)
+    np.testing.assert_allclose(
+        np.asarray(eng_jx.edge_map_reduce(vals.astype(np.float32)), np.float64),
+        expect, rtol=1e-4, atol=1e-4,
+    )
+    # batched form agrees row-wise with the scalar form
+    rows = np.stack([vals, -vals, np.ones(n)])
+    out_b = eng_np.edge_map_reduce_batch(rows)
+    for i in range(3):
+        np.testing.assert_allclose(out_b[i], eng_np.edge_map_reduce(rows[i]))
+
+
+# ---------------------------------------------------------------------------
+# batched SSSP: O(1) syncs + parity with serial on both backends
+# ---------------------------------------------------------------------------
+
+
+def test_sssp_multi_matches_serial_both_backends(engines, sources):
+    eng_np, eng_jx = engines
+    d_jx = talg.sssp_multi(eng_jx, sources)  # in-trace driver
+    d_np = talg.sssp_multi(eng_np, sources)  # serial-loop fallback
+    assert d_jx.shape == d_np.shape == (len(sources), eng_np.n)
+    np.testing.assert_array_equal(d_np, d_jx)  # integer weights: exact
+    for i, s in enumerate(sources[:3]):  # and against serial on jax itself
+        np.testing.assert_array_equal(talg.sssp(eng_jx, int(s)), d_jx[i].astype(np.float32))
+
+
+def test_sssp_batch_constant_syncs(engines, sources):
+    _, eng_jx = engines
+    talg.sssp_multi(eng_jx, sources)  # warm the jit at B=8
+    talg.sssp_multi(eng_jx, sources[:4])  # ... and at B=4
+    base = HOST_SYNCS.count
+    talg.sssp_multi(eng_jx, sources[:4])
+    syncs_b4 = HOST_SYNCS.count - base
+    base = HOST_SYNCS.count
+    talg.sssp_multi(eng_jx, sources)
+    syncs_b8 = HOST_SYNCS.count - base
+    assert syncs_b8 == syncs_b4 <= 2  # O(1), independent of B
+    base = HOST_SYNCS.count
+    for s in sources[:4]:
+        talg.sssp(eng_jx, int(s))
+    assert HOST_SYNCS.count - base > 4 * syncs_b4  # the loop the batch kills
+
+
+def test_stream_query_batch_sssp(weighted_graph):
+    n, edges, w = weighted_graph
+    s = AspenStream(G.build_graph(n, edges, weights=w))
+    srcs = np.random.default_rng(2).integers(0, n, 4)
+    d_j = s.query_batch(srcs, kind="sssp", backend="jax")
+    d_n = s.query_batch(srcs, kind="sssp", backend="numpy")
+    np.testing.assert_array_equal(d_j, d_n)
+
+
+# ---------------------------------------------------------------------------
+# storage semantics: overwrite on insert, drop on delete, mirror parity
+# ---------------------------------------------------------------------------
+
+
+def test_insert_overwrites_duplicate_key_weight():
+    g = fg.from_edges(4, np.array([[0, 1], [1, 2]]), weights=np.array([1.0, 2.0]))
+    g2 = fg.insert_edges_host(
+        g, np.array([[0, 1], [2, 3]]), weights=np.array([7.0, 3.0])
+    )
+    ea, wa = fg.to_edge_array(g2), fg.to_weight_array(g2)
+    got = {tuple(e): float(x) for e, x in zip(ea.tolist(), wa)}
+    assert got == {(0, 1): 7.0, (1, 2): 2.0, (2, 3): 3.0}
+    # baseline sort-union implements the same overwrite semantics
+    from repro.core import flat_ctree as fct
+
+    pool = fct.FlatCTree(g.keys, g.m, g.weights)
+    batch = fg.batch_from_edges(np.array([[0, 1]]), weights=np.array([7.0]))
+    merged = fct.union_sort(pool, batch, g.edge_capacity)
+    assert float(fct.to_val_array(merged)[0]) == 7.0
+
+
+def test_delete_drops_weight_and_stream_publishes_atomically(weighted_graph):
+    n, edges, w = weighted_graph
+    s = AspenStream(G.build_graph(n, edges[:1000], weights=w[:1000]))
+    s.insert_edges(edges[1000:], symmetric=False, weights=w[1000:])
+    # mirror == tree weights, edge for edge
+    mirror = s.flat_graph()
+    ea, wa = fg.to_edge_array(mirror), fg.to_weight_array(mirror)
+    np.testing.assert_allclose(
+        wa, s.flat_snapshot().edge_weights(ea[:, 0], ea[:, 1])
+    )
+    # overwrite through the stream, both substrates see the new value
+    e0 = edges[:1]
+    s.insert_edges(e0, symmetric=False, weights=np.array([42.0]))
+    snap = s.flat_snapshot()
+    assert snap.edge_weights(e0[:, 0], e0[:, 1])[0] == 42.0
+    m2 = s.flat_graph()
+    ea2, wa2 = fg.to_edge_array(m2), fg.to_weight_array(m2)
+    hit = (ea2[:, 0] == e0[0, 0]) & (ea2[:, 1] == e0[0, 1])
+    assert wa2[hit][0] == 42.0
+    # delete drops the key AND the value from both substrates
+    s.delete_edges(e0, symmetric=False)
+    ea3 = fg.to_edge_array(s.flat_graph())
+    assert not ((ea3[:, 0] == e0[0, 0]) & (ea3[:, 1] == e0[0, 1])).any()
+
+
+def test_weighted_upgrade_mid_stream():
+    """The first weighted batch upgrades an unweighted stream: existing
+    edges read as unit weight, new edges carry their values."""
+    s = AspenStream(G.build_graph(4, np.array([[0, 1], [1, 0]])))
+    assert s.flat_graph().weights is None
+    s.insert_edges(np.array([[1, 2]]), symmetric=False, weights=np.array([5.0]))
+    m = s.flat_graph()
+    assert m.weights is not None
+    got = {
+        tuple(e): float(x)
+        for e, x in zip(fg.to_edge_array(m).tolist(), fg.to_weight_array(m))
+    }
+    assert got == {(0, 1): 1.0, (1, 0): 1.0, (1, 2): 5.0}
+    snap = s.flat_snapshot()
+    np.testing.assert_allclose(
+        snap.edge_weights(np.array([0, 1, 1]), np.array([1, 0, 2])),
+        [1.0, 1.0, 5.0],
+    )
+
+
+def test_symmetric_insert_carries_weight_both_directions(weighted_graph):
+    n, _, _ = weighted_graph
+    s = AspenStream(G.build_graph(n, np.empty((0, 2), np.int64)))
+    s.insert_edges(np.array([[3, 9]]), weights=np.array([2.5]))  # symmetric
+    snap = s.flat_snapshot()
+    np.testing.assert_allclose(
+        snap.edge_weights(np.array([3, 9]), np.array([9, 3])), [2.5, 2.5]
+    )
+
+
+def test_mirrorless_weighted_rebuild_path(weighted_graph):
+    """mirror=False streams rebuild the FlatGraph per engine request;
+    the rebuild must carry the weights."""
+    n, edges, w = weighted_graph
+    s = AspenStream(G.build_graph(n, edges, weights=w), mirror=False)
+    eng = s.engine("jax")
+    assert eng.weights is not None
+    src = int(edges[0, 0])
+    np.testing.assert_array_equal(
+        np.asarray(talg.sssp(eng, src), np.float64),
+        talg.sssp(s.engine("numpy"), src),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the unweighted path is untouched (no value array, no weighted kernel)
+# ---------------------------------------------------------------------------
+
+
+def test_unweighted_path_allocates_no_value_array(weighted_graph, monkeypatch):
+    n, edges, _ = weighted_graph
+    s = AspenStream(G.build_graph(n, edges[:1500]))
+    s.insert_edges(edges[1500:], symmetric=False)
+    s.delete_edges(edges[:10], symmetric=False)
+    mirror = s.flat_graph()
+    assert mirror.weights is None  # storage: no value array
+    eng = s.engine("jax")
+    assert eng.weights is None and not eng.weighted
+    assert eng.aux.w_by_dst is None  # aux: no extra leaves
+
+    # kernels: the weighted segment-sum is NEVER dispatched unweighted
+    import repro.core.traversal.jax_backend as jb
+
+    def _trap(*a, **k):
+        raise AssertionError("weighted kernel dispatched on unweighted path")
+
+    with monkeypatch.context() as mp:
+        mp.setattr(jb.kops, "segment_sum_weighted", _trap)
+        talg.pagerank(eng, iters=2)
+        talg.pagerank_multi(eng, iters=2)
+    # ... while a weighted engine DOES dispatch it
+    eng_w = make_engine(
+        fg.from_edges(n, edges, weights=_pair_weights(edges))
+    )
+    calls = {"n": 0}
+    real = jb.kops.segment_sum_weighted
+
+    def spy(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    with monkeypatch.context() as mp:
+        mp.setattr(jb.kops, "segment_sum_weighted", spy)
+        talg.weighted_pagerank(eng_w, iters=3)
+    assert calls["n"] == 3  # one weighted kernel reduce per iteration
+
+
+def test_unweighted_tree_has_no_weight_state(weighted_graph):
+    n, edges, _ = weighted_graph
+    g = G.build_graph(n, edges)
+    assert g.wtree is None
+    g2 = G.insert_edges(g, edges[:5])
+    assert g2.wtree is None  # unweighted insert stays value-free
+    assert not G.flat_snapshot(g2).weighted
+
+
+# ---------------------------------------------------------------------------
+# Counter spy thread-safety (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_counter_bump_is_thread_safe():
+    c = Counter()
+    per_thread, n_threads = 5_000, 8
+
+    def worker():
+        for _ in range(per_thread):
+            c.bump()
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.count == per_thread * n_threads  # racy += would undercount
