@@ -690,6 +690,85 @@ def jax_asarray_f32(x):
 
 
 # ---------------------------------------------------------------------------
+# SHARD: the sharded traversal/update substrate vs n_shards (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def bench_sharded(quick: bool = False) -> List[Row]:
+    """Queries/s and updates/s on the range-sharded substrate as the
+    shard count grows:
+
+      * batched BFS (`bfs_multi` through the in-trace sharded driver)
+        and PageRank (shard-local segsum + psum_scatter reduce) on
+        ``ShardedEngine``;
+      * the shard-local rank-merge update step (edges/s per batch).
+
+    On a 1-device CPU container the multi-shard rows measure the
+    block-per-device overhead, NOT mesh scaling — run this table under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (or real
+    hardware) for the scaling story; the jax single-chip engine row is
+    the S-independent baseline."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import flat_graph as fg
+    from repro.core import sharded_pool as sp
+    from repro.core.traversal import make_engine
+    from repro.core.traversal import algorithms as talg
+    from repro.data.rmat import rmat_edges
+
+    n, edges = _test_graph(11, 30_000)
+    rng = np.random.default_rng(0)
+    B = 8 if quick else 16
+    srcs = rng.integers(0, n, B)
+    nd = jax.device_count()
+    shard_counts = [1, 2] if quick else [1, 2, 4, 8]
+    rows: List[Row] = []
+
+    # S-independent single-chip baseline
+    eng_jx = make_engine(fg.from_edges(n, edges))
+    talg.bfs_multi(eng_jx, srcs)
+    t_base = _timeit(lambda: talg.bfs_multi(eng_jx, srcs), repeats=2)
+    rows.append(
+        ("SHARD/bfs_batch_qps/jax", B / t_base, "queries/s",
+         "single-chip JaxEngine baseline")
+    )
+
+    bat = rmat_edges(11, 1024, seed=1)
+    bkeys = np.unique((bat[:, 0].astype(np.int64) << 32) | bat[:, 1])
+    pad = int(2 ** np.ceil(np.log2(bkeys.size + 1)))
+    batch = np.full(pad, sp.SENT, np.int64)
+    batch[: bkeys.size] = bkeys
+    batch_j = jnp.asarray(batch)
+
+    for S in shard_counts:
+        tag = f"S={S}"
+        sg = sp.graph_from_edges(n, edges, n_shards=S)
+        eng = make_engine(sg)
+        talg.bfs_multi(eng, srcs)  # warm the driver jit at this S
+        t_q = _timeit(lambda: talg.bfs_multi(eng, srcs), repeats=2)
+        talg.pagerank(eng, iters=3)
+        t_pr = _timeit(lambda: talg.pagerank(eng, iters=3), repeats=2)
+
+        mesh = sp.pool_mesh(S)
+        step = sp.make_insert_step(mesh, ("shard",))
+        pool = sp.from_array(
+            sp.to_array(sg.pool), S, cap_per=int(sg.pool.data.shape[1] * 2)
+        )
+        jax_block(step(pool, batch_j).data)  # warm
+        t_u = _timeit(lambda: jax_block(step(pool, batch_j).data), repeats=3)
+        rows += [
+            (f"SHARD/bfs_batch_qps/{tag}", B / t_q, "queries/s",
+             f"sharded engine, devices={nd}"),
+            (f"SHARD/pagerank_ms/{tag}", t_pr * 1e3, "ms",
+             "3-iter power iteration, psum_scatter reduce"),
+            (f"SHARD/insert_eps/{tag}", bkeys.size / t_u, "edges/s",
+             "shard-local rank-merge, one batch all-gather"),
+        ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # kernel micro-benchmarks (§Perf support; CPU = oracle timings only)
 # ---------------------------------------------------------------------------
 
@@ -741,5 +820,6 @@ ALL_BENCHES = {
     "streaming": bench_streaming,
     "query_batch": bench_query_batch,
     "weighted": bench_weighted,
+    "sharded": bench_sharded,
     "kernels": bench_kernels,
 }

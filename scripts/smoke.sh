@@ -23,13 +23,14 @@ if [[ "${1:-}" != "--probe-only" ]]; then
   python -m pytest -x -q ${MARK[@]+"${MARK[@]}"}
 fi
 
-echo "== engine parity probe (numpy vs jax traversal) =="
+echo "== engine parity probe (numpy vs jax vs sharded traversal) =="
 python - <<'EOF'
 import time
 
 import numpy as np
 
 from repro.core import flat_graph as fg, graph as G
+from repro.core import sharded_pool as sp
 from repro.core.traversal import NumpyEngine, make_engine
 from repro.core.traversal import algorithms as talg
 from repro.data.rmat import rmat_edges, symmetrize
@@ -39,11 +40,16 @@ edges = symmetrize(rmat_edges(9, 4000, seed=3))
 n = 1 << 9
 eng_np = NumpyEngine(G.flat_snapshot(G.build_graph(n, edges)))
 eng_jx = make_engine(fg.from_edges(n, edges))
+eng_sh = make_engine(sp.graph_from_edges(n, edges, n_shards=4))
 src = int(edges[0, 0])
 
 p_np, p_jx = talg.bfs(eng_np, src), talg.bfs(eng_jx, src)
 assert np.array_equal(talg.bfs_depths(p_np, src), talg.bfs_depths(p_jx, src)), "BFS depths diverge"
 assert np.allclose(talg.pagerank(eng_np, iters=5), talg.pagerank(eng_jx, iters=5), atol=1e-5), "PageRank diverges"
 assert np.array_equal(talg.connected_components(eng_np), talg.connected_components(eng_jx)), "CC labels diverge"
-print(f"parity OK (bfs/pagerank/cc, n={n}, m={edges.shape[0]}) in {time.time() - t0:.1f}s")
+assert np.array_equal(p_np, talg.bfs(eng_sh, src)), "sharded BFS parents diverge"
+assert np.array_equal(
+    talg.connected_components(eng_np), talg.connected_components(eng_sh)
+), "sharded CC labels diverge"
+print(f"parity OK (bfs/pagerank/cc x 3 backends, n={n}, m={edges.shape[0]}) in {time.time() - t0:.1f}s")
 EOF

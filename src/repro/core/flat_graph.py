@@ -284,8 +284,3 @@ def insert_edges_host(
 def delete_edges_host(g: FlatGraph, edges: np.ndarray) -> FlatGraph:
     batch = batch_from_edges(edges)
     return delete_edges(g, batch, g.edge_capacity)
-
-
-# NOTE: the deprecated traversal wrappers (``edge_map_dense`` / ``bfs`` /
-# ``connected_components``) are gone — use ``traversal.jax_backend``'s
-# ``dense_expand`` / ``bfs_levels`` / ``cc_labels`` (or the engine API).

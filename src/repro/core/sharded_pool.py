@@ -1,4 +1,4 @@
-"""Sharded flat C-tree pool: the beyond-paper distributed optimization.
+"""Sharded flat C-tree pool: the beyond-paper distributed substrate.
 
 The baseline flat union (flat_ctree.union_merge) is a *global* rank-merge:
 under GSPMD, the cross-shard searchsorteds force all-gathers of the whole
@@ -15,7 +15,8 @@ like a distributed LSM level).  A batch update becomes:
 Collective traffic drops from O(pool) to O(batch); the merge itself stays
 bandwidth-optimal locally.  Queries (member) need one searchsorted against
 the shard boundary table (replicated, n_shards entries) then a local
-probe — same depth as before.
+binary-search probe over flat index math — O(queries · log cap) scalar
+gathers on the wire, never a cross-shard row gather.
 
 Rebalancing: shards fill unevenly; when any shard exceeds its capacity
 the host triggers a REBALANCE (an O(n) all-to-all redistribution to equal
@@ -23,18 +24,33 @@ counts — amortized over many updates, like LSM compaction).  The
 imbalance statistics and trigger live here; the dry run lowers the
 steady-state update step.
 
+Graph substrate (DESIGN.md §9)
+------------------------------
+Beyond the bare sorted-int64 set, the pool is a full graph substrate:
+keys are the packed ``(src << 32) | dst`` edge encoding of
+``flat_graph``, an optional VALUE LANE carries one float32 per slot
+(the property-graph weight array, permuted by the same shard-local
+rank-merge; insert overwrites, delete drops), ``make_delete_step``
+is the shard-local MultiDelete, and ``shard_aux`` derives the
+per-shard CSR auxiliary state (src offsets, clipped endpoints,
+dst-major permutation — the shard-local ``EngineAux``) that the
+sharded traversal backend (``traversal/sharded_backend.py``) runs
+edgeMap over.  ``ShardedGraph`` pairs the pool with its static vertex
+count; ``AspenStream(mirror="sharded")`` maintains one per version.
+
 Implemented with shard_map so the collective schedule is explicit, not
-GSPMD-inferred.
+GSPMD-inferred.  ``n_shards`` may exceed the mesh size (each device then
+owns a BLOCK of shard rows); it must be a multiple of the mesh size.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from .flat_ctree import sentinel_for
 
@@ -52,32 +68,66 @@ class ShardedPool(NamedTuple):
     data  : (n_shards, cap_per) sorted within each shard; pad = SENT
     n     : (n_shards,) valid counts
     lo    : (n_shards,) inclusive lower key boundary of each shard
+    vals  : optional (n_shards, cap_per) per-slot values (pad 0),
+            permuted by every shard-local merge / compaction alongside
+            the keys (insert overwrites a duplicate key's value, delete
+            drops it — the flat_ctree.FlatCTree.vals semantics, sharded)
     """
 
     data: jax.Array
     n: jax.Array
     lo: jax.Array
+    vals: Optional[jax.Array] = None
 
 
-def from_array(values: np.ndarray, n_shards: int, cap_per: int | None = None) -> ShardedPool:
-    v = np.unique(np.asarray(values, dtype=np.int64))
-    per = -(-v.size // n_shards)
+def from_array(
+    values: np.ndarray,
+    n_shards: int,
+    cap_per: int | None = None,
+    vals: np.ndarray | None = None,
+) -> ShardedPool:
+    """Host build: dedup + range-partition to equal counts.  ``vals``
+    optionally attaches one value per element (a duplicated key keeps
+    the FIRST occurrence's value, matching ``flat_ctree.from_array``)."""
+    raw = np.asarray(values, dtype=np.int64)
+    if vals is None:
+        v = np.unique(raw)
+        w = None
+    else:
+        v, first = np.unique(raw, return_index=True)
+        w = np.asarray(vals, dtype=np.float32).reshape(-1)[first]
+    per = -(-v.size // n_shards) if v.size else 1
     if cap_per is None:
         cap_per = max(8, int(2 ** np.ceil(np.log2(per * 2 + 1))))
     data = np.full((n_shards, cap_per), SENT, dtype=np.int64)
+    wdata = np.zeros((n_shards, cap_per), dtype=np.float32) if w is not None else None
     n = np.zeros((n_shards,), dtype=np.int32)
     lo = np.full((n_shards,), np.iinfo(np.int64).min, dtype=np.int64)
+    # An EMPTY shard's lo must start strictly past every key stored
+    # before it (last key + 1, not a copy of the previous lo): with
+    # duplicated boundaries, a query equal to the boundary key routes —
+    # by the searchsorted(side="right") convention — to the LAST shard
+    # claiming that lo, an empty one, and membership misses; worse, the
+    # insert step would re-insert that key there as a duplicate.
+    next_lo = 0
     for s in range(n_shards):
         chunk = v[s * per : (s + 1) * per]
         data[s, : chunk.size] = chunk
         n[s] = chunk.size
-        lo[s] = chunk[0] if chunk.size else (lo[s - 1] if s else 0)
-    # boundaries must be monotone even for empty shards
-    for s in range(1, n_shards):
-        if n[s] == 0:
-            lo[s] = max(lo[s - 1], lo[s])
+        if chunk.size:
+            lo[s] = chunk[0]
+            next_lo = int(chunk[-1]) + 1
+        else:
+            lo[s] = next_lo
+        if wdata is not None:
+            wdata[s, : chunk.size] = w[s * per : (s + 1) * per]
     lo[0] = np.iinfo(np.int64).min
-    return ShardedPool(jnp.asarray(data), jnp.asarray(n), jnp.asarray(lo))
+    return ShardedPool(
+        jnp.asarray(data),
+        jnp.asarray(n),
+        jnp.asarray(lo),
+        None if wdata is None else jnp.asarray(wdata),
+    )
 
 
 def to_array(p: ShardedPool) -> np.ndarray:
@@ -86,16 +136,50 @@ def to_array(p: ShardedPool) -> np.ndarray:
     return np.concatenate([data[s, : n[s]] for s in range(data.shape[0])])
 
 
-def _local_merge(pool_row: jax.Array, n_valid: jax.Array, batch: jax.Array,
-                 b_lo: jax.Array, b_hi: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Merge batch[b_lo:b_hi) into one shard row (fixed shapes, O(n+k))."""
+def to_val_array(p: ShardedPool) -> np.ndarray | None:
+    """Valid-prefix values aligned with ``to_array`` (None on plain sets)."""
+    if p.vals is None:
+        return None
+    vals = np.asarray(p.vals)
+    n = np.asarray(p.n)
+    return np.concatenate([vals[s, : n[s]] for s in range(vals.shape[0])])
+
+
+def with_unit_vals(p: ShardedPool) -> ShardedPool:
+    """Attach a unit value lane (the upgrade an unweighted pool takes
+    when its first weighted batch arrives)."""
+    if p.vals is not None:
+        return p
+    return p._replace(vals=jnp.ones(p.data.shape, jnp.float32))
+
+
+def _local_merge(
+    pool_row: jax.Array,
+    n_valid: jax.Array,
+    batch: jax.Array,
+    b_lo: jax.Array,
+    b_hi: jax.Array,
+    vrow: jax.Array | None = None,
+    bvals: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array | None]:
+    """Merge batch[b_lo:b_hi) into one shard row (fixed shapes, O(n+k)).
+
+    The value lane, when present, rides the same two scatters as
+    ``flat_ctree.union_merge``: a duplicate batch key lands its value on
+    the matched pool slot (insert overwrites)."""
     cap = pool_row.shape[0]
     kcap = batch.shape[0]
     # mask the batch to this shard's range
     idx = jnp.arange(kcap)
     mine = (idx >= b_lo) & (idx < b_hi)
-    b = jnp.where(mine, batch, SENT)
-    b = jnp.sort(b)  # my rows to the front (already sorted among themselves)
+    masked = jnp.where(mine, batch, SENT)
+    if bvals is None:
+        b = jnp.sort(masked)  # my rows to the front (already sorted among themselves)
+        bv = None
+    else:
+        order = jnp.argsort(masked)  # stable: value lane rides along
+        b = masked[order]
+        bv = bvals[order]
     n_mine = (b_hi - b_lo).astype(jnp.int32)
     valid_a = jnp.arange(cap) < n_valid
     valid_b = jnp.arange(kcap) < n_mine
@@ -118,38 +202,148 @@ def _local_merge(pool_row: jax.Array, n_valid: jax.Array, batch: jax.Array,
     out = jnp.full((cap,), SENT, dtype=pool_row.dtype)
     out = out.at[pos_a].set(pool_row, mode="drop")
     out = out.at[pos_b].set(b, mode="drop")
-    return out, n_valid + keep_b.sum().astype(jnp.int32)
+    n_new = n_valid + keep_b.sum().astype(jnp.int32)
+    if vrow is None:
+        return out, n_new, None
+    vout = jnp.zeros((cap,), dtype=vrow.dtype)
+    vout = vout.at[pos_a].set(vrow, mode="drop")
+    vout = vout.at[pos_b].set(bv, mode="drop")
+    pos_dup = jnp.where(dup_b, pos_a[ia], cap)  # insert overwrites
+    vout = vout.at[pos_dup].set(bv, mode="drop")
+    return out, n_new, vout
 
 
 def make_insert_step(mesh: Mesh, axis_names: Tuple[str, ...]):
     """Build the shard_map'd update step for a given mesh.
 
     axis_names: the mesh axes the shard dimension is split over (all of
-    them: every chip owns one key range)."""
+    them: every chip owns one BLOCK of shard rows — n_shards must be a
+    multiple of the mesh size; the common case is one row per chip).
+
+    The returned ``step(pool, batch, batch_vals=None)`` merges a sorted,
+    deduped, SENT-padded batch into every shard's key range.  A value
+    lane on either side upgrades the other to unit values at trace time
+    (the flat_ctree ``_aligned_vals`` semantics)."""
     flat_axes = axis_names
-
-    def local(data, n, lo, hi, batch):
-        # shapes inside shard_map: data (1, cap), n (1,), lo/hi (1,),
-        # batch (kcap,) REPLICATED (this is the one collective: GSPMD
-        # all-gathers the batch operand once).
-        b_lo = jnp.searchsorted(batch, lo[0])
-        b_hi = jnp.searchsorted(batch, hi[0])
-        out, n_new = _local_merge(data[0], n[0], batch, b_lo, b_hi)
-        return out[None], n_new[None]
-
     spec_sharded = P(flat_axes)
     spec_sharded2 = P(flat_axes, None)
 
+    def local_plain(data, n, lo, hi, batch):
+        # shapes inside shard_map: data (rows, cap), n/lo/hi (rows,),
+        # batch (kcap,) REPLICATED (this is the one collective: GSPMD
+        # all-gathers the batch operand once).
+        def row(drow, nrow, lorow, hirow):
+            b_lo = jnp.searchsorted(batch, lorow)
+            b_hi = jnp.searchsorted(batch, hirow)
+            out, n_new, _ = _local_merge(drow, nrow, batch, b_lo, b_hi)
+            return out, n_new
+
+        return jax.vmap(row)(data, n, lo, hi)
+
+    def local_vals(data, n, vals, lo, hi, batch, bvals):
+        def row(drow, nrow, vrow, lorow, hirow):
+            b_lo = jnp.searchsorted(batch, lorow)
+            b_hi = jnp.searchsorted(batch, hirow)
+            return _local_merge(drow, nrow, batch, b_lo, b_hi, vrow, bvals)
+
+        return jax.vmap(row)(data, n, vals, lo, hi)
+
+    step_plain = _shard_map(
+        local_plain,
+        mesh=mesh,
+        in_specs=(spec_sharded2, spec_sharded, spec_sharded, spec_sharded, P()),
+        out_specs=(spec_sharded2, spec_sharded),
+    )
+    step_vals = _shard_map(
+        local_vals,
+        mesh=mesh,
+        in_specs=(
+            spec_sharded2, spec_sharded, spec_sharded2,
+            spec_sharded, spec_sharded, P(), P(),
+        ),
+        out_specs=(spec_sharded2, spec_sharded, spec_sharded2),
+    )
+
+    @jax.jit  # retraces only on shape / weightedness change
+    def step(
+        pool: ShardedPool, batch: jax.Array, batch_vals: jax.Array | None = None
+    ) -> ShardedPool:
+        hi = jnp.concatenate(
+            [pool.lo[1:], jnp.asarray([jnp.iinfo(jnp.int64).max], jnp.int64)]
+        )
+        if pool.vals is None and batch_vals is None:
+            out, n_new = step_plain(pool.data, pool.n, pool.lo, hi, batch)
+            return ShardedPool(out, n_new, pool.lo)
+        vals = pool.vals if pool.vals is not None else jnp.ones(
+            pool.data.shape, batch_vals.dtype
+        )
+        bv = batch_vals if batch_vals is not None else jnp.ones(
+            batch.shape, vals.dtype
+        )
+        out, n_new, vout = step_vals(pool.data, pool.n, vals, pool.lo, hi, batch, bv)
+        return ShardedPool(out, n_new, pool.lo, vout)
+
+    return step
+
+
+def make_delete_step(mesh: Mesh, axis_names: Tuple[str, ...]):
+    """Shard-local MultiDelete: each shard drops its elements found in
+    the (replicated, sorted, SENT-padded) batch and compacts in place.
+    Shard boundaries are unchanged — deletion never moves keys across
+    ranges.  A dropped key drops its value-lane entry."""
+    flat_axes = axis_names
+    spec_sharded = P(flat_axes)
+    spec_sharded2 = P(flat_axes, None)
+
+    def _rows(data, n, batch, vals=None):
+        kcap = batch.shape[0]
+
+        def row(drow, nrow, vrow):
+            cap = drow.shape[0]
+            idx = jnp.minimum(jnp.searchsorted(batch, drow), kcap - 1)
+            hit = (batch[idx] == drow) & (drow != SENT)
+            keep = (jnp.arange(cap) < nrow) & ~hit
+            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+            pos = jnp.where(keep, pos, cap)
+            out = jnp.full((cap,), SENT, jnp.int64).at[pos].set(drow, mode="drop")
+            n_new = keep.sum().astype(jnp.int32)
+            if vrow is None:
+                return out, n_new, None
+            vout = jnp.zeros((cap,), vrow.dtype).at[pos].set(vrow, mode="drop")
+            return out, n_new, vout
+
+        if vals is None:
+            out, n_new, _ = jax.vmap(lambda d, c: row(d, c, None))(data, n)
+            return out, n_new, None
+        return jax.vmap(row)(data, n, vals)
+
+    def local_plain(data, n, batch):
+        out, n_new, _ = _rows(data, n, batch)
+        return out, n_new
+
+    def local_vals(data, n, vals, batch):
+        return _rows(data, n, batch, vals)
+
+    step_plain = _shard_map(
+        local_plain,
+        mesh=mesh,
+        in_specs=(spec_sharded2, spec_sharded, P()),
+        out_specs=(spec_sharded2, spec_sharded),
+    )
+    step_vals = _shard_map(
+        local_vals,
+        mesh=mesh,
+        in_specs=(spec_sharded2, spec_sharded, spec_sharded2, P()),
+        out_specs=(spec_sharded2, spec_sharded, spec_sharded2),
+    )
+
+    @jax.jit
     def step(pool: ShardedPool, batch: jax.Array) -> ShardedPool:
-        n_shards = pool.data.shape[0]
-        hi = jnp.concatenate([pool.lo[1:], jnp.asarray([jnp.iinfo(jnp.int64).max], jnp.int64)])
-        out, n_new = _shard_map(
-            local,
-            mesh=mesh,
-            in_specs=(spec_sharded2, spec_sharded, spec_sharded, spec_sharded, P()),
-            out_specs=(spec_sharded2, spec_sharded),
-        )(pool.data, pool.n, pool.lo, hi, batch)
-        return ShardedPool(out, n_new, pool.lo)
+        if pool.vals is None:
+            out, n_new = step_plain(pool.data, pool.n, batch)
+            return ShardedPool(out, n_new, pool.lo)
+        out, n_new, vout = step_vals(pool.data, pool.n, pool.vals, batch)
+        return ShardedPool(out, n_new, pool.lo, vout)
 
     return step
 
@@ -161,17 +355,199 @@ def make_insert_step(mesh: Mesh, axis_names: Tuple[str, ...]):
 
 @jax.jit
 def member(p: ShardedPool, queries: jax.Array) -> jax.Array:
-    """shard id via boundary table, then local probe (vectorized)."""
-    s = jnp.clip(jnp.searchsorted(p.lo, queries, side="right") - 1, 0, p.lo.shape[0] - 1)
-    rows = p.data[s]
-    j = jnp.clip(jax.vmap(jnp.searchsorted)(rows, queries), 0, p.data.shape[1] - 1)
-    return jnp.take_along_axis(rows, j[:, None], axis=1)[:, 0] == queries
+    """shard id via the (replicated) boundary table, then a LOCAL probe
+    by flat index math: an unrolled binary search over
+    ``data.reshape(-1)[s * cap + mid]`` — O(queries · log cap) scalar
+    gathers, never a cross-shard ``p.data[s]`` row gather (which would
+    put a (queries, cap) block on the wire under GSPMD)."""
+    S, cap = p.data.shape
+    q = queries.astype(jnp.int64)
+    flat = p.data.reshape(-1)
+    s = jnp.clip(jnp.searchsorted(p.lo, q, side="right") - 1, 0, S - 1)
+    base = s.astype(jnp.int64) * cap
+    ns = p.n[s].astype(jnp.int64)
+    lo = jnp.zeros(q.shape, jnp.int64)
+    hi = ns
+    for _ in range(int(np.ceil(np.log2(cap))) + 1):  # static unroll
+        active = lo < hi
+        mid = (lo + hi) // 2
+        v = flat[base + mid]
+        go_right = active & (v < q)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+    probe = flat[base + jnp.minimum(lo, cap - 1)]
+    return (lo < ns) & (probe == q)
 
 
 def needs_rebalance(p: ShardedPool, slack: float = 0.9) -> bool:
     return bool((np.asarray(p.n) >= slack * p.data.shape[1]).any())
 
 
-def rebalance(p: ShardedPool) -> ShardedPool:
-    """O(n) redistribution to equal counts (the amortized compaction)."""
-    return from_array(to_array(p), p.data.shape[0], cap_per=p.data.shape[1])
+def rebalance(p: ShardedPool, cap_per: int | None = None) -> ShardedPool:
+    """O(n) redistribution to equal counts (the amortized compaction);
+    the value lane, when present, is preserved through the round-trip."""
+    return from_array(
+        to_array(p),
+        p.data.shape[0],
+        cap_per=p.data.shape[1] if cap_per is None else cap_per,
+        vals=to_val_array(p),
+    )
+
+
+# ---------------------------------------------------------------------------
+# graph substrate: packed-key pool + per-shard CSR aux (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+class ShardedGraph(NamedTuple):
+    """A graph over the range-sharded pool: keys are the packed
+    ``(src << 32) | dst`` encoding, ``n`` is the STATIC vertex count
+    (host-known; never passed through jit as a tracer).  The pool's
+    value lane, when present, is the per-edge weight array."""
+
+    pool: ShardedPool
+    n: int
+
+    @property
+    def n_shards(self) -> int:
+        return self.pool.data.shape[0]
+
+    @property
+    def weighted(self) -> bool:
+        return self.pool.vals is not None
+
+
+class ShardAux(NamedTuple):
+    """Per-shard CSR auxiliary state: the shard-local ``EngineAux``.
+
+    Every field is laid out (n_shards, ...) so a ``P('shard', ...)``
+    in_spec hands each device exactly its own rows; refreshing it is ONE
+    fixed-shape jit call over the pool (``shard_aux``), the sharded
+    analogue of ``jax_backend.engine_aux``.
+
+    offsets      : int32[S, n+1] CSR into each shard's OWN row (vertex
+                   v's local adjacency occupies row[offsets[s, v] :
+                   offsets[s, v+1]]; empty for vertices outside the
+                   shard's key range)
+    src_c, dst_c : int32[S, cap] clipped endpoints per slot
+    evalid       : bool[S, cap] slot holds a real edge with a real dst
+    degrees      : int32[S, n] per-shard out-degree contribution
+    deg_total    : int32[n] global out-degrees (the one cross-shard
+                   reduction, done once per refresh, not per query)
+    dst_sorted   : int32[S, cap] destinations ascending per row (pad n)
+    src_by_dst   : int32[S, cap] sources permuted dst-major per row
+    valid_by_dst : bool[S, cap]
+    dst_offsets  : int32[S, n+1] segment bounds into dst_sorted per row
+    w_by_dst     : float32[S, cap] values dst-major, or None
+    """
+
+    offsets: jax.Array
+    src_c: jax.Array
+    dst_c: jax.Array
+    evalid: jax.Array
+    degrees: jax.Array
+    deg_total: jax.Array
+    dst_sorted: jax.Array
+    src_by_dst: jax.Array
+    valid_by_dst: jax.Array
+    dst_offsets: jax.Array
+    w_by_dst: Optional[jax.Array] = None
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def shard_aux(p: ShardedPool, n: int) -> ShardAux:
+    """Derive the per-shard CSR aux from the pool: one fixed-shape jit
+    call, vmapped over shard rows (each row's computation touches only
+    that row, so under GSPMD it stays shard-local)."""
+    cap = p.data.shape[1]
+    bounds = jnp.arange(n + 1, dtype=jnp.int64) << 32
+
+    def row(drow, nrow, vrow):
+        src = (drow >> 32).astype(jnp.int32)
+        dst = (drow & 0xFFFFFFFF).astype(jnp.int32)
+        valid = jnp.arange(cap) < nrow
+        evalid = valid & (dst >= 0) & (dst < n)
+        src_c = jnp.clip(src, 0, max(n - 1, 0))
+        dst_c = jnp.clip(dst, 0, max(n - 1, 0))
+        offsets = jnp.searchsorted(drow, bounds).astype(jnp.int32)
+        offsets = jnp.minimum(offsets, nrow.astype(jnp.int32))
+        degrees = jnp.diff(offsets)
+        dst_key = jnp.where(evalid, dst_c, jnp.int32(n))
+        order = jnp.argsort(dst_key)  # stable in jax
+        dst_sorted = dst_key[order]
+        dst_offsets = jnp.searchsorted(
+            dst_sorted, jnp.arange(n + 1, dtype=jnp.int32)
+        ).astype(jnp.int32)
+        w_by_dst = None if vrow is None else vrow[order]
+        return (
+            offsets, src_c, dst_c, evalid, degrees,
+            dst_sorted, src_c[order], evalid[order], dst_offsets, w_by_dst,
+        )
+
+    if p.vals is None:
+        outs = jax.vmap(lambda d, c: row(d, c, None))(p.data, p.n)
+    else:
+        outs = jax.vmap(row)(p.data, p.n, p.vals)
+    (offsets, src_c, dst_c, evalid, degrees,
+     dst_sorted, src_by_dst, valid_by_dst, dst_offsets, w_by_dst) = outs
+    return ShardAux(
+        offsets=offsets,
+        src_c=src_c,
+        dst_c=dst_c,
+        evalid=evalid,
+        degrees=degrees,
+        deg_total=degrees.sum(axis=0),
+        dst_sorted=dst_sorted,
+        src_by_dst=src_by_dst,
+        valid_by_dst=valid_by_dst,
+        dst_offsets=dst_offsets,
+        w_by_dst=w_by_dst,
+    )
+
+
+def default_n_shards() -> int:
+    return jax.device_count()
+
+
+def pool_mesh(n_shards: int) -> Mesh:
+    """A 1-axis mesh whose size divides ``n_shards``: all devices when
+    possible, else the largest divisor of n_shards that fits (a 1-device
+    run degenerates to a single-chip mesh, which is still correct —
+    every collective becomes a local no-op)."""
+    nd = jax.device_count()
+    size = 1
+    for d in range(min(n_shards, nd), 0, -1):
+        if n_shards % d == 0:
+            size = d
+            break
+    return jax.make_mesh((size,), ("shard",))
+
+
+def graph_from_edges(
+    n: int,
+    edges: np.ndarray,
+    n_shards: int | None = None,
+    weights: np.ndarray | None = None,
+    cap_per: int | None = None,
+) -> ShardedGraph:
+    """Host build from a (k, 2) directed edge array (dedups; a
+    duplicated edge keeps the FIRST occurrence's weight)."""
+    if n_shards is None:
+        n_shards = default_n_shards()
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    packed = (edges[:, 0] << 32) | edges[:, 1]
+    w = None if weights is None else np.asarray(weights, np.float32).reshape(-1)
+    return ShardedGraph(from_array(packed, n_shards, cap_per=cap_per, vals=w), n)
+
+
+def graph_to_edge_array(sg: ShardedGraph) -> np.ndarray:
+    k = to_array(sg.pool)
+    return np.stack([k >> 32, k & 0xFFFFFFFF], axis=1)
+
+
+def graph_to_weight_array(sg: ShardedGraph) -> np.ndarray | None:
+    return to_val_array(sg.pool)
+
+
+def graph_num_edges(sg: ShardedGraph) -> int:
+    return int(np.asarray(sg.pool.n).sum())

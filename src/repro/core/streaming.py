@@ -17,6 +17,15 @@ is one jit ``engine_aux`` call over the already-merged mirror — no O(m)
 host rebuild, no host argsort.  Streams opened with ``mirror=False``
 keep the historical rebuild-per-query path.
 
+Sharded mirror (DESIGN.md §9): ``mirror="sharded"`` maintains a
+range-sharded ``ShardedGraph`` mirror instead — updates go through the
+shard-local rank-merge / delete steps of ``sharded_pool`` (O(batch)
+collective traffic, amortized host-driven rebalance), queries through
+``engine("sharded")``, the mesh-parallel edgeMap backend.  Both are
+published atomically next to the tree exactly like the flat mirror, and
+``query_batch`` routes to the sharded engine by default on such
+streams.
+
 ``run_concurrent`` reproduces the paper's §7.3 experiment: one writer
 thread applying a stream of edge updates while reader threads run global
 queries; reports update throughput, per-edge visibility latency, and
@@ -34,6 +43,7 @@ from . import graph as G
 from .versioning import Version, VersionedGraph
 
 MIRROR = "flat"  # aux key of the FlatGraph mirror on a Version
+SHARDED_MIRROR = "sharded"  # aux key of the ShardedGraph mirror
 
 
 class AspenStream:
@@ -42,29 +52,57 @@ class AspenStream:
         initial: Optional[G.Graph] = None,
         b: int = 256,
         seed: int = 0x9E3779B9,
-        mirror: bool = True,
+        mirror: "bool | str" = True,
         donate_buffers: bool = False,
+        n_shards: Optional[int] = None,
     ):
-        """``mirror=True`` (default) maintains the resident FlatGraph
-        alongside the tree; ``donate_buffers=True`` additionally donates
-        the old mirror pool to each merge — ONLY safe when no reader can
-        still hold a previous version (single-reader pipelines), since
-        donation invalidates the shared buffer."""
+        """``mirror=True`` (default, = ``"flat"``) maintains the resident
+        FlatGraph alongside the tree; ``mirror="sharded"`` maintains a
+        range-sharded ``ShardedGraph`` mirror instead (updates via the
+        shard-local rank-merge, queries via ``engine("sharded")``;
+        ``n_shards`` defaults to the device count).  ``mirror=False``
+        keeps the rebuild-per-query path.  ``donate_buffers=True``
+        additionally donates the old flat-mirror pool to each merge —
+        ONLY safe when no reader can still hold a previous version
+        (single-reader pipelines), since donation invalidates the shared
+        buffer."""
         g0 = initial if initial is not None else G.empty(b, seed)
-        self._mirror_enabled = mirror
+        kind = {True: MIRROR, False: None}.get(mirror, mirror)
+        if kind not in (None, MIRROR, SHARDED_MIRROR):
+            raise ValueError(
+                f"mirror must be bool, 'flat' or 'sharded'; got {mirror!r}"
+            )
+        self._mirror_kind = kind
+        self._mirror_enabled = kind is not None
         self._donate = donate_buffers
-        aux = {MIRROR: self._mirror_from_tree(g0)} if mirror else None
+        if kind == SHARDED_MIRROR:
+            from . import sharded_pool as sp
+
+            self._n_shards = n_shards if n_shards is not None else sp.default_n_shards()
+            self._smesh = sp.pool_mesh(self._n_shards)
+            self._s_insert = sp.make_insert_step(self._smesh, ("shard",))
+            self._s_delete = sp.make_delete_step(self._smesh, ("shard",))
+        aux = {kind: self._mirror_from_tree(g0)} if kind else None
         self.vg: VersionedGraph[G.Graph] = VersionedGraph(g0, aux=aux)
         self._wlock = threading.Lock()  # serializes writers (incl. mirror merge)
 
     # -- mirror maintenance -------------------------------------------------
     @staticmethod
-    def _mirror_from_tree(g: G.Graph):
-        """Full rebuild (O(m) host): construction and the rare vertex-set
-        operations; edge batches take the incremental path instead."""
+    def _flat_from_tree(g: G.Graph):
+        """Full FlatGraph rebuild (O(m) host): construction and the rare
+        vertex-set operations; edge batches take the incremental path."""
         from .traversal import flat_graph_of
 
         return flat_graph_of(G.flat_snapshot(g))
+
+    def _mirror_from_tree(self, g: G.Graph):
+        """Full mirror rebuild in the stream's configured representation."""
+        flat = self._flat_from_tree(g)
+        if self._mirror_kind == SHARDED_MIRROR:
+            from .traversal import sharded_graph_of_flat
+
+            return sharded_graph_of_flat(flat, self._n_shards)
+        return flat
 
     @staticmethod
     def _device_batch(edges: np.ndarray, weights: Optional[np.ndarray] = None):
@@ -134,6 +172,62 @@ class AspenStream:
             mirror, self._device_batch(edges), donate=self._donate
         )
 
+    def _sharded_insert(
+        self,
+        mirror,
+        g_old: G.Graph,
+        edges: np.ndarray,
+        weights: Optional[np.ndarray] = None,
+    ):
+        """Apply an insert batch to the sharded mirror: pack keys, build
+        the batch pool with the jit sort/dedup, shard-local rank-merge
+        (ONE batch all-gather on the wire — O(batch), not O(pool)).
+
+        Capacity policy: one host read of the per-shard counts per
+        batch; when the fullest shard could overflow, the pool takes an
+        amortized REBALANCE (O(n) redistribution to equal counts, the
+        LSM-compaction analogue) at a grown per-shard capacity first.
+        A weighted batch against an unweighted mirror upgrades the pool
+        to unit values (the value lane then rides every merge)."""
+        from . import flat_ctree as fct
+        from . import sharded_pool as sp
+
+        if edges.shape[0] == 0:
+            return mirror
+        pool = mirror.pool
+        if weights is not None and pool.vals is None:
+            pool = sp.with_unit_vals(pool)
+        batch = self._device_batch(edges, weights)
+        counts = np.asarray(pool.n)
+        k = int(edges.shape[0])
+        cap_per = pool.data.shape[1]
+        if int(counts.max()) + k > cap_per:
+            per = -(-int(counts.sum()) // self._n_shards)
+            pool = sp.rebalance(
+                pool, cap_per=max(cap_per, fct.grown_capacity(per + k))
+            )
+        pool = self._s_insert(pool, batch.data, batch.vals)
+        n_out = max(mirror.n, int(edges[:, 0].max()) + 1)
+        return sp.ShardedGraph(pool, n_out)
+
+    def _sharded_delete(self, mirror, edges: np.ndarray):
+        from . import sharded_pool as sp
+
+        if edges.shape[0] == 0:
+            return mirror
+        batch = self._device_batch(edges)
+        return sp.ShardedGraph(self._s_delete(mirror.pool, batch.data), mirror.n)
+
+    def _apply_insert(self, mirror, g_old, edges, weights=None):
+        if self._mirror_kind == SHARDED_MIRROR:
+            return self._sharded_insert(mirror, g_old, edges, weights)
+        return self._mirror_insert(mirror, g_old, edges, weights)
+
+    def _apply_delete(self, mirror, edges):
+        if self._mirror_kind == SHARDED_MIRROR:
+            return self._sharded_delete(mirror, edges)
+        return self._mirror_delete(mirror, edges)
+
     def _publish(self, tree_fn, mirror_fn) -> Version[G.Graph]:
         """One writer transaction: update tree + mirror from the held
         version, publish both atomically as a single new version.
@@ -146,9 +240,9 @@ class AspenStream:
             g2 = tree_fn(v.graph)
             if not self._mirror_enabled:
                 return g2, None
-            m = v.aux.get(MIRROR)
+            m = v.aux.get(self._mirror_kind)
             m2 = mirror_fn(m, v.graph, g2) if m is not None else self._mirror_from_tree(g2)
-            return g2, {MIRROR: m2}
+            return g2, {self._mirror_kind: m2}
 
         with self._wlock:
             return self.vg.update_with_aux(txn)
@@ -179,7 +273,7 @@ class AspenStream:
                 weights = np.concatenate([weights, weights])
         return self._publish(
             lambda g: G.insert_edges(g, edges, weights=weights),
-            lambda m, g_old, g_new: self._mirror_insert(m, g_old, edges, weights),
+            lambda m, g_old, g_new: self._apply_insert(m, g_old, edges, weights),
         )
 
     def delete_edges(self, edges: np.ndarray, symmetric: bool = True):
@@ -188,7 +282,7 @@ class AspenStream:
             edges = np.concatenate([edges, edges[:, ::-1]])
         return self._publish(
             lambda g: G.delete_edges(g, edges),
-            lambda m, g_old, g_new: self._mirror_delete(m, edges),
+            lambda m, g_old, g_new: self._apply_delete(m, edges),
         )
 
     def insert_vertices(self, vs: np.ndarray):
@@ -221,12 +315,28 @@ class AspenStream:
 
     def flat_graph(self):
         """The current version's FlatGraph: the resident mirror (zero
-        work) or, on mirror-less streams, a one-off rebuild."""
+        work) or, on mirror-less / sharded streams, a one-off rebuild."""
         v = self.acquire()
         try:
             if MIRROR in v.aux:
                 return v.aux[MIRROR]
-            return self._mirror_from_tree(v.graph)
+            return self._flat_from_tree(v.graph)
+        finally:
+            self.release(v)
+
+    def sharded_graph(self):
+        """The current version's ShardedGraph: the resident sharded
+        mirror (zero work) or, on other streams, a one-off rebuild."""
+        from .traversal import sharded_graph_of_flat
+
+        v = self.acquire()
+        try:
+            if SHARDED_MIRROR in v.aux:
+                return v.aux[SHARDED_MIRROR]
+            flat = v.aux.get(MIRROR)
+            if flat is None:
+                flat = self._flat_from_tree(v.graph)
+            return sharded_graph_of_flat(flat)
         finally:
             self.release(v)
 
@@ -234,11 +344,16 @@ class AspenStream:
         """Traversal engine over the current version: the caller picks
         the query substrate at snapshot time.
 
-        backend="numpy" -> NumpyEngine over a FlatSnapshot (CPU);
-        backend="jax"   -> JaxEngine over the version's resident
-                           FlatGraph mirror (jit / Pallas query path);
-                           rebuilt from the tree snapshot only when the
-                           stream was opened with mirror=False.
+        backend="numpy"   -> NumpyEngine over a FlatSnapshot (CPU);
+        backend="jax"     -> JaxEngine over the version's resident
+                             FlatGraph mirror (jit / Pallas query path);
+                             rebuilt from the tree snapshot only when
+                             the stream keeps no flat mirror.
+        backend="sharded" -> ShardedEngine over the version's resident
+                             ShardedGraph mirror (mesh-parallel
+                             shard_map query path, DESIGN.md §9);
+                             rebuilt from the tree snapshot on streams
+                             not opened with mirror="sharded".
 
         Engines are cached per (version, backend): repeated calls on an
         unchanged version are O(1) dict hits, and the cache dies with
@@ -253,6 +368,8 @@ class AspenStream:
             if eng is None:
                 if backend == "jax" and MIRROR in v.aux:
                     eng = make_engine(v.aux[MIRROR])
+                elif backend == "sharded" and SHARDED_MIRROR in v.aux:
+                    eng = make_engine(v.aux[SHARDED_MIRROR])
                 else:
                     eng = make_engine(G.flat_snapshot(v.graph), backend=backend)
                 eng = v.cache.setdefault(key, eng)
@@ -260,12 +377,18 @@ class AspenStream:
         finally:
             self.release(v)
 
-    def query_batch(self, sources=None, kind: str = "bfs", backend: str = "jax", **kw):
+    def query_batch(
+        self, sources=None, kind: str = "bfs", backend: Optional[str] = None, **kw
+    ):
         """Serve a coalesced batch of queries against ONE version-pinned
         engine (DESIGN.md §7): many users' pending single-source queries
-        ride a single engine acquire and — on the jax backend — a single
-        in-trace multi-source dispatch, instead of K independent
+        ride a single engine acquire and — on the jax/sharded backends —
+        a single in-trace multi-source dispatch, instead of K independent
         traversals each paying per-round host syncs.
+
+        ``backend=None`` routes to the stream's resident mirror: the
+        sharded engine on ``mirror="sharded"`` streams, the jax engine
+        otherwise.
 
         kinds: ``"bfs"`` -> int64[B, n] parent rows; ``"distances"`` ->
         int64[B, n] hop counts (landmark rows); ``"bc"`` -> float[B, n]
@@ -278,6 +401,8 @@ class AspenStream:
         """
         from .traversal import algorithms as talg
 
+        if backend is None:
+            backend = "sharded" if self._mirror_kind == SHARDED_MIRROR else "jax"
         eng = self.engine(backend)
         if kind == "pagerank":
             return talg.pagerank_multi(eng, **kw)

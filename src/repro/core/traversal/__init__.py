@@ -1,16 +1,18 @@
-"""Unified edgeMap traversal engine: one algorithm text, two backends.
+"""Unified edgeMap traversal engine: one algorithm text, three backends.
 
 See ``base.py`` for the backend contract, ``numpy_backend`` /
-``jax_backend`` for the substrates, and ``algorithms`` for the
-backend-generic BFS / PageRank / CC / BC.
+``jax_backend`` / ``sharded_backend`` for the substrates, and
+``algorithms`` for the backend-generic BFS / PageRank / CC / SSSP / BC.
 
 Quick start::
 
     from repro.core import graph as G, flat_graph as fg
+    from repro.core import sharded_pool as sp
     from repro.core.traversal import make_engine, algorithms as talg
 
     eng_np = make_engine(G.flat_snapshot(g))       # CPU / FlatSnapshot
     eng_jx = make_engine(fg.from_edges(n, edges))  # TPU / FlatGraph
+    eng_sh = make_engine(sp.graph_from_edges(n, edges))  # mesh / ShardedGraph
     assert (talg.bfs(eng_np, 0) >= 0).sum() == (talg.bfs(eng_jx, 0) >= 0).sum()
 """
 from __future__ import annotations
@@ -41,6 +43,7 @@ __all__ = [
     "dense_threshold",
     "NumpyEngine",
     "JaxEngine",
+    "ShardedEngine",
     "VertexSubset",
     "edge_map",
     "engine_of",
@@ -62,42 +65,71 @@ FLAT_REBUILDS = Counter()
 
 
 def __getattr__(name):
-    # JaxEngine imports jax + the Pallas kernel wrappers; keep the
-    # numpy-only path importable without paying that (lazy attribute).
+    # JaxEngine / ShardedEngine import jax + the Pallas kernel wrappers;
+    # keep the numpy-only path importable without paying that (lazy).
     if name == "JaxEngine":
         from .jax_backend import JaxEngine
 
         return JaxEngine
+    if name == "ShardedEngine":
+        from .sharded_backend import ShardedEngine
+
+        return ShardedEngine
     raise AttributeError(name)
 
 
 def make_engine(obj, backend: str | None = None) -> TraversalEngine:
     """Engine for a snapshot object, dispatched on type (or forced by
-    ``backend`` in {"numpy", "jax"}).
+    ``backend`` in {"numpy", "jax", "sharded"}).
 
-    Accepts a ``FlatGraph`` (-> JaxEngine), anything with the
-    FlatSnapshot protocol (-> NumpyEngine), or a tree-level ``Graph``
-    (snapshotted first; backend selects the substrate).
+    Accepts a ``FlatGraph`` (-> JaxEngine), a ``ShardedGraph``
+    (-> ShardedEngine), anything with the FlatSnapshot protocol
+    (-> NumpyEngine), or a tree-level ``Graph`` (snapshotted first;
+    backend selects the substrate).
     """
     from ..flat_graph import FlatGraph
     from ..graph import Graph, flat_snapshot
+    from ..sharded_pool import ShardedGraph
 
-    if backend not in (None, "numpy", "jax"):
-        raise ValueError(f"unknown backend {backend!r}; expected 'numpy' or 'jax'")
+    if backend not in (None, "numpy", "jax", "sharded"):
+        raise ValueError(
+            f"unknown backend {backend!r}; expected 'numpy', 'jax' or 'sharded'"
+        )
+    if isinstance(obj, ShardedGraph):
+        if backend in ("numpy", "jax"):
+            raise TypeError("ShardedGraph is sharded-native; pass backend='sharded'")
+        from .sharded_backend import ShardedEngine
+
+        return ShardedEngine(obj)
     if isinstance(obj, FlatGraph):
         if backend == "numpy":
             raise TypeError("FlatGraph is jax-native; build a FlatSnapshot for numpy")
+        if backend == "sharded":
+            return make_engine(sharded_graph_of_flat(obj))
         from .jax_backend import JaxEngine
 
         return JaxEngine(obj)
     if isinstance(obj, Graph):
         snap = flat_snapshot(obj)
-        if backend == "jax":
-            return make_engine(_flat_graph_of(snap))
+        if backend in ("jax", "sharded"):
+            return make_engine(_flat_graph_of(snap), backend=backend)
         return engine_of(snap)
-    if backend == "jax":
-        return make_engine(_flat_graph_of(obj))
+    if backend in ("jax", "sharded"):
+        return make_engine(_flat_graph_of(obj), backend=backend)
     return engine_of(obj)
+
+
+def sharded_graph_of_flat(g, n_shards: int | None = None):
+    """FlatGraph -> ShardedGraph: range-partition the packed-key pool
+    (and its value lane) over the mesh.  Host-side O(m); streams keep a
+    resident sharded mirror precisely so queries never pay this per
+    version."""
+    from ..flat_graph import to_edge_array, to_weight_array
+    from ..sharded_pool import graph_from_edges
+
+    return graph_from_edges(
+        g.n, to_edge_array(g), n_shards=n_shards, weights=to_weight_array(g)
+    )
 
 
 def flat_graph_of(snap):

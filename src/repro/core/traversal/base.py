@@ -3,7 +3,8 @@
 The paper's query side is Ligra's ``vertexSubset`` / ``edgeMap`` with
 direction optimization (paper §2, §5.1).  This package factors that
 engine out of the numpy-only implementation so the SAME algorithm text
-(BFS / PageRank / CC / BC in ``algorithms.py``) runs on two substrates:
+(BFS / PageRank / CC / SSSP / BC in ``algorithms.py``) runs on three
+substrates:
 
   * ``numpy_backend.NumpyEngine``  — the CPU engine over a
     ``FlatSnapshot`` (per-vertex C-tree refs, paper §5.1);
@@ -11,7 +12,11 @@ engine out of the numpy-only implementation so the SAME algorithm text
     ``FlatGraph`` (CSR over the packed-key pool), where dense edgeMap
     lowers to the Pallas ``segment_reduce`` kernel and sparse frontier
     expansion is a fixed-shape searchsorted gather, all inside one
-    ``jax.jit``-able step per (F, C, mode) triple.
+    ``jax.jit``-able step per (F, C, mode) triple;
+  * ``sharded_backend.ShardedEngine`` — the mesh-parallel engine over a
+    ``sharded_pool.ShardedGraph`` (range-sharded pool), where every
+    step is an explicit ``shard_map``: shard-local edge gathers plus
+    O(n)-word vertex-state collectives per round (DESIGN.md §9).
 
 Backend contract
 ----------------

@@ -1,0 +1,793 @@
+"""Sharded traversal backend over the range-sharded pool (DESIGN.md §9).
+
+Third backend of the unified edgeMap engine: the same algorithm text
+that runs on ``NumpyEngine`` (FlatSnapshot) and ``JaxEngine``
+(single-chip FlatGraph) runs here over ``sharded_pool.ShardedGraph`` —
+the pool whose updates already scale with the mesh.  Every query step
+is an EXPLICIT ``shard_map``: edge data never moves, and the only wire
+traffic per edgeMap round is the frontier-sized vertex-state collective
+(O(n) words, not O(pool) edges — the same O(batch)-not-O(pool)
+argument the sharded update step makes, applied to queries).
+
+How arbitrary F/C callbacks stay correct across shards
+------------------------------------------------------
+The backend contract (base.py) requires every state write to go
+through the masked ``ops.scatter_*`` helpers.  ``ShardedOps`` exploits
+exactly that: inside the shard_map'd step each shard runs F over its
+OWN edge lanes, and each scatter helper merges its contribution with
+one collective —
+
+  scatter_add  ->  target + psum(local delta)
+  scatter_max  ->  max(target, pmax(local candidates))
+  scatter_min  ->  min(target, pmin(local candidates))
+  scatter_or   ->  target | (pmax(local hits) > 0)
+
+add/max/min/or are commutative and associative, so the merged result
+is identical to one global scatter over the union of all shards' edges
+(each edge lives in exactly one shard) — and after F returns, the
+state and out-mask are REPLICATED on every device, which is what lets
+the frontier loop iterate without ever gathering edge data.  The
+Beamer direction rule runs on psum'd frontier degrees (each shard
+knows only its local degree contribution), so push/pull decisions are
+identical to the single-chip engines and the parity suite holds
+exactly.
+
+``edge_map_reduce(_batch)`` (PageRank's inner loop) is a shard-local
+segmented row-sum over each shard's dst-major lanes followed by ONE
+tiled ``psum_scatter`` over the padded vertex axis — O(B · n) words on
+the wire, each device left holding exactly the output chunk the
+out_spec reassembles.  The in-trace ``bfs_batch_sharded`` /
+``sssp_batch_sharded`` drivers port the single-chip ``lax.while_loop``
+drivers with a pmax/pmin/psum merge per round, preserving the
+ONE-dispatch / O(1)-host-syncs contract.
+
+``collective_operand_bytes`` is the collective-bytes spy tests use to
+pin the O(frontier + batch)-not-O(pool) wire contract on the jaxpr.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..sharded_pool import (
+    ShardAux,
+    ShardedGraph,
+    _shard_map,
+    graph_num_edges,
+    pool_mesh,
+    shard_aux,
+)
+from .base import DENSE_THRESHOLD_DENOM, TraversalEngine
+from .jax_backend import (
+    JaxEngine,
+    JaxOps,
+    JaxVertexSubset,
+    _round_up,
+    _segmin_rows,
+    _segsum_rows,
+    _sparse_expand,
+)
+
+AXIS = "shard"
+
+_SPEC2 = P(AXIS, None)
+
+
+def _neutral_min(dtype):
+    """Identity of max (the lowest representable value)."""
+    d = np.dtype(dtype)
+    if d == np.bool_:
+        return False
+    if np.issubdtype(d, np.floating):
+        return -np.inf
+    return np.iinfo(d).min
+
+
+def _neutral_max(dtype):
+    d = np.dtype(dtype)
+    if d == np.bool_:
+        return True
+    if np.issubdtype(d, np.floating):
+        return np.inf
+    return np.iinfo(d).max
+
+
+class ShardedOps(JaxOps):
+    """JaxOps whose scatter helpers merge across the shard axis.
+
+    The collective forms are only valid inside the backend's shard_map'd
+    steps (they need the ``shard`` axis bound); F/C callbacks are the
+    only contract call sites that scatter, and the engine runs them
+    exactly there.  Instances hash/compare by dtype + axis so the jit
+    step cache stays shared across engines."""
+
+    def __init__(self, float_dtype=jnp.float32, axis_name: str = AXIS):
+        super().__init__(float_dtype)
+        self.axis_name = axis_name
+
+    def __eq__(self, other):
+        return (
+            type(other) is type(self)
+            and np.dtype(other.float_dtype) == np.dtype(self.float_dtype)
+            and other.axis_name == self.axis_name
+        )
+
+    def __hash__(self):
+        return hash((type(self), np.dtype(self.float_dtype).name, self.axis_name))
+
+    def scatter_max(self, target, idx, vals, mask):
+        neutral = jnp.asarray(_neutral_min(target.dtype), target.dtype)
+        local = jnp.full_like(target, neutral).at[
+            self._safe_idx(target, idx, mask)
+        ].max(vals, mode="drop")
+        return jnp.maximum(target, jax.lax.pmax(local, self.axis_name))
+
+    def scatter_min(self, target, idx, vals, mask):
+        neutral = jnp.asarray(_neutral_max(target.dtype), target.dtype)
+        local = jnp.full_like(target, neutral).at[
+            self._safe_idx(target, idx, mask)
+        ].min(vals, mode="drop")
+        return jnp.minimum(target, jax.lax.pmin(local, self.axis_name))
+
+    def scatter_add(self, target, idx, vals, mask):
+        vals = jnp.where(mask, vals, jnp.zeros((), target.dtype))
+        delta = jnp.zeros_like(target).at[
+            self._safe_idx(target, idx, mask)
+        ].add(vals, mode="drop")
+        return target + jax.lax.psum(delta, self.axis_name)
+
+    def scatter_or(self, target, idx, mask):
+        local = jnp.zeros(target.shape, jnp.int32).at[
+            self._safe_idx(target, idx, mask)
+        ].max(1, mode="drop")
+        return target | (jax.lax.pmax(local, self.axis_name) > 0)
+
+
+SHARDED_OPS = ShardedOps()
+
+
+def _expand_block(offsets, keys, vals, U, n, ids_budget, edge_budget):
+    """Sparse push expansion of one frontier over a BLOCK of shard rows:
+    vmap the fixed-shape single-row expansion and flatten the edge lanes
+    (each edge lives in exactly one row, so concatenation is the union)."""
+
+    def one_row(off_row, key_row):
+        return _sparse_expand(off_row, key_row, U, n, ids_budget, edge_budget)
+
+    us, vs, ev, eidx = jax.vmap(one_row)(offsets, keys)
+    ws = None if vals is None else jnp.take_along_axis(vals, eidx, axis=1).reshape(-1)
+    return us.reshape(-1), vs.reshape(-1), ev.reshape(-1), ws
+
+
+# ---------------------------------------------------------------------------
+# the shard_map'd edgeMap step (module-level jit: cache shared across engines)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "F", "C", "mode", "n", "ids_budget", "edge_budget", "ops", "mesh", "weighted",
+    ),
+)
+def _sharded_edge_map_step(
+    offsets,  # int32[S, n+1] per-shard CSR
+    keys,  # int64[S, cap]
+    src_c,  # int32[S, cap]
+    dst_c,  # int32[S, cap]
+    evalid,  # bool[S, cap]
+    degrees,  # int32[S, n] per-shard degree contributions
+    m,  # int32 scalar: global edge count
+    vals,  # float32[S, cap] per-edge values, or None (unweighted)
+    U,  # bool[n] frontier (replicated)
+    state,  # pytree (replicated)
+    *,
+    F: Callable,
+    C: Callable,
+    mode: str,
+    n: int,
+    ids_budget: int,
+    edge_budget: int,
+    ops: ShardedOps,
+    mesh: Mesh,
+    weighted: bool,
+):
+    def body(offsets, keys, src_c, dst_c, evalid, degrees, vals, m, U, state):
+        src_f = src_c.reshape(-1)
+        dst_f = dst_c.reshape(-1)
+        ev_f = evalid.reshape(-1)
+        w_f = None if vals is None else vals.reshape(-1)
+        cmask = C(ops, state, jnp.arange(n, dtype=jnp.int32))
+
+        def dense_branch(state):
+            valid = ev_f & U[src_f] & cmask[dst_f]
+            return F(ops, state, src_f, dst_f, w_f, valid)
+
+        def sparse_branch(state):
+            us, vs, ev, ws = _expand_block(
+                offsets, keys, vals, U, n, ids_budget, edge_budget
+            )
+            return F(ops, state, us, vs, ws, ev & cmask[vs])
+
+        if mode == "dense":
+            return dense_branch(state)
+        if mode == "sparse":
+            return sparse_branch(state)
+        # auto: Beamer rule on psum'd frontier degrees — one scalar psum
+        # makes the direction decision globally consistent
+        size = U.sum()
+        deg_u = jax.lax.psum(jnp.where(U, degrees.sum(axis=0), 0).sum(), AXIS)
+        use_dense = (size + deg_u) > jnp.maximum(1, m // DENSE_THRESHOLD_DENOM)
+        return jax.lax.cond(use_dense, dense_branch, sparse_branch, state)
+
+    if weighted:
+        local = body
+        args = (offsets, keys, src_c, dst_c, evalid, degrees, vals, m, U, state)
+        specs = (_SPEC2,) * 7 + (P(), P(), P())
+    else:
+        def local(offsets, keys, src_c, dst_c, evalid, degrees, m, U, state):
+            return body(offsets, keys, src_c, dst_c, evalid, degrees, None, m, U, state)
+
+        args = (offsets, keys, src_c, dst_c, evalid, degrees, m, U, state)
+        specs = (_SPEC2,) * 6 + (P(), P(), P())
+    return _shard_map(
+        local, mesh=mesh, in_specs=specs, out_specs=(P(), P()), check_rep=False
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# dense semiring reduce: shard-local segment-sum + ONE psum_scatter
+# ---------------------------------------------------------------------------
+
+
+def _reduce_partial(sbd, vbd, bounds, wbd, values_b, n_pad, dtype):
+    """Per-device partial of the (+, x) reduce over a block of rows,
+    psum_scatter'd so each device keeps its own vertex chunk."""
+
+    def one(srow, vrow, brow, wrow):
+        msg = jnp.where(vrow[None, :], values_b[:, srow], 0.0).astype(dtype)
+        if wrow is not None:
+            msg = msg * wrow[None, :].astype(dtype)
+        return _segsum_rows(msg, brow)
+
+    if wbd is None:
+        parts = jax.vmap(lambda s, v, b: one(s, v, b, None))(sbd, vbd, bounds)
+    else:
+        parts = jax.vmap(one)(sbd, vbd, bounds, wbd)
+    partial = parts.sum(axis=0)  # (B, n)
+    padded = jnp.pad(partial, ((0, 0), (0, n_pad - partial.shape[1])))
+    return jax.lax.psum_scatter(padded, AXIS, scatter_dimension=1, tiled=True)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "mesh", "weighted", "dtype"))
+def _sharded_reduce_batch(
+    src_by_dst,  # int32[S, cap]
+    valid_by_dst,  # bool[S, cap]
+    dst_offsets,  # int32[S, n+1]
+    w_by_dst,  # float32[S, cap] or None
+    values_b,  # (B, n) replicated value rows
+    *,
+    n: int,
+    mesh: Mesh,
+    weighted: bool,
+    dtype,
+):
+    """out[b, v] = sum_{u->v} w(u, v) * values[b, u] over all shards."""
+    n_pad = _round_up(max(n, 1), mesh.shape[AXIS])
+    if weighted:
+        out = _shard_map(
+            lambda s, v, b, w, x: _reduce_partial(s, v, b, w, x, n_pad, dtype),
+            mesh=mesh,
+            in_specs=(_SPEC2, _SPEC2, _SPEC2, _SPEC2, P()),
+            out_specs=P(None, AXIS),
+            check_rep=False,
+        )(src_by_dst, valid_by_dst, dst_offsets, w_by_dst, values_b)
+    else:
+        out = _shard_map(
+            lambda s, v, b, x: _reduce_partial(s, v, b, None, x, n_pad, dtype),
+            mesh=mesh,
+            in_specs=(_SPEC2, _SPEC2, _SPEC2, P()),
+            out_specs=P(None, AXIS),
+            check_rep=False,
+        )(src_by_dst, valid_by_dst, dst_offsets, values_b)
+    return out[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# in-trace batched drivers: whole multi-source traversals, ONE dispatch
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "ids_budget", "edge_budget", "mesh")
+)
+def bfs_batch_sharded(
+    offsets,  # int32[S, n+1]
+    keys,  # int64[S, cap]
+    src_c,  # int32[S, cap]
+    dst_c,  # int32[S, cap]
+    evalid,  # bool[S, cap]
+    degrees,  # int32[S, n]
+    src_by_dst,  # int32[S, cap]
+    valid_by_dst,  # bool[S, cap]
+    dst_offsets,  # int32[S, n+1]
+    m,  # int32 scalar: global edge count
+    sources,  # int32[B]
+    *,
+    n: int,
+    ids_budget: int,
+    edge_budget: int,
+    mesh: Mesh,
+) -> Tuple[jax.Array, jax.Array]:
+    """Multi-source direction-optimized BFS over the sharded pool, fully
+    in-trace: the single-chip ``jax_backend.bfs_batch`` driver with a
+    pmax/psum merge per round.  Returns ``(parents, depths)`` int32[B, n]
+    — bit-identical to the single-chip driver (push is a per-shard
+    budget-bounded expand OR-merged across shards; pull is the per-shard
+    segmented row-cumsum psum-merged; parents are one final masked
+    scatter-max pass pmax-merged, the same max-contention rule)."""
+
+    def local(offsets, keys, src_c, dst_c, evalid, degrees, sbd, vbd, doff, m, sources):
+        B = sources.shape[0]
+        lane = jnp.arange(B)
+        src = sources.astype(jnp.int32)
+        depths = jnp.full((B, n), -1, jnp.int32).at[lane, src].set(0)
+        frontier = jnp.zeros((B, n), bool).at[lane, src].set(True)
+        thresh = jnp.maximum(1, m // DENSE_THRESHOLD_DENOM)
+        deg_loc = degrees.sum(axis=0)  # (n,) this device's contribution
+
+        def push(f_b):
+            def one(U):
+                def one_row(off_row, key_row):
+                    us, vs, ev, _ = _sparse_expand(
+                        off_row, key_row, U, n, ids_budget, edge_budget
+                    )
+                    return (
+                        jnp.zeros(n, bool)
+                        .at[jnp.where(ev, vs, n)]
+                        .max(True, mode="drop")
+                    )
+
+                return jax.vmap(one_row)(offsets, keys).any(axis=0)
+
+            loc = jax.vmap(one)(f_b)
+            return jax.lax.pmax(loc.astype(jnp.int32), AXIS) > 0
+
+        def pull(f_b):
+            def one_row(srow, vrow, brow):
+                msg = (f_b[:, srow] & vrow[None, :]).astype(jnp.int32)
+                return _segsum_rows(msg, brow)
+
+            loc = jax.vmap(one_row)(sbd, vbd, doff).sum(axis=0)
+            return jax.lax.psum(loc, AXIS) > 0
+
+        def cond(carry):
+            return carry[0].any()
+
+        def body(carry):
+            f, dep, d = carry
+            size_b = f.sum(axis=1)
+            deg_b = jax.lax.psum(
+                jnp.where(f, deg_loc[None, :], 0).sum(axis=1), AXIS
+            )
+            reached = jax.lax.cond(((size_b + deg_b) > thresh).any(), pull, push, f)
+            newly = reached & (dep < 0)
+            return newly, jnp.where(newly, d + 1, dep), d + 1
+
+        _, depths, _ = jax.lax.while_loop(
+            cond, body, (frontier, depths, jnp.int32(0))
+        )
+
+        src_f = src_c.reshape(-1)
+        dst_f = dst_c.reshape(-1)
+        ev_f = evalid.reshape(-1)
+        du = depths[:, src_f]
+        dv = depths[:, dst_f]
+        ok = ev_f[None, :] & (du >= 0) & (dv == du + 1)
+        safe = jnp.where(ok, dst_f[None, :], n)
+        cand = jnp.full((B, n), -1, jnp.int32).at[lane[:, None], safe].max(
+            jnp.broadcast_to(src_f[None, :], (B, src_f.shape[0])), mode="drop"
+        )
+        cand = jax.lax.pmax(cand, AXIS)
+        vid = jnp.arange(n, dtype=jnp.int32)[None, :]
+        parents = jnp.where(depths == 0, vid, jnp.where(depths > 0, cand, -1))
+        return parents, depths
+
+    return _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(_SPEC2,) * 9 + (P(), P()),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )(
+        offsets, keys, src_c, dst_c, evalid, degrees,
+        src_by_dst, valid_by_dst, dst_offsets, m, sources,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "ids_budget", "edge_budget", "mesh", "weighted", "float_dtype"),
+)
+def sssp_batch_sharded(
+    offsets,
+    keys,
+    src_c,
+    dst_c,
+    evalid,
+    degrees,
+    src_by_dst,
+    valid_by_dst,
+    dst_offsets,
+    vals,  # float32[S, cap] pool-order values, or None
+    w_by_dst,  # float32[S, cap] dst-major values, or None
+    m,
+    sources,
+    *,
+    n: int,
+    ids_budget: int,
+    edge_budget: int,
+    mesh: Mesh,
+    weighted: bool,
+    float_dtype=jnp.float32,
+) -> jax.Array:
+    """Multi-source Bellman–Ford over the sharded pool, fully in-trace:
+    the (min, +) driver of ``jax_backend.sssp_batch`` with a pmin merge
+    per round.  Distances are EXACT matches of the single-chip driver:
+    every candidate path sum d[u] + w is computed identically and min is
+    order-insensitive."""
+
+    def body(offsets, keys, src_c, dst_c, evalid, degrees, sbd, vbd, doff,
+             vals, wbd, m, sources):
+        cap = keys.shape[1]
+        B = sources.shape[0]
+        lane = jnp.arange(B)
+        src = sources.astype(jnp.int32)
+        inf = jnp.asarray(jnp.inf, float_dtype)
+        w_pool = (
+            jnp.ones(keys.shape, float_dtype)
+            if vals is None
+            else vals.astype(float_dtype)
+        )
+        w_dst = (
+            jnp.ones(keys.shape, float_dtype)
+            if wbd is None
+            else wbd.astype(float_dtype)
+        )
+        dist = jnp.full((B, n), inf, float_dtype).at[lane, src].set(0.0)
+        frontier = jnp.zeros((B, n), bool).at[lane, src].set(True)
+        thresh = jnp.maximum(1, m // DENSE_THRESHOLD_DENOM)
+        deg_loc = degrees.sum(axis=0)
+
+        def push(args):
+            f_b, d_b = args
+
+            def one(U, d):
+                def one_row(off_row, key_row, w_row):
+                    us, vs, ev, eidx = _sparse_expand(
+                        off_row, key_row, U, n, ids_budget, edge_budget
+                    )
+                    cand = d[us] + w_row[eidx]
+                    return (
+                        jnp.full(n, inf, float_dtype)
+                        .at[jnp.where(ev, vs, n)]
+                        .min(cand, mode="drop")
+                    )
+
+                return jax.vmap(one_row)(offsets, keys, w_pool).min(axis=0)
+
+            loc = jax.vmap(one)(f_b, d_b)
+            return jax.lax.pmin(loc, AXIS)
+
+        def pull(args):
+            f_b, d_b = args
+
+            def one_row(srow, vrow, brow, wrow):
+                msg = jnp.where(
+                    f_b[:, srow] & vrow[None, :],
+                    d_b[:, srow] + wrow[None, :],
+                    inf,
+                )
+                return _segmin_rows(msg, brow)
+
+            loc = jax.vmap(one_row)(sbd, vbd, doff, w_dst).min(axis=0)
+            return jax.lax.pmin(loc, AXIS)
+
+        def cond(carry):
+            return carry[0].any()
+
+        def step(carry):
+            f, d = carry
+            size_b = f.sum(axis=1)
+            deg_b = jax.lax.psum(
+                jnp.where(f, deg_loc[None, :], 0).sum(axis=1), AXIS
+            )
+            cand = jax.lax.cond(
+                ((size_b + deg_b) > thresh).any(), pull, push, (f, d)
+            )
+            newly = cand < d
+            return newly, jnp.where(newly, cand, d)
+
+        _, dist = jax.lax.while_loop(cond, step, (frontier, dist))
+        return dist
+
+    if weighted:
+        local = body
+        args = (offsets, keys, src_c, dst_c, evalid, degrees, src_by_dst,
+                valid_by_dst, dst_offsets, vals, w_by_dst, m, sources)
+        specs = (_SPEC2,) * 11 + (P(), P())
+    else:
+        def local(offsets, keys, src_c, dst_c, evalid, degrees, sbd, vbd, doff,
+                  m, sources):
+            return body(offsets, keys, src_c, dst_c, evalid, degrees, sbd, vbd,
+                        doff, None, None, m, sources)
+
+        args = (offsets, keys, src_c, dst_c, evalid, degrees, src_by_dst,
+                valid_by_dst, dst_offsets, m, sources)
+        specs = (_SPEC2,) * 9 + (P(), P())
+    return _shard_map(
+        local, mesh=mesh, in_specs=specs, out_specs=P(), check_rep=False
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# weighted degrees (one fixed-shape jit over the sharded aux)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def _sharded_weighted_degrees(offsets, evalid, vals, dtype):
+    def one_row(off_row, ev_row, v_row):
+        msg = jnp.where(ev_row, v_row.astype(dtype), 0.0)
+        return _segsum_rows(msg[None, :], off_row)[0]
+
+    return jax.vmap(one_row)(offsets, evalid, vals).sum(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# the collective-bytes spy (tests pin the wire contract on the jaxpr)
+# ---------------------------------------------------------------------------
+
+COLLECTIVE_PRIMS = frozenset(
+    {
+        "psum", "pmax", "pmin", "all_gather", "all_to_all",
+        "reduce_scatter", "psum_scatter", "ppermute", "pgather",
+    }
+)
+
+
+def _walk_jaxpr(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in COLLECTIVE_PRIMS:
+            nbytes = sum(
+                int(np.prod(v.aval.shape)) * v.aval.dtype.itemsize
+                for v in eqn.invars
+                if hasattr(v, "aval") and hasattr(v.aval, "shape")
+            )
+            out.append((eqn.primitive.name, nbytes))
+        for v in eqn.params.values():
+            for item in v if isinstance(v, (list, tuple)) else (v,):
+                inner = getattr(item, "jaxpr", item)
+                if hasattr(inner, "eqns"):
+                    _walk_jaxpr(inner, out)
+    return out
+
+
+def collective_operand_bytes(fn, *args, **kwargs):
+    """Trace ``fn(*args)`` and return ``[(collective_name, operand_bytes),
+    ...]`` over every collective in the jaxpr (recursing through cond /
+    while / shard_map sub-jaxprs).  Operand byte-sizes are per-device
+    logical shapes — the quantity that goes on the wire per round.  The
+    O(frontier + batch)-not-O(pool) acceptance tests assert every entry
+    is vertex-state-sized, never pool-sized."""
+    closed = jax.make_jaxpr(fn, **kwargs)(*args)
+    return _walk_jaxpr(closed.jaxpr, [])
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class ShardedEngine(TraversalEngine):
+    """Engine over an (immutable) ``ShardedGraph``.
+
+    The full backend contract of ``base.py`` — BFS / CC / PageRank /
+    SSSP / BC in ``algorithms.py`` run unchanged — plus the in-trace
+    ``bfs_batch`` / ``sssp_batch`` drivers ``bfs_multi`` / ``sssp_multi``
+    dispatch to.  ``aux`` may be passed in pre-refreshed by a
+    version-pinned caller (AspenStream's engine cache)."""
+
+    def __init__(
+        self,
+        sg: ShardedGraph,
+        aux: Optional[ShardAux] = None,
+        mesh: Optional[Mesh] = None,
+        float_dtype=None,
+    ):
+        self.sg = sg
+        self._n = sg.n
+        self.mesh = pool_mesh(sg.n_shards) if mesh is None else mesh
+        if sg.n_shards % self.mesh.shape[AXIS] != 0:
+            raise ValueError(
+                f"n_shards={sg.n_shards} must be a multiple of the mesh "
+                f"size {self.mesh.shape[AXIS]}"
+            )
+        self._m = graph_num_edges(sg)  # one device read per engine build
+        self.ops = ShardedOps(jnp.float32 if float_dtype is None else float_dtype)
+        self.aux = shard_aux(sg.pool, sg.n) if aux is None else aux
+        self._wdeg = None  # lazy weighted out-degree cache
+
+        # static sparse budgets: a frontier routed sparse obeys
+        # |U| + deg(U) <= m/20 <= pool_cap/20 globally; the per-row edge
+        # budget additionally caps at the row capacity.
+        S, cap = sg.pool.data.shape
+        total_cap = S * cap
+        self._auto_ids_budget = min(
+            self._n, _round_up(total_cap // DENSE_THRESHOLD_DENOM + 1, 64)
+        )
+        self._auto_edge_budget = min(
+            cap, _round_up(total_cap // DENSE_THRESHOLD_DENOM + 1, 64)
+        )
+        self._full_ids_budget = self._n
+        self._full_edge_budget = max(cap, 1)
+
+    # -- graph shape --------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def m(self) -> int:
+        return self._m
+
+    @property
+    def degrees(self) -> jax.Array:
+        return self.aux.deg_total
+
+    @property
+    def weights(self) -> Optional[jax.Array]:
+        """The pool's value lane ((S, cap) float32), or None."""
+        return self.sg.pool.vals
+
+    @property
+    def weighted_degrees(self) -> jax.Array:
+        if self.sg.pool.vals is None:
+            return self.aux.deg_total.astype(self.ops.float_dtype)
+        if self._wdeg is None:
+            self._wdeg = _sharded_weighted_degrees(
+                self.aux.offsets, self.aux.evalid, self.sg.pool.vals,
+                dtype=self.ops.float_dtype,
+            )
+        return self._wdeg
+
+    # -- frontiers ----------------------------------------------------------
+    def frontier_from_ids(self, ids) -> JaxVertexSubset:
+        mask = jnp.zeros(self._n, dtype=bool).at[jnp.asarray(ids)].set(True)
+        return JaxVertexSubset(mask)
+
+    def frontier_from_dense(self, mask) -> JaxVertexSubset:
+        return JaxVertexSubset(jnp.asarray(mask, dtype=bool))
+
+    def _budgets(self, mode: str) -> Tuple[int, int]:
+        if mode == "sparse":
+            return self._full_ids_budget, self._full_edge_budget
+        return self._auto_ids_budget, self._auto_edge_budget
+
+    # -- edgeMap ------------------------------------------------------------
+    def edge_map(
+        self,
+        U: JaxVertexSubset,
+        F: Callable,
+        C: Callable,
+        state,
+        direction_optimize: bool = True,
+        mode: str = "auto",
+    ) -> Tuple[JaxVertexSubset, object]:
+        if mode == "auto" and not direction_optimize:
+            mode = "sparse"
+        ids_b, edge_b = self._budgets(mode)
+        state, out = _sharded_edge_map_step(
+            self.aux.offsets,
+            self.sg.pool.data,
+            self.aux.src_c,
+            self.aux.dst_c,
+            self.aux.evalid,
+            self.aux.degrees,
+            jnp.int32(self._m),
+            self.sg.pool.vals,
+            U.dense,
+            state,
+            F=F,
+            C=C,
+            mode=mode,
+            n=self._n,
+            ids_budget=ids_b,
+            edge_budget=edge_b,
+            ops=self.ops,
+            mesh=self.mesh,
+            weighted=self.sg.pool.vals is not None,
+        )
+        return JaxVertexSubset(out), state
+
+    # -- dense semiring reduce ---------------------------------------------
+    def edge_map_reduce(self, values: jax.Array) -> jax.Array:
+        return self.edge_map_reduce_batch(values[None, :])[0]
+
+    def edge_map_reduce_batch(self, values: jax.Array) -> jax.Array:
+        out = _sharded_reduce_batch(
+            self.aux.src_by_dst,
+            self.aux.valid_by_dst,
+            self.aux.dst_offsets,
+            self.aux.w_by_dst,
+            jnp.asarray(values),
+            n=self._n,
+            mesh=self.mesh,
+            weighted=self.aux.w_by_dst is not None,
+            dtype=self.ops.float_dtype,
+        )
+        return out.astype(jnp.asarray(values).dtype)
+
+    # -- in-trace batched drivers ------------------------------------------
+    def bfs_batch(self, sources) -> Tuple[jax.Array, jax.Array]:
+        padded, B = JaxEngine._quantized_sources(sources)
+        parents, depths = bfs_batch_sharded(
+            self.aux.offsets,
+            self.sg.pool.data,
+            self.aux.src_c,
+            self.aux.dst_c,
+            self.aux.evalid,
+            self.aux.degrees,
+            self.aux.src_by_dst,
+            self.aux.valid_by_dst,
+            self.aux.dst_offsets,
+            jnp.int32(self._m),
+            padded,
+            n=self._n,
+            ids_budget=self._auto_ids_budget,
+            edge_budget=self._auto_edge_budget,
+            mesh=self.mesh,
+        )
+        return parents[:B], depths[:B]
+
+    def sssp_batch(self, sources) -> jax.Array:
+        padded, B = JaxEngine._quantized_sources(sources)
+        weighted = self.sg.pool.vals is not None
+        dist = sssp_batch_sharded(
+            self.aux.offsets,
+            self.sg.pool.data,
+            self.aux.src_c,
+            self.aux.dst_c,
+            self.aux.evalid,
+            self.aux.degrees,
+            self.aux.src_by_dst,
+            self.aux.valid_by_dst,
+            self.aux.dst_offsets,
+            self.sg.pool.vals if weighted else None,
+            self.aux.w_by_dst if weighted else None,
+            jnp.int32(self._m),
+            padded,
+            n=self._n,
+            ids_budget=self._auto_ids_budget,
+            edge_budget=self._auto_edge_budget,
+            mesh=self.mesh,
+            weighted=weighted,
+            float_dtype=self.ops.float_dtype,
+        )
+        return dist[:B]
+
+    # -- vertexMap ----------------------------------------------------------
+    def vertex_map(self, U: JaxVertexSubset, Pred: Callable, state) -> JaxVertexSubset:
+        keep = Pred(self.ops, state, jnp.arange(self._n, dtype=jnp.int32))
+        return JaxVertexSubset(U.dense & keep)
+
+    def to_host(self, x) -> np.ndarray:
+        from .base import HOST_SYNCS
+
+        HOST_SYNCS.bump()
+        return np.asarray(x)

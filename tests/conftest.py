@@ -16,9 +16,23 @@ sys.path.insert(0, os.path.dirname(__file__))  # for `proptest` import
 def pytest_collection_modifyitems(config, items):
     """CPU-safe marker defaults: ``tpu``-marked tests auto-skip unless a
     real TPU backend is present (Pallas kernels otherwise run under
-    interpret=True, which the non-marked tests already cover)."""
+    interpret=True, which the non-marked tests already cover), and
+    ``multidevice``-marked tests auto-skip unless the process sees >= 8
+    devices — run them on CPU via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (a separate
+    process: the flag must be set before jax initializes, which is why
+    it is NOT set here — smoke tests and benches must see the 1 real
+    CPU device)."""
     import jax
 
+    if jax.device_count() < 8:
+        skip_md = pytest.mark.skip(
+            reason="needs >= 8 devices "
+            "(XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        )
+        for item in items:
+            if "multidevice" in item.keywords:
+                item.add_marker(skip_md)
     if jax.default_backend() == "tpu":
         return
     skip_tpu = pytest.mark.skip(reason="requires TPU hardware (CPU run)")

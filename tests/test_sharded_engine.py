@@ -1,0 +1,462 @@
+"""Sharded traversal engine (DESIGN.md §9): the backend-generic parity
+suite over the range-sharded pool.
+
+Pins the PR's contract:
+
+  (1) ``ShardedEngine`` passes the backend parity suite — BFS
+      parents/levels, CC labels, PageRank, SSSP distances match the
+      numpy engine on RMAT graphs (BFS/CC/SSSP exactly; PageRank to
+      float tolerance, summation order differs);
+  (2) parity holds THROUGH the streaming path: interleaved
+      insert/delete batches, a mid-stream weight upgrade and a forced
+      rebalance, served by ``AspenStream(mirror="sharded")``;
+  (3) per-round collective traffic is O(frontier + batch), never
+      O(pool) — asserted on the jaxpr via the collective-bytes spy;
+  (4) the in-trace batched drivers keep the O(1)-host-syncs contract;
+  (5) ``engine("sharded")`` is version-pinned-cached and
+      ``query_batch`` routes to it on sharded streams.
+
+Non-``multidevice`` tests run the same shard_map code on a 1-device
+mesh with multi-row blocks (n_shards=4); ``multidevice``-marked tests
+need ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (a
+separate pytest process — see conftest) and pin the acceptance
+criterion on a real 8-way mesh, one shard row per device.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph as G
+from repro.core import sharded_pool as sp
+from repro.core.streaming import AspenStream, make_update_stream
+from repro.core.traversal import HOST_SYNCS, NumpyEngine, make_engine
+from repro.core.traversal import algorithms as talg
+from repro.core.traversal import sharded_backend as sb
+from repro.data.rmat import rmat_edges, symmetrize
+
+N_SHARDS = 4  # divisible block layout even on a 1-device mesh
+
+
+def _weights_for(edges):
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    return ((lo * 1000003 + hi) % 7 + 1).astype(np.float64)  # symmetric, integer
+
+
+@pytest.fixture(scope="module")
+def rmat_graph():
+    edges = symmetrize(rmat_edges(8, 2000, seed=11))  # 256 vertices
+    return 256, edges
+
+
+@pytest.fixture(scope="module")
+def engines(rmat_graph):
+    n, edges = rmat_graph
+    eng_np = NumpyEngine(G.flat_snapshot(G.build_graph(n, edges)))
+    eng_sh = make_engine(sp.graph_from_edges(n, edges, n_shards=N_SHARDS))
+    return eng_np, eng_sh
+
+
+@pytest.fixture(scope="module")
+def weighted_engines(rmat_graph):
+    n, edges = rmat_graph
+    w = _weights_for(edges)
+    eng_np = NumpyEngine(G.flat_snapshot(G.build_graph(n, edges, weights=w)))
+    eng_sh = make_engine(
+        sp.graph_from_edges(n, edges, n_shards=N_SHARDS, weights=w)
+    )
+    return eng_np, eng_sh
+
+
+@pytest.fixture(scope="module")
+def sources(rmat_graph):
+    n, _ = rmat_graph
+    return np.random.default_rng(3).integers(0, n, 16)
+
+
+# ---------------------------------------------------------------------------
+# (1) backend-generic parity suite
+# ---------------------------------------------------------------------------
+
+
+def test_bfs_parity(rmat_graph, engines):
+    n, edges = rmat_graph
+    eng_np, eng_sh = engines
+    src = int(edges[0, 0])
+    p_np = talg.bfs(eng_np, src)
+    p_sh = talg.bfs(eng_sh, src)
+    np.testing.assert_array_equal(p_np, p_sh)  # same max-parent rule
+    np.testing.assert_array_equal(
+        talg.bfs_depths(p_np, src), talg.bfs_depths(p_sh, src)
+    )
+
+
+def test_bfs_multi_parity(engines, sources):
+    eng_np, eng_sh = engines
+    p_np, d_np = talg.bfs_multi(eng_np, sources)
+    p_sh, d_sh = talg.bfs_multi(eng_sh, sources)  # in-trace sharded driver
+    np.testing.assert_array_equal(p_np, p_sh)
+    np.testing.assert_array_equal(d_np, d_sh)
+
+
+def test_cc_parity(engines):
+    eng_np, eng_sh = engines
+    np.testing.assert_array_equal(
+        talg.connected_components(eng_np), talg.connected_components(eng_sh)
+    )
+
+
+def test_pagerank_parity(engines):
+    eng_np, eng_sh = engines
+    pr_np = talg.pagerank(eng_np, iters=5)
+    pr_sh = talg.pagerank(eng_sh, iters=5)
+    assert np.allclose(pr_np, pr_sh, atol=1e-5)
+    prm_np = talg.pagerank_multi(eng_np, iters=5)
+    prm_sh = talg.pagerank_multi(eng_sh, iters=5)
+    assert np.allclose(prm_np, prm_sh, atol=1e-5)
+
+
+def test_sssp_parity_exact(rmat_graph, weighted_engines, sources):
+    """Integer weights: every candidate path sum is computed identically
+    and min is order-insensitive, so distances match EXACTLY."""
+    n, edges = rmat_graph
+    eng_np, eng_sh = weighted_engines
+    src = int(edges[0, 0])
+    d_np = np.asarray(talg.sssp(eng_np, src), np.float64)
+    d_sh = np.asarray(talg.sssp(eng_sh, src), np.float64)
+    np.testing.assert_array_equal(d_np, d_sh)
+    np.testing.assert_array_equal(
+        talg.sssp_multi(eng_np, sources), talg.sssp_multi(eng_sh, sources)
+    )
+
+
+def test_sssp_unweighted_hop_distances(engines, sources):
+    """On an unweighted engine sssp runs unit weights = BFS hop metric."""
+    eng_np, eng_sh = engines
+    np.testing.assert_array_equal(
+        talg.sssp_multi(eng_np, sources[:4]), talg.sssp_multi(eng_sh, sources[:4])
+    )
+
+
+def test_bc_parity(rmat_graph, engines):
+    n, edges = rmat_graph
+    eng_np, eng_sh = engines
+    src = int(edges[0, 0])
+    assert np.allclose(talg.bc(eng_np, src), talg.bc(eng_sh, src), atol=1e-4)
+
+
+def test_weighted_pagerank_parity(weighted_engines):
+    eng_np, eng_sh = weighted_engines
+    assert np.allclose(
+        talg.weighted_pagerank(eng_np, iters=5),
+        talg.weighted_pagerank(eng_sh, iters=5),
+        atol=1e-5,
+    )
+
+
+def test_edge_map_reduce_parity(rmat_graph, weighted_engines):
+    n, _ = rmat_graph
+    eng_np, eng_sh = weighted_engines
+    vals = np.random.default_rng(0).standard_normal(n)
+    out_np = eng_np.edge_map_reduce(vals)
+    out_sh = eng_sh.edge_map_reduce(jnp.asarray(vals, jnp.float32))
+    assert np.allclose(out_np, np.asarray(out_sh), atol=1e-4)
+    batch = np.random.default_rng(1).standard_normal((4, n))
+    out_npb = np.stack([eng_np.edge_map_reduce(v) for v in batch])
+    out_shb = eng_sh.edge_map_reduce_batch(jnp.asarray(batch, jnp.float32))
+    assert np.allclose(out_npb, np.asarray(out_shb), atol=1e-4)
+
+
+def test_weighted_degrees_parity(weighted_engines):
+    eng_np, eng_sh = weighted_engines
+    assert np.allclose(
+        eng_np.weighted_degrees, np.asarray(eng_sh.weighted_degrees), atol=1e-4
+    )
+    assert np.asarray(eng_sh.degrees).sum() == eng_sh.m
+
+
+@pytest.mark.parametrize("frontier", ["small", "large"])
+def test_modes_agree(rmat_graph, engines, frontier):
+    """Forced dense == forced sparse == auto on the sharded engine (the
+    jax-backend invariant, ported)."""
+    n, edges = rmat_graph
+    _, eng_sh = engines
+    from repro.core.traversal.algorithms import _bfs_relax, _bfs_unvisited
+
+    ids = [int(edges[0, 0])] if frontier == "small" else list(range(0, n, 2))
+    outs = {}
+    for mode in ("dense", "sparse", "auto"):
+        U = eng_sh.frontier_from_ids(ids)
+        parents = jnp.full(n, -1, jnp.int64).at[jnp.asarray(ids)].set(
+            jnp.asarray(ids, jnp.int64)
+        )
+        U2, parents2 = eng_sh.edge_map(U, _bfs_relax, _bfs_unvisited, parents, mode=mode)
+        outs[mode] = (np.asarray(U2.to_dense()), np.asarray(parents2))
+    for mode in ("sparse", "auto"):
+        np.testing.assert_array_equal(outs["dense"][0], outs[mode][0])
+        np.testing.assert_array_equal(outs["dense"][1], outs[mode][1])
+
+
+# ---------------------------------------------------------------------------
+# (3) wire contract: collective traffic is O(frontier + batch), not O(pool)
+# ---------------------------------------------------------------------------
+
+
+def test_edge_map_collectives_vertex_sized(rmat_graph, weighted_engines):
+    """Every collective in one auto-mode edgeMap round moves vertex-state
+    (O(n) words) — never pool-sized operands."""
+    n, _ = rmat_graph
+    _, eng = weighted_engines
+    from repro.core.traversal.algorithms import _bfs_relax, _bfs_unvisited
+
+    U = jnp.zeros(n, bool).at[0].set(True)
+    state = jnp.full(n, -1, jnp.int64).at[0].set(0)
+    colls = sb.collective_operand_bytes(
+        lambda U, s: sb._sharded_edge_map_step(
+            eng.aux.offsets, eng.sg.pool.data, eng.aux.src_c, eng.aux.dst_c,
+            eng.aux.evalid, eng.aux.degrees, jnp.int32(eng.m), eng.sg.pool.vals,
+            U, s,
+            F=_bfs_relax, C=_bfs_unvisited, mode="auto", n=n,
+            ids_budget=eng._auto_ids_budget, edge_budget=eng._auto_edge_budget,
+            ops=eng.ops, mesh=eng.mesh, weighted=True,
+        ),
+        U, state,
+    )
+    assert colls, "expected cross-shard merges in the edgeMap step"
+    pool_bytes = eng.sg.pool.data.size * 8
+    biggest = max(b for _, b in colls)
+    assert biggest <= 4 * n * 8, f"collective moves {biggest}B — not vertex-sized"
+    assert biggest * 4 <= pool_bytes, "collective traffic within O(pool) of the pool"
+
+
+def test_bfs_batch_collectives_vertex_sized(rmat_graph, engines):
+    n, _ = rmat_graph
+    _, eng = engines
+    B = 8
+    srcs = jnp.zeros(B, jnp.int32)
+    colls = sb.collective_operand_bytes(
+        lambda s: sb.bfs_batch_sharded(
+            eng.aux.offsets, eng.sg.pool.data, eng.aux.src_c, eng.aux.dst_c,
+            eng.aux.evalid, eng.aux.degrees, eng.aux.src_by_dst,
+            eng.aux.valid_by_dst, eng.aux.dst_offsets, jnp.int32(eng.m), s,
+            n=n, ids_budget=eng._auto_ids_budget,
+            edge_budget=eng._auto_edge_budget, mesh=eng.mesh,
+        ),
+        srcs,
+    )
+    assert colls
+    pool_bytes = eng.sg.pool.data.size * 8
+    biggest = max(b for _, b in colls)
+    assert biggest <= 8 * B * n, f"collective moves {biggest}B — not frontier-sized"
+    assert biggest < pool_bytes
+
+
+def test_insert_step_collectives_batch_sized():
+    """The sharded update step never all-gathers the pool: the only
+    replicated operand is the batch itself (no collective in the step
+    jaxpr may exceed the batch size)."""
+    rng = np.random.default_rng(0)
+    v = np.unique(rng.integers(0, 1 << 30, 4000))
+    pool = sp.from_array(v, N_SHARDS)
+    mesh = sp.pool_mesh(N_SHARDS)
+    step = sp.make_insert_step(mesh, ("shard",))
+    batch = jnp.asarray(np.full(256, sp.SENT, np.int64))
+    colls = sb.collective_operand_bytes(lambda p, b: step(p, b), pool, batch)
+    batch_bytes = batch.size * 8
+    for name, nbytes in colls:
+        assert nbytes <= batch_bytes, f"{name} moves {nbytes}B > batch {batch_bytes}B"
+
+
+# ---------------------------------------------------------------------------
+# (4) in-trace drivers: O(1) host syncs
+# ---------------------------------------------------------------------------
+
+
+def test_bfs_batch_constant_syncs(engines, sources):
+    _, eng_sh = engines
+    talg.bfs_multi(eng_sh, sources)  # warm the jit at B=16
+    talg.bfs_multi(eng_sh, sources[:8])  # ... and at B=8
+    base = HOST_SYNCS.count
+    talg.bfs_multi(eng_sh, sources[:8])
+    syncs_b8 = HOST_SYNCS.count - base
+    base = HOST_SYNCS.count
+    talg.bfs_multi(eng_sh, sources)
+    syncs_b16 = HOST_SYNCS.count - base
+    assert syncs_b16 == syncs_b8 <= 4  # O(1), not O(D * B)
+
+
+# ---------------------------------------------------------------------------
+# (2) + (5) streaming: sharded mirror parity through interleaved updates,
+# rebalance, weight upgrade; version-pinned engine; query_batch routing
+# ---------------------------------------------------------------------------
+
+
+def _parity_stream_scenario(n_shards):
+    """Interleaved insert/delete batches + a weighted batch (mid-stream
+    upgrade) + a bulk insert sized to force a rebalance, applied through
+    AspenStream(mirror='sharded'); returns (stream, numpy reference)."""
+    n = 256
+    edges = symmetrize(rmat_edges(8, 1500, seed=3))
+    keep, updates = make_update_stream(edges, 600, seed=4)
+    g0 = G.build_graph(n, keep)
+    s = AspenStream(g0, mirror="sharded", n_shards=n_shards)
+    for i in range(0, 600, 150):
+        b = updates[i : i + 150]
+        ins = b[b[:, 2] == 0][:, :2]
+        dels = b[b[:, 2] == 1][:, :2]
+        if ins.size:
+            s.insert_edges(ins)
+        if dels.size:
+            s.delete_edges(dels)
+    # mid-stream weight upgrade
+    wedges = edges[:64]
+    s.insert_edges(wedges, weights=_weights_for(wedges))
+    # bulk insert that must grow capacity -> rebalance path
+    bulk = symmetrize(rmat_edges(8, 2500, seed=9))
+    s.insert_edges(bulk)
+    return s
+
+
+@pytest.mark.parametrize("n_shards", [1, N_SHARDS])
+def test_stream_sharded_mirror_parity(n_shards):
+    s = _parity_stream_scenario(n_shards)
+    eng_sh = s.engine("sharded")
+    eng_np = NumpyEngine(s.flat_snapshot())
+    assert eng_sh.m == eng_np.m
+    assert eng_sh.weighted  # the upgrade stuck
+    src = 0
+    p_np, p_sh = talg.bfs(eng_np, src), talg.bfs(eng_sh, src)
+    np.testing.assert_array_equal(p_np, p_sh)
+    np.testing.assert_array_equal(
+        talg.connected_components(eng_np), talg.connected_components(eng_sh)
+    )
+    d_np = np.asarray(talg.sssp(eng_np, src), np.float64)
+    d_sh = np.asarray(talg.sssp(eng_sh, src), np.float64)
+    np.testing.assert_array_equal(d_np, d_sh)
+    assert np.allclose(
+        talg.pagerank(eng_np, iters=4), talg.pagerank(eng_sh, iters=4), atol=1e-5
+    )
+
+
+def test_engine_version_pinned_cache(rmat_graph):
+    n, edges = rmat_graph
+    s = AspenStream(G.build_graph(n, edges[:1000]), mirror="sharded", n_shards=N_SHARDS)
+    e1 = s.engine("sharded")
+    assert s.engine("sharded") is e1  # O(1) dict hit on unchanged version
+    s.insert_edges(edges[1000:1010])
+    e2 = s.engine("sharded")
+    assert e2 is not e1  # new version, new engine
+    assert e2.m >= e1.m
+
+
+def test_query_batch_routes_to_sharded_mirror(rmat_graph):
+    n, edges = rmat_graph
+    s = AspenStream(G.build_graph(n, edges), mirror="sharded", n_shards=N_SHARDS)
+    srcs = np.random.default_rng(2).integers(0, n, 8)
+    out = s.query_batch(srcs, kind="bfs")  # backend=None -> sharded
+    v = s.acquire()
+    try:
+        assert ("engine", "sharded") in v.cache
+        assert ("engine", "jax") not in v.cache
+    finally:
+        s.release(v)
+    eng_np = NumpyEngine(s.flat_snapshot())
+    np.testing.assert_array_equal(out, talg.bfs_multi(eng_np, srcs)[0])
+    # distances + sssp ride the same router
+    np.testing.assert_array_equal(
+        s.query_batch(srcs, kind="distances"),
+        talg.landmark_distances(eng_np, srcs),
+    )
+
+
+def test_make_engine_dispatch(rmat_graph):
+    n, edges = rmat_graph
+    sg = sp.graph_from_edges(n, edges, n_shards=N_SHARDS)
+    eng = make_engine(sg)
+    assert type(eng).__name__ == "ShardedEngine"
+    with pytest.raises(TypeError):
+        make_engine(sg, backend="jax")
+    with pytest.raises(ValueError):
+        make_engine(sg, backend="nope")
+    # snapshot -> sharded conversion path
+    eng2 = make_engine(G.flat_snapshot(G.build_graph(n, edges)), backend="sharded")
+    np.testing.assert_array_equal(
+        talg.bfs(eng, int(edges[0, 0])), talg.bfs(eng2, int(edges[0, 0]))
+    )
+
+
+def test_mesh_divisibility_guard(rmat_graph):
+    n, edges = rmat_graph
+    sg = sp.graph_from_edges(n, edges, n_shards=3)
+    mesh2 = None
+    if jax.device_count() >= 2:
+        mesh2 = jax.make_mesh((2,), ("shard",))
+        with pytest.raises(ValueError):
+            sb.ShardedEngine(sg, mesh=mesh2)
+    else:
+        # 1-device mesh divides everything; construction must succeed
+        assert sb.ShardedEngine(sg).mesh.shape["shard"] == 1
+
+
+# ---------------------------------------------------------------------------
+# multidevice: the acceptance criterion on a real 8-way mesh
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.multidevice
+def test_multidevice_mesh_really_sharded():
+    assert jax.device_count() >= 8
+    sg = sp.graph_from_edges(64, symmetrize(rmat_edges(6, 300, seed=0)), n_shards=8)
+    eng = make_engine(sg)
+    assert eng.mesh.shape["shard"] == 8  # one shard row per device
+
+
+@pytest.mark.multidevice
+def test_multidevice_full_parity(rmat_graph, sources):
+    """BFS parents/levels, CC labels, PageRank and SSSP distances match
+    the numpy engine under the host-count-forced 8-device CPU mesh."""
+    n, edges = rmat_graph
+    w = _weights_for(edges)
+    eng_np = NumpyEngine(G.flat_snapshot(G.build_graph(n, edges, weights=w)))
+    eng_sh = make_engine(sp.graph_from_edges(n, edges, n_shards=8, weights=w))
+    assert eng_sh.mesh.shape["shard"] == 8
+    src = int(edges[0, 0])
+    np.testing.assert_array_equal(talg.bfs(eng_np, src), talg.bfs(eng_sh, src))
+    p_np, d_np = talg.bfs_multi(eng_np, sources)
+    p_sh, d_sh = talg.bfs_multi(eng_sh, sources)
+    np.testing.assert_array_equal(p_np, p_sh)
+    np.testing.assert_array_equal(d_np, d_sh)
+    np.testing.assert_array_equal(
+        talg.connected_components(eng_np), talg.connected_components(eng_sh)
+    )
+    assert np.allclose(
+        talg.pagerank(eng_np, iters=5), talg.pagerank(eng_sh, iters=5), atol=1e-5
+    )
+    np.testing.assert_array_equal(
+        talg.sssp_multi(eng_np, sources), talg.sssp_multi(eng_sh, sources)
+    )
+
+
+@pytest.mark.multidevice
+def test_multidevice_stream_parity_after_rebalance():
+    """The full acceptance scenario: interleaved insert/delete batches,
+    a mid-stream weight upgrade and a forced rebalance, on 8 devices."""
+    s = _parity_stream_scenario(8)
+    eng_sh = s.engine("sharded")
+    assert eng_sh.mesh.shape["shard"] == 8
+    eng_np = NumpyEngine(s.flat_snapshot())
+    assert eng_sh.m == eng_np.m
+    src = 0
+    np.testing.assert_array_equal(talg.bfs(eng_np, src), talg.bfs(eng_sh, src))
+    np.testing.assert_array_equal(
+        talg.connected_components(eng_np), talg.connected_components(eng_sh)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(talg.sssp(eng_np, src), np.float64),
+        np.asarray(talg.sssp(eng_sh, src), np.float64),
+    )
+    assert np.allclose(
+        talg.pagerank(eng_np, iters=4), talg.pagerank(eng_sh, iters=4), atol=1e-5
+    )

@@ -1,5 +1,12 @@
 """Range-sharded pool (the §Perf A1 beyond-paper structure): correctness
-on a degenerate 1-device mesh + pure-host properties."""
+on a degenerate 1-device mesh + pure-host properties.
+
+PR 5 additions: boundary invariants (empty-shard ``lo`` monotonicity,
+rebalance round-trips exactly), insert-then-rebalance parity against
+``flat_ctree.union_merge`` at n_shards ∈ {1, 2, 8}, the ``member``
+wire-traffic regression (no cross-shard row gather), the value lane
+(insert overwrites / delete drops / rebalance preserves), and the
+shard-local delete step."""
 import numpy as np
 import pytest
 
@@ -74,3 +81,226 @@ def test_needs_rebalance_trigger():
     assert not sp.needs_rebalance(p)
     p2 = sp.from_array(v, n_shards=4, cap_per=26)
     assert sp.needs_rebalance(p2, slack=0.9)
+
+
+# ---------------------------------------------------------------------------
+# boundary invariants (ISSUE 5 satellites)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_vals", [1, 2, 3, 7])
+def test_empty_shard_lo_monotone(n_vals):
+    """Fewer distinct keys than shards: trailing shards are empty and
+    their ``lo`` boundaries must still be monotone, or the boundary-
+    table searchsorted would route queries to the wrong shard."""
+    v = np.arange(n_vals, dtype=np.int64) * 1000
+    p = sp.from_array(v, n_shards=8)
+    lo = np.asarray(p.lo)
+    assert (lo[1:] >= lo[:-1]).all()
+    assert lo[0] == np.iinfo(np.int64).min
+    np.testing.assert_array_equal(sp.to_array(p), v)
+    # membership still resolves through the boundary table
+    q = np.concatenate([v, v + 1])
+    got = np.asarray(sp.member(p, jnp.asarray(q)))
+    np.testing.assert_array_equal(got, np.isin(q, v))
+
+
+def test_insert_boundary_key_into_sparse_pool_no_duplicate():
+    """Regression for the empty-shard boundary bug: with duplicated lo
+    boundaries, re-inserting the key AT the boundary routed the batch
+    row to an empty shard and stored it twice.  After the fix an empty
+    shard's range starts strictly past every stored key."""
+    v = np.asarray([0, 1000], np.int64)  # 8 shards -> 6 empty
+    p = sp.from_array(v, n_shards=8, cap_per=16)
+    mesh = sp.pool_mesh(8)
+    step = sp.make_insert_step(mesh, ("shard",))
+    batch = np.full(8, sp.SENT, np.int64)
+    batch[:2] = [500, 1000]  # 1000 already present
+    with mesh:
+        out = step(p, jnp.asarray(batch))
+    np.testing.assert_array_equal(sp.to_array(out), [0, 500, 1000])
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 8])
+def test_rebalance_roundtrips_exactly(n_shards):
+    rng = np.random.default_rng(7)
+    v = np.unique(rng.integers(0, 1 << 40, 3000))
+    p = sp.from_array(v, n_shards=n_shards)
+    r = sp.rebalance(p)
+    np.testing.assert_array_equal(sp.to_array(r), sp.to_array(p))
+    counts = np.asarray(r.n)
+    # ceil-partitioning: every shard holds ceil(total/S) except the last,
+    # which absorbs the remainder (up to S-1 short)
+    assert counts.max() - counts.min() <= max(n_shards - 1, 0)
+    assert counts.max() == -(-counts.sum() // n_shards)
+    lo = np.asarray(r.lo)
+    assert (lo[1:] >= lo[:-1]).all()
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 8])
+def test_insert_then_rebalance_matches_union_merge(n_shards):
+    """Shard-local insert + rebalance == the global flat_ctree rank-merge
+    on random batches (the single-chip reference the sharded pool must
+    agree with element-for-element)."""
+    from repro.core import flat_ctree as fct
+
+    rng = np.random.default_rng(n_shards)
+    va = np.unique(rng.integers(0, 1 << 30, 800))
+    vb = np.unique(rng.integers(0, 1 << 30, 300))
+    cap_per = int(2 ** np.ceil(np.log2((va.size + vb.size) // n_shards + vb.size + 1)))
+    pool = sp.from_array(va, n_shards, cap_per=cap_per)
+    mesh = sp.pool_mesh(n_shards)
+    step = sp.make_insert_step(mesh, ("shard",))
+    pad = int(2 ** np.ceil(np.log2(vb.size + 1)))
+    batch = jnp.asarray(np.concatenate([vb, np.full(pad - vb.size, sp.SENT)]))
+    with mesh:
+        out = step(pool, batch)
+    ref = fct.union_merge(
+        fct.from_array(va, dtype=jnp.int64),
+        fct.from_array(vb, dtype=jnp.int64),
+        fct.grown_capacity(va.size + vb.size),
+    )
+    np.testing.assert_array_equal(sp.to_array(out), fct.to_array(ref))
+    reb = sp.rebalance(out)
+    np.testing.assert_array_equal(sp.to_array(reb), fct.to_array(ref))
+    counts = np.asarray(reb.n)
+    assert counts.max() - counts.min() <= max(n_shards - 1, 0)
+    assert counts.max() == -(-counts.sum() // n_shards)
+
+
+# ---------------------------------------------------------------------------
+# member: wire-traffic regression (no cross-shard row gather)
+# ---------------------------------------------------------------------------
+
+
+def test_member_no_cross_shard_row_gather():
+    """``member`` must probe via flat index math — O(queries · log cap)
+    scalar gathers — and never materialize a (queries, cap) row-gather
+    block (the old ``p.data[s]`` formulation, which under GSPMD put
+    O(queries · cap) on the wire).  Pinned on the jaxpr: no intermediate
+    anywhere near queries × cap elements."""
+    rng = np.random.default_rng(0)
+    v = np.unique(rng.integers(0, 1 << 20, 3000))
+    p = sp.from_array(v, n_shards=4)
+    cap = p.data.shape[1]
+    q = jnp.asarray(rng.integers(0, 1 << 21, 256))
+    jaxpr = jax.make_jaxpr(lambda p, q: sp.member(p, q))(p, q)
+
+    def max_outvar_size(jx, best=0):
+        for eqn in jx.eqns:
+            for var in eqn.outvars:
+                if hasattr(var.aval, "shape"):
+                    best = max(best, int(np.prod(var.aval.shape or (1,))))
+            for val in eqn.params.values():
+                for item in val if isinstance(val, (list, tuple)) else (val,):
+                    inner = getattr(item, "jaxpr", item)
+                    if hasattr(inner, "eqns"):
+                        best = max(best, max_outvar_size(inner, best))
+        return best
+
+    biggest = max_outvar_size(jaxpr.jaxpr)
+    assert biggest < q.size * cap, (
+        f"member materializes a {biggest}-element intermediate "
+        f"(>= queries x cap = {q.size * cap}: the cross-shard row gather)"
+    )
+    # the flat pool view itself is the largest legal intermediate
+    assert biggest <= max(p.data.size, 4 * q.size)
+
+
+def test_member_boundary_cases():
+    rng = np.random.default_rng(5)
+    v = np.unique(rng.integers(100, 1 << 16, 500))
+    p = sp.from_array(v, n_shards=8)
+    q = np.concatenate([
+        v[::13],
+        [0, 1, int(v.min()) - 1, int(v.max()) + 1, 1 << 60],  # off both ends
+        np.asarray(p.lo)[1:],  # exact shard boundaries
+    ])
+    got = np.asarray(sp.member(p, jnp.asarray(q)))
+    np.testing.assert_array_equal(got, np.isin(q, v))
+
+
+# ---------------------------------------------------------------------------
+# value lane: insert overwrites, delete drops, rebalance preserves
+# ---------------------------------------------------------------------------
+
+
+def test_value_lane_roundtrip_and_rebalance():
+    rng = np.random.default_rng(2)
+    v = np.unique(rng.integers(0, 1 << 20, 1000))
+    w = (v % 97 + 1).astype(np.float32)
+    p = sp.from_array(v, n_shards=4, vals=w)
+    np.testing.assert_array_equal(sp.to_array(p), v)
+    np.testing.assert_array_equal(sp.to_val_array(p), w)
+    r = sp.rebalance(p)
+    np.testing.assert_array_equal(sp.to_array(r), v)
+    np.testing.assert_array_equal(sp.to_val_array(r), w)
+
+
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_insert_step_value_lane_overwrites(n_shards):
+    """A batch key that already exists lands its value on the pool slot
+    (insert-overwrites, the flat_ctree.union_merge semantics)."""
+    va = np.arange(0, 200, 2, dtype=np.int64)  # evens
+    wa = np.full(va.size, 1.0, np.float32)
+    vb = np.arange(0, 100, 1, dtype=np.int64)  # overlaps the low evens
+    wb = np.full(vb.size, 9.0, np.float32)
+    pool = sp.from_array(va, n_shards, cap_per=512, vals=wa)
+    mesh = sp.pool_mesh(n_shards)
+    step = sp.make_insert_step(mesh, ("shard",))
+    pad = 128
+    batch = np.full(pad, sp.SENT, np.int64)
+    batch[: vb.size] = vb
+    bvals = np.zeros(pad, np.float32)
+    bvals[: vb.size] = wb
+    with mesh:
+        out = step(pool, jnp.asarray(batch), jnp.asarray(bvals))
+    keys = sp.to_array(out)
+    vals = sp.to_val_array(out)
+    np.testing.assert_array_equal(keys, np.union1d(va, vb))
+    ref = {int(k): 1.0 for k in va}
+    ref.update({int(k): 9.0 for k in vb})  # batch overwrites
+    np.testing.assert_array_equal(vals, [ref[int(k)] for k in keys])
+
+
+def test_insert_step_upgrades_unweighted_pool():
+    """A weighted batch against a plain pool upgrades it to unit values
+    (the mid-stream property-graph upgrade, sharded)."""
+    va = np.arange(10, dtype=np.int64)
+    pool = sp.from_array(va, 2, cap_per=64)
+    assert pool.vals is None
+    mesh = sp.pool_mesh(2)
+    step = sp.make_insert_step(mesh, ("shard",))
+    batch = np.full(16, sp.SENT, np.int64)
+    batch[:2] = [100, 101]
+    bvals = np.zeros(16, np.float32)
+    bvals[:2] = [5.0, 6.0]
+    with mesh:
+        out = step(sp.with_unit_vals(pool), jnp.asarray(batch), jnp.asarray(bvals))
+    keys, vals = sp.to_array(out), sp.to_val_array(out)
+    ref = {int(k): 1.0 for k in va}
+    ref.update({100: 5.0, 101: 6.0})
+    np.testing.assert_array_equal(vals, [ref[int(k)] for k in keys])
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 8])
+def test_delete_step_matches_setdiff(n_shards):
+    rng = np.random.default_rng(3)
+    v = np.unique(rng.integers(0, 1 << 20, 1200))
+    w = (v % 11 + 1).astype(np.float32)
+    dels = np.concatenate([v[::3], rng.integers(1 << 21, 1 << 22, 40)])
+    dels = np.unique(dels)
+    pool = sp.from_array(v, n_shards, vals=w)
+    mesh = sp.pool_mesh(n_shards)
+    step = sp.make_delete_step(mesh, ("shard",))
+    pad = int(2 ** np.ceil(np.log2(dels.size + 1)))
+    batch = np.full(pad, sp.SENT, np.int64)
+    batch[: dels.size] = dels
+    with mesh:
+        out = step(pool, jnp.asarray(batch))
+    expect = np.setdiff1d(v, dels)
+    np.testing.assert_array_equal(sp.to_array(out), expect)
+    keep_vals = w[~np.isin(v, dels)]
+    np.testing.assert_array_equal(sp.to_val_array(out), keep_vals)
+    # boundaries untouched: deletes never move keys across ranges
+    np.testing.assert_array_equal(np.asarray(out.lo), np.asarray(pool.lo))
