@@ -808,6 +808,104 @@ def bench_kernels(quick: bool = False) -> List[Row]:
     return rows
 
 
+
+# ---------------------------------------------------------------------------
+# BYTES: compressed device pool — bytes/edge + fused-decode throughput
+# ---------------------------------------------------------------------------
+
+
+def bench_bytes(quick: bool = False) -> List[Row]:
+    """DESIGN.md §10: the paper's headline metric (a few bytes per edge,
+    T2) on the DEVICE pool.  Compares the raw packed-key FlatGraph
+    against the chunk-compressed ``CompressedPool`` at several rMAT
+    scales: pool-only bytes/edge, whole-engine resident bytes/edge
+    (pool + traversal aux), and the edgeMap (+, x) reduce throughput of
+    the fused-decode Pallas kernel vs the raw kernel (PageRank's inner
+    loop).  One sharded-engine residency row pins the per-shard variant.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import compressed as cz
+    from repro.core import flat_graph as fg
+    from repro.core import sharded_pool as sp
+    from repro.core.traversal import make_engine
+
+    rng = np.random.default_rng(0)
+    rows: List[Row] = []
+    scales = [(12, 60_000)] if quick else [(12, 60_000), (13, 120_000)]
+    B = 4 if quick else 8
+    for log_n, m in scales:
+        n, edges = _test_graph(log_n, m)
+        g = fg.from_edges(n, edges)
+        cg = fg.compress_host(g, width=2)
+        e_raw = make_engine(g)
+        e_cmp = make_engine(cg)
+        me = int(g.m)
+        tag = f"n=2^{log_n},m={me}"
+        pool_raw = g.keys.nbytes / me
+        pool_cmp = cz.stream_nbytes(cg.dst) / me
+        rows += [
+            (f"BYTES/pool_raw/{tag}", pool_raw, "B/edge", "packed int64 keys"),
+            (f"BYTES/pool_comp/{tag}", pool_cmp, "B/edge", "int16 delta chunks"),
+            (f"BYTES/pool_ratio/{tag}", pool_raw / pool_cmp, "x", "paper: 4.7-11.3x (T2)"),
+            (
+                f"BYTES/resident_raw/{tag}",
+                e_raw.resident_nbytes / me,
+                "B/edge",
+                "pool + EngineAux",
+            ),
+            (
+                f"BYTES/resident_comp/{tag}",
+                e_cmp.resident_nbytes / me,
+                "B/edge",
+                "pool + CompressedAux",
+            ),
+            (
+                f"BYTES/resident_ratio/{tag}",
+                e_raw.resident_nbytes / e_cmp.resident_nbytes,
+                "x",
+                "whole-engine reduction",
+            ),
+        ]
+        vals = jnp.asarray(rng.random((B, n)), jnp.float32)
+        t_raw = _timeit(
+            lambda: jax.block_until_ready(e_raw.edge_map_reduce_batch(vals)),
+            repeats=2,
+        )
+        t_cmp = _timeit(
+            lambda: jax.block_until_ready(e_cmp.edge_map_reduce_batch(vals)),
+            repeats=2,
+        )
+        rows += [
+            (f"BYTES/reduce_raw/{tag}", t_raw * 1e3, "ms", f"B={B} segment-sum"),
+            (f"BYTES/reduce_comp/{tag}", t_cmp * 1e3, "ms", "fused in-kernel decode"),
+            (
+                f"BYTES/reduce_ratio/{tag}",
+                t_cmp / t_raw,
+                "x",
+                "comp/raw time; target <= ~1.2",
+            ),
+        ]
+    # sharded residency at the smallest scale (the per-shard variant)
+    n, edges = _test_graph(11, 30_000, seed=1)
+    sg = sp.graph_from_edges(n, edges, n_shards=2)
+    csg = sp.compress_sharded(sg, width=2)
+    es_raw = make_engine(sg)
+    es_cmp = make_engine(csg)
+    me = sp.graph_num_edges(sg)
+    tag = f"sharded,n=2^11,m={me}"
+    rows.append(
+        (
+            f"BYTES/resident_ratio/{tag}",
+            es_raw.resident_nbytes / es_cmp.resident_nbytes,
+            "x",
+            "per-shard pool + aux reduction",
+        )
+    )
+    return rows
+
+
 ALL_BENCHES = {
     "memory_usage": bench_memory_usage,
     "chunk_size": bench_chunk_size,
@@ -822,4 +920,5 @@ ALL_BENCHES = {
     "weighted": bench_weighted,
     "sharded": bench_sharded,
     "kernels": bench_kernels,
+    "bytes": bench_bytes,
 }

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import compressed as cz
 from . import flat_ctree as fct
 from .hash import is_head_jnp
 
@@ -254,6 +255,220 @@ def delete_edges_device(
         out_cap = g.edge_capacity
     fn = _delete_edges_donating if donate else delete_edges
     return fn(g, batch, out_cap)
+
+
+# ---------------------------------------------------------------------------
+# compressed pool: the paper's bytes-per-edge layout, device-resident
+# ---------------------------------------------------------------------------
+
+
+class CompressedPool(NamedTuple):
+    """FlatGraph with the dst lane chunk-compressed (paper §3.2 on device).
+
+    Same CSR contract as FlatGraph — ``offsets`` indexes the sorted pool,
+    ``m`` counts the valid prefix — but the pool itself is factored:
+
+    * src ids are IMPLIED by ``offsets`` (a src-major run never needs its
+      src stored per edge; one searchsorted recovers it), and
+    * dst ids are delta-chunked (``core/compressed.ChunkedStream``): an
+      int32 anchor plus int8/int16 deltas per 128-slot chunk with an
+      escape lane for overflow deltas.
+
+    At int16 lane width this is ~2.6 resident bytes/edge against the raw
+    pool's 8 (the packed int64 key), before the O(n) offsets both layouts
+    share.  ``weights`` stays an uncompressed float32 lane (values are
+    not delta-friendly), padded to the chunked capacity.
+
+    Updates decompress -> rank-merge -> recompress inside ONE jit
+    (``insert_edges_compressed``): the uncompressed pool exists only as a
+    transient inside the update step, the *resident* state is always
+    compressed — the CPMA-style contract for batch updates on compressed
+    flat layouts.
+    """
+
+    offsets: jax.Array  # int32[n+1] CSR offsets (valid prefix of pool)
+    dst: cz.ChunkedStream  # chunked dst per pool slot; length = capacity
+    m: jax.Array  # int32 scalar: valid edge count
+    weights: jax.Array | None = None  # float32[cap] per-edge values (pad 0)
+
+    @property
+    def n(self) -> int:
+        return self.offsets.shape[0] - 1
+
+    @property
+    def edge_capacity(self) -> int:
+        return self.dst.length
+
+
+def src_from_offsets(offsets: jax.Array, cap: int) -> jax.Array:
+    """Recover per-slot src ids from CSR offsets (slot j belongs to the
+    vertex whose offset range contains j); slots past offsets[n] map to n."""
+    slots = jnp.arange(cap, dtype=offsets.dtype)
+    return (jnp.searchsorted(offsets, slots, side="right") - 1).astype(jnp.int32)
+
+
+def _compress_impl(g: FlatGraph, width: int, k: int) -> CompressedPool:
+    cap = g.edge_capacity
+    _, dst = unpack(g.keys)
+    # Pad slots hold SENT64 (dst lane decodes to -1); encoding that cliff
+    # would waste an escape slot per boundary chunk, so carry the last
+    # valid dst forward instead — decompress masks pad slots to SENT64
+    # from ``m`` anyway, the encoded pad content is never observed.
+    last = dst[jnp.maximum(g.m - 1, 0)]
+    dst_enc = jnp.where(jnp.arange(cap) < g.m, dst, last)
+    stream = cz.encode_stream(dst_enc, width=width, k=k)
+    w = g.weights
+    if w is not None and stream.length > cap:
+        w = jnp.pad(w, (0, stream.length - cap))
+    return CompressedPool(g.offsets, stream, g.m.astype(jnp.int32), w)
+
+
+compress = functools.partial(jax.jit, static_argnames=("width", "k"))(
+    lambda g, width=2, k=cz.OVF_SLOTS: _compress_impl(g, width, k)
+)
+compress.__doc__ = "jit FlatGraph -> CompressedPool (static lane width/escape capacity)."
+
+
+def _decompress_impl(cg: CompressedPool) -> FlatGraph:
+    cap = cg.edge_capacity
+    dst = cz.decode_stream(cg.dst)
+    src = src_from_offsets(cg.offsets, cap)
+    packed = (src.astype(jnp.int64) << 32) | (dst.astype(jnp.int64) & 0xFFFFFFFF)
+    keys = jnp.where(jnp.arange(cap) < cg.m, packed, SENT64)
+    return FlatGraph(cg.offsets, keys, cg.m, cg.weights)
+
+
+decompress = jax.jit(_decompress_impl)
+decompress.__doc__ = (
+    "jit CompressedPool -> FlatGraph (exact inverse of ``compress`` for"
+    " non-spilled streams; pad slots come back as SENT64)."
+)
+
+
+def compress_host(
+    g: FlatGraph, width: int | None = None, k: int = cz.OVF_SLOTS
+) -> CompressedPool:
+    """Host build: compress with lane-width auto-selection and a one-time
+    spill check (the one place a host sync is acceptable — builds and
+    rebuilds, not the streaming hot path).
+
+    ``width=None`` picks int8 when the graph's delta profile stays within
+    an average of one escape per chunk, else int16.  Raises if even the
+    int16 lane spills (> k escapes in some chunk) — the caller keeps the
+    raw layout; silent corruption is never an option.
+    """
+    widths = (1, 2) if width is None else (width,)
+    cg = None
+    for w in widths:
+        cg = compress(g, width=w, k=k)
+        if bool(cg.dst.spill):
+            cg = None
+            continue
+        if width is None and w == 1:
+            used = int(np.asarray(cg.dst.ovf_pos < cz.CHUNK).sum())
+            if used > cg.dst.anchors.shape[0]:  # > 1 escape/chunk average
+                cg = None
+                continue
+        break
+    if cg is None:
+        raise ValueError(
+            f"graph spills the k={k} escape lane even at int16 deltas; "
+            "keep the raw pool (delta gaps exceed the chunk escape budget)"
+        )
+    return cg
+
+
+def with_unit_weights_compressed(cg: CompressedPool) -> CompressedPool:
+    """Compressed counterpart of ``with_unit_weights``."""
+    if cg.weights is not None:
+        return cg
+    return cg._replace(weights=jnp.ones(cg.edge_capacity, jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def insert_edges_compressed(
+    cg: CompressedPool,
+    batch: fct.FlatCTree,
+    out_cap: int,
+    optimized: bool = True,
+    n_out: int | None = None,
+) -> CompressedPool:
+    """InsertEdges on the compressed pool: decompress -> rank-merge ->
+    recompress, one jit.  Lane width and escape capacity are inherited
+    from the input stream (static via its dtypes/shapes), so a whole
+    update stream reuses one compiled step.  The output spill flag ORs in
+    the input's — once a stream spills it stays flagged until rebuilt."""
+    g = _decompress_impl(cg)
+    g2 = _insert_edges_impl(g, batch, out_cap, optimized, n_out)
+    out = _compress_impl(g2, cg.dst.width, cg.dst.k)
+    return out._replace(dst=out.dst._replace(spill=out.dst.spill | cg.dst.spill))
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def delete_edges_compressed(
+    cg: CompressedPool, batch: fct.FlatCTree, out_cap: int
+) -> CompressedPool:
+    """DeleteEdges on the compressed pool (see ``insert_edges_compressed``)."""
+    g = _decompress_impl(cg)
+    g2 = _delete_edges_impl(g, batch, out_cap)
+    out = _compress_impl(g2, cg.dst.width, cg.dst.k)
+    return out._replace(dst=out.dst._replace(spill=out.dst.spill | cg.dst.spill))
+
+
+def chunk_stats(
+    g: FlatGraph, *, b: int = cz.CHUNK, seed: int = 0, k: int = cz.OVF_SLOTS
+) -> dict:
+    """Host-side reference statistics for the compressed layout.
+
+    Wires the canonical ``chunk_structure`` boundaries (hash heads — the
+    paper's recomputable chunking) alongside the fixed-geometry chunks the
+    device layout actually uses, and reports per-chunk delta widths and
+    escape counts.  ``tests/test_compressed.py`` checks these numbers
+    against what ``compress`` really builds; the BYTES bench reports
+    ``bytes_ideal`` (per-chunk int8/int16 width selection) next to the
+    resident uniform-width layout.
+    """
+    heads = np.asarray(chunk_structure(g, b, seed))
+    m = int(g.m)
+    cap = g.edge_capacity
+    # low 32 bits viewed as int32 (matching device ``unpack``), widened
+    dst = (np.asarray(g.keys) & 0xFFFFFFFF).astype(np.uint32).view(np.int32).astype(np.int64)
+    if m > 0:
+        dst[m:] = dst[m - 1]  # encoder's carry-forward pad convention
+    else:
+        dst[:] = 0
+    capC = ((max(cap, 1) + cz.CHUNK - 1) // cz.CHUNK) * cz.CHUNK
+    dstp = np.concatenate([dst, np.full(capC - cap, dst[-1] if cap else 0, np.int64)])
+    rows = dstp.reshape(-1, cz.CHUNK)
+    deltas = np.diff(rows, axis=1, prepend=rows[:, :1])
+    absd = np.abs(deltas)
+    chunk_max = absd.max(axis=1) if rows.size else np.zeros(0, np.int64)
+    width_per_chunk = np.where(chunk_max <= 127, 1, np.where(chunk_max <= 32767, 2, 4))
+    esc8 = (absd > 127).sum(axis=1)
+    esc16 = (absd > 32767).sum(axis=1)
+    R = rows.shape[0]
+    ovf_bytes = 2 * 4 * k  # pos + add lanes, int32
+    bytes_fixed = {
+        w: R * (4 + w * cz.CHUNK + ovf_bytes) for w in (1, 2)
+    }
+    per_chunk_ideal = np.where(
+        width_per_chunk < 4,
+        4 + width_per_chunk * cz.CHUNK
+        + 8 * np.where(width_per_chunk == 1, esc8, esc16),
+        4 * cz.CHUNK,  # incompressible chunk: raw int32 lane
+    )
+    return {
+        "canonical_chunks": int(heads.sum()),
+        "fixed_chunks": R,
+        "max_abs_delta": int(chunk_max.max()) if R else 0,
+        "width_per_chunk": width_per_chunk,
+        "escapes_i8": int(esc8.sum()),
+        "escapes_i16": int(esc16.sum()),
+        "spill_i8": bool((esc8 > k).any()),
+        "spill_i16": bool((esc16 > k).any()),
+        "bytes_fixed": bytes_fixed,
+        "bytes_ideal": int(per_chunk_ideal.sum()),
+    }
 
 
 def batch_from_edges(

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from . import compressed as cz
 from .flat_ctree import sentinel_for
 
 try:  # jax >= 0.6 exposes shard_map at the top level
@@ -549,5 +550,218 @@ def graph_to_weight_array(sg: ShardedGraph) -> np.ndarray | None:
     return to_val_array(sg.pool)
 
 
-def graph_num_edges(sg: ShardedGraph) -> int:
+def graph_num_edges(sg) -> int:
+    """Global edge count; works on both ShardedGraph and
+    CompressedShardedGraph (both pools carry per-shard counts)."""
     return int(np.asarray(sg.pool.n).sum())
+
+
+# ---------------------------------------------------------------------------
+# compressed sharded pool: per-shard chunk-compressed dst lane (paper §3.2,
+# sharded).  The per-shard variant of flat_graph.CompressedPool.
+# ---------------------------------------------------------------------------
+
+
+class CompressedShardedPool(NamedTuple):
+    """ShardedPool with each shard row's dst lane chunk-compressed.
+
+    Same range-sharding contract (``n`` counts, ``lo`` boundaries) but
+    the packed-key rows are factored exactly like the flat
+    ``CompressedPool``: src ids implied by a per-shard CSR ``offsets``
+    row, dst ids delta-chunked per row (``ChunkedStream`` with
+    (S, ...)-batched leaves; ``spill`` becomes bool[S]).  Every leaf is
+    laid out (n_shards, ...) so a ``P('shard', ...)`` spec hands each
+    device its own rows, same as the raw pool.
+
+    offsets : int32[S, n+1] per-shard CSR over each row's valid prefix
+    dst     : ChunkedStream, anchors (S, R) / deltas (S, R, CHUNK) /
+              ovf_* (S, R, K) / spill (S,); row capacity = R * CHUNK
+    n       : (S,) valid counts (the raw pool's counts, unchanged)
+    lo      : (S,) inclusive lower key boundary per shard
+    vals    : optional (S, cap) float32 value lane, uncompressed (pad 0)
+    """
+
+    offsets: jax.Array
+    dst: cz.ChunkedStream
+    n: jax.Array
+    lo: jax.Array
+    vals: Optional[jax.Array] = None
+
+    @property
+    def n_shards(self) -> int:
+        return self.offsets.shape[0]
+
+    @property
+    def cap_per(self) -> int:
+        return self.dst.length
+
+
+class CompressedShardedGraph(NamedTuple):
+    """ShardedGraph over a CompressedShardedPool; ``n`` is the STATIC
+    vertex count, same contract as ``ShardedGraph``."""
+
+    pool: CompressedShardedPool
+    n: int
+
+    @property
+    def n_shards(self) -> int:
+        return self.pool.n_shards
+
+    @property
+    def weighted(self) -> bool:
+        return self.pool.vals is not None
+
+
+def _compress_pool_impl(
+    p: ShardedPool, n: int, width: int, k: int
+) -> CompressedShardedPool:
+    S, cap = p.data.shape
+    bounds = jnp.arange(n + 1, dtype=jnp.int64) << 32
+
+    def row(drow, nrow):
+        offs = jnp.minimum(jnp.searchsorted(drow, bounds), nrow).astype(jnp.int32)
+        dst = (drow & 0xFFFFFFFF).astype(jnp.int32)
+        # Pad slots hold SENT (dst lane -1): carry the last valid dst
+        # forward instead of encoding that cliff (same trick as the flat
+        # ``_compress_impl``; decompress re-masks pad slots from ``n``).
+        last = dst[jnp.maximum(nrow - 1, 0)]
+        dst_enc = jnp.where(jnp.arange(cap) < nrow, dst, last)
+        return offs, cz._encode_impl(dst_enc, width, k)
+
+    offsets, stream = jax.vmap(row)(p.data, p.n)
+    vals = p.vals
+    if vals is not None and stream.length > cap:
+        vals = jnp.pad(vals, ((0, 0), (0, stream.length - cap)))
+    return CompressedShardedPool(offsets, stream, p.n, p.lo, vals)
+
+
+compress_pool = functools.partial(jax.jit, static_argnums=(1, 2, 3))(
+    _compress_pool_impl
+)
+compress_pool.__doc__ = (
+    "jit ShardedPool -> CompressedShardedPool (static n / lane width /"
+    " escape capacity); vmapped per-shard encode, shard-local under GSPMD."
+)
+
+
+def _decompress_pool_impl(cp: CompressedShardedPool) -> ShardedPool:
+    capC = cp.cap_per
+    dst = cz.decode_stream(cp.dst)  # (S, capC) int32, batched decode
+
+    def row(offs, dst_row, nrow):
+        slots = jnp.arange(capC, dtype=offs.dtype)
+        src = (jnp.searchsorted(offs, slots, side="right") - 1).astype(jnp.int32)
+        packed = (src.astype(jnp.int64) << 32) | (
+            dst_row.astype(jnp.int64) & 0xFFFFFFFF
+        )
+        return jnp.where(jnp.arange(capC) < nrow, packed, SENT)
+
+    data = jax.vmap(row)(cp.offsets, dst, cp.n)
+    return ShardedPool(data, cp.n, cp.lo, cp.vals)
+
+
+decompress_pool = jax.jit(_decompress_pool_impl)
+decompress_pool.__doc__ = (
+    "jit CompressedShardedPool -> ShardedPool (exact inverse of"
+    " ``compress_pool`` for non-spilled rows; pad slots come back as SENT)."
+    "  Row capacity is the chunked capacity, a CHUNK multiple >= the input"
+    " pool's, so a compress/decompress round-trip is capacity-stable."
+)
+
+
+def compress_sharded(
+    sg: ShardedGraph, width: int | None = None, k: int = cz.OVF_SLOTS
+) -> CompressedShardedGraph:
+    """Host build with lane-width auto-selection and a one-time spill
+    check, mirroring ``flat_graph.compress_host``: int8 when the delta
+    profile stays within ~1 escape/chunk on average, else int16; raises
+    if any shard row spills even at int16 (keep the raw layout)."""
+    widths = (1, 2) if width is None else (width,)
+    cp = None
+    for w in widths:
+        cp = compress_pool(sg.pool, sg.n, w, k)
+        if bool(np.asarray(cp.dst.spill).any()):
+            cp = None
+            continue
+        if width is None and w == 1:
+            used = int(np.asarray(cp.dst.ovf_pos < cz.CHUNK).sum())
+            n_chunks = int(np.prod(cp.dst.anchors.shape))
+            if used > n_chunks:  # > 1 escape/chunk average
+                cp = None
+                continue
+        break
+    if cp is None:
+        raise ValueError(
+            f"sharded pool spills the k={k} escape lane even at int16 "
+            "deltas; keep the raw layout"
+        )
+    return CompressedShardedGraph(cp, sg.n)
+
+
+def decompress_sharded(csg: CompressedShardedGraph) -> ShardedGraph:
+    return ShardedGraph(decompress_pool(csg.pool), csg.n)
+
+
+def _or_spill(out: CompressedShardedPool, cp: CompressedShardedPool):
+    # once a row spills it stays flagged until the pool is rebuilt
+    return out._replace(dst=out.dst._replace(spill=out.dst.spill | cp.dst.spill))
+
+
+def make_insert_step_compressed(mesh: Mesh, axis_names: Tuple[str, ...]):
+    """Compressed counterpart of ``make_insert_step``: decompress ->
+    shard-local rank-merge -> recompress, ONE jit per (shapes, n).  The
+    uncompressed rows exist only as a transient inside the step; the
+    resident state stays compressed (the flat
+    ``insert_edges_compressed`` contract, sharded).  ``n`` is static
+    (the offsets rows are (n+1)-wide); lane width / escape capacity are
+    inherited from the input stream's dtypes, so one compiled step
+    serves a whole update stream."""
+    raw_step = make_insert_step(mesh, axis_names)
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def step(
+        cpool: CompressedShardedPool,
+        batch: jax.Array,
+        batch_vals: jax.Array | None = None,
+        *,
+        n: int,
+    ) -> CompressedShardedPool:
+        p = _decompress_pool_impl(cpool)
+        p2 = raw_step(p, batch, batch_vals)
+        out = _compress_pool_impl(p2, n, cpool.dst.width, cpool.dst.k)
+        return _or_spill(out, cpool)
+
+    return step
+
+
+def make_delete_step_compressed(mesh: Mesh, axis_names: Tuple[str, ...]):
+    """Compressed counterpart of ``make_delete_step`` (see
+    ``make_insert_step_compressed``)."""
+    raw_step = make_delete_step(mesh, axis_names)
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def step(
+        cpool: CompressedShardedPool, batch: jax.Array, *, n: int
+    ) -> CompressedShardedPool:
+        p = _decompress_pool_impl(cpool)
+        p2 = raw_step(p, batch)
+        out = _compress_pool_impl(p2, n, cpool.dst.width, cpool.dst.k)
+        return _or_spill(out, cpool)
+
+    return step
+
+
+def needs_rebalance_compressed(
+    cp: CompressedShardedPool, slack: float = 0.9
+) -> bool:
+    return bool((np.asarray(cp.n) >= slack * cp.cap_per).any())
+
+
+def rebalance_compressed(
+    cp: CompressedShardedPool, n: int, cap_per: int | None = None
+) -> CompressedShardedPool:
+    """Host-side O(m) redistribution (decompress -> rebalance ->
+    recompress).  Only sound on non-spilled streams — a spilled pool no
+    longer round-trips and must be rebuilt from its source edges."""
+    p = rebalance(decompress_pool(cp), cap_per=cap_per)
+    return compress_pool(p, n, cp.dst.width, cp.dst.k)

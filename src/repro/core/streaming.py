@@ -55,6 +55,7 @@ class AspenStream:
         mirror: "bool | str" = True,
         donate_buffers: bool = False,
         n_shards: Optional[int] = None,
+        compressed: bool = False,
     ):
         """``mirror=True`` (default, = ``"flat"``) maintains the resident
         FlatGraph alongside the tree; ``mirror="sharded"`` maintains a
@@ -65,15 +66,29 @@ class AspenStream:
         additionally donates the old flat-mirror pool to each merge —
         ONLY safe when no reader can still hold a previous version
         (single-reader pipelines), since donation invalidates the shared
-        buffer."""
+        buffer.
+
+        ``compressed=True`` keeps the mirror in the chunk-compressed
+        layout (``flat_graph.CompressedPool`` /
+        ``sharded_pool.CompressedShardedPool``, DESIGN.md §10): each
+        edge batch runs the decompress -> rank-merge -> recompress jit,
+        so the RESIDENT state is always a few bytes/edge, and
+        ``engine()`` serves the matching compressed engine.  Donation is
+        unavailable on compressed mirrors (the merge's uncompressed pool
+        is a transient, never a reusable buffer)."""
         g0 = initial if initial is not None else G.empty(b, seed)
         kind = {True: MIRROR, False: None}.get(mirror, mirror)
         if kind not in (None, MIRROR, SHARDED_MIRROR):
             raise ValueError(
                 f"mirror must be bool, 'flat' or 'sharded'; got {mirror!r}"
             )
+        if compressed and kind is None:
+            raise ValueError("compressed=True requires a resident mirror")
+        if compressed and donate_buffers:
+            raise ValueError("donate_buffers is unavailable on compressed mirrors")
         self._mirror_kind = kind
         self._mirror_enabled = kind is not None
+        self._compressed = compressed
         self._donate = donate_buffers
         if kind == SHARDED_MIRROR:
             from . import sharded_pool as sp
@@ -82,6 +97,13 @@ class AspenStream:
             self._smesh = sp.pool_mesh(self._n_shards)
             self._s_insert = sp.make_insert_step(self._smesh, ("shard",))
             self._s_delete = sp.make_delete_step(self._smesh, ("shard",))
+            if compressed:
+                self._s_insert_c = sp.make_insert_step_compressed(
+                    self._smesh, ("shard",)
+                )
+                self._s_delete_c = sp.make_delete_step_compressed(
+                    self._smesh, ("shard",)
+                )
         aux = {kind: self._mirror_from_tree(g0)} if kind else None
         self.vg: VersionedGraph[G.Graph] = VersionedGraph(g0, aux=aux)
         self._wlock = threading.Lock()  # serializes writers (incl. mirror merge)
@@ -96,12 +118,25 @@ class AspenStream:
         return flat_graph_of(G.flat_snapshot(g))
 
     def _mirror_from_tree(self, g: G.Graph):
-        """Full mirror rebuild in the stream's configured representation."""
+        """Full mirror rebuild in the stream's configured representation.
+        On compressed streams the rebuild is also the spill recovery
+        point: ``compress_host`` / ``compress_sharded`` re-check the
+        escape-lane flag from scratch and raise rather than publish a
+        mis-decoding mirror."""
         flat = self._flat_from_tree(g)
         if self._mirror_kind == SHARDED_MIRROR:
             from .traversal import sharded_graph_of_flat
 
-            return sharded_graph_of_flat(flat, self._n_shards)
+            sg = sharded_graph_of_flat(flat, self._n_shards)
+            if self._compressed:
+                from . import sharded_pool as sp
+
+                return sp.compress_sharded(sg, width=2)
+            return sg
+        if self._compressed:
+            from . import flat_graph as fg
+
+            return fg.compress_host(flat, width=2)
         return flat
 
     @staticmethod
@@ -149,14 +184,27 @@ class AspenStream:
 
         if edges.shape[0] == 0:
             return mirror
+        compressed = isinstance(mirror, fg.CompressedPool)
         if weights is not None and mirror.weights is None:
-            mirror = fg.with_unit_weights(mirror)
+            mirror = (
+                fg.with_unit_weights_compressed(mirror)
+                if compressed
+                else fg.with_unit_weights(mirror)
+            )
         batch = self._device_batch(edges, weights)
         # vertices are created by their first out-edge (matching the
         # tree, whose vertex set is the set of inserted sources)
         n_out = max(mirror.n, int(edges[:, 0].max()) + 1)
         need = G.num_edges(g_old) + edges.shape[0]
         cap = max(mirror.edge_capacity, fct.grown_capacity(need))
+        if compressed:
+            # decompress -> merge -> recompress, one jit; no donation
+            # (the uncompressed pool is a transient of the trace, not a
+            # reusable buffer)
+            return fg.insert_edges_compressed(
+                mirror, batch, cap, True,
+                None if n_out == mirror.n else n_out,
+            )
         return fg.insert_edges_device(
             mirror, batch, cap,
             n_out=None if n_out == mirror.n else n_out,
@@ -168,6 +216,10 @@ class AspenStream:
 
         if edges.shape[0] == 0:
             return mirror
+        if isinstance(mirror, fg.CompressedPool):
+            return fg.delete_edges_compressed(
+                mirror, self._device_batch(edges), mirror.edge_capacity
+            )
         return fg.delete_edges_device(
             mirror, self._device_batch(edges), donate=self._donate
         )
@@ -195,11 +247,30 @@ class AspenStream:
         if edges.shape[0] == 0:
             return mirror
         pool = mirror.pool
-        if weights is not None and pool.vals is None:
-            pool = sp.with_unit_vals(pool)
+        compressed = isinstance(pool, sp.CompressedShardedPool)
         batch = self._device_batch(edges, weights)
         counts = np.asarray(pool.n)
         k = int(edges.shape[0])
+        n_out = max(mirror.n, int(edges[:, 0].max()) + 1)
+        if compressed:
+            import jax.numpy as jnp
+
+            if weights is not None and pool.vals is None:
+                pool = pool._replace(
+                    vals=jnp.ones(
+                        (pool.n_shards, pool.cap_per), jnp.float32
+                    )
+                )
+            if int(counts.max()) + k > pool.cap_per:
+                per = -(-int(counts.sum()) // self._n_shards)
+                pool = sp.rebalance_compressed(
+                    pool, mirror.n,
+                    cap_per=max(pool.cap_per, fct.grown_capacity(per + k)),
+                )
+            pool = self._s_insert_c(pool, batch.data, batch.vals, n=n_out)
+            return sp.CompressedShardedGraph(pool, n_out)
+        if weights is not None and pool.vals is None:
+            pool = sp.with_unit_vals(pool)
         cap_per = pool.data.shape[1]
         if int(counts.max()) + k > cap_per:
             per = -(-int(counts.sum()) // self._n_shards)
@@ -207,7 +278,6 @@ class AspenStream:
                 pool, cap_per=max(cap_per, fct.grown_capacity(per + k))
             )
         pool = self._s_insert(pool, batch.data, batch.vals)
-        n_out = max(mirror.n, int(edges[:, 0].max()) + 1)
         return sp.ShardedGraph(pool, n_out)
 
     def _sharded_delete(self, mirror, edges: np.ndarray):
@@ -216,6 +286,10 @@ class AspenStream:
         if edges.shape[0] == 0:
             return mirror
         batch = self._device_batch(edges)
+        if isinstance(mirror.pool, sp.CompressedShardedPool):
+            return sp.CompressedShardedGraph(
+                self._s_delete_c(mirror.pool, batch.data, n=mirror.n), mirror.n
+            )
         return sp.ShardedGraph(self._s_delete(mirror.pool, batch.data), mirror.n)
 
     def _apply_insert(self, mirror, g_old, edges, weights=None):
@@ -315,24 +389,33 @@ class AspenStream:
 
     def flat_graph(self):
         """The current version's FlatGraph: the resident mirror (zero
-        work) or, on mirror-less / sharded streams, a one-off rebuild."""
+        work; a compressed mirror is decompressed on the way out), or,
+        on mirror-less / sharded streams, a one-off rebuild."""
+        from . import flat_graph as fg
+
         v = self.acquire()
         try:
             if MIRROR in v.aux:
-                return v.aux[MIRROR]
+                m = v.aux[MIRROR]
+                return fg.decompress(m) if isinstance(m, fg.CompressedPool) else m
             return self._flat_from_tree(v.graph)
         finally:
             self.release(v)
 
     def sharded_graph(self):
         """The current version's ShardedGraph: the resident sharded
-        mirror (zero work) or, on other streams, a one-off rebuild."""
+        mirror (zero work; a compressed mirror is decompressed on the
+        way out), or, on other streams, a one-off rebuild."""
+        from . import sharded_pool as sp
         from .traversal import sharded_graph_of_flat
 
         v = self.acquire()
         try:
             if SHARDED_MIRROR in v.aux:
-                return v.aux[SHARDED_MIRROR]
+                m = v.aux[SHARDED_MIRROR]
+                if isinstance(m, sp.CompressedShardedGraph):
+                    return sp.decompress_sharded(m)
+                return m
             flat = v.aux.get(MIRROR)
             if flat is None:
                 flat = self._flat_from_tree(v.graph)

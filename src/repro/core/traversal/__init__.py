@@ -43,7 +43,9 @@ __all__ = [
     "dense_threshold",
     "NumpyEngine",
     "JaxEngine",
+    "CompressedEngine",
     "ShardedEngine",
+    "CompressedShardedEngine",
     "VertexSubset",
     "edge_map",
     "engine_of",
@@ -71,10 +73,18 @@ def __getattr__(name):
         from .jax_backend import JaxEngine
 
         return JaxEngine
+    if name == "CompressedEngine":
+        from .jax_backend import CompressedEngine
+
+        return CompressedEngine
     if name == "ShardedEngine":
         from .sharded_backend import ShardedEngine
 
         return ShardedEngine
+    if name == "CompressedShardedEngine":
+        from .sharded_backend import CompressedShardedEngine
+
+        return CompressedShardedEngine
     raise AttributeError(name)
 
 
@@ -87,14 +97,26 @@ def make_engine(obj, backend: str | None = None) -> TraversalEngine:
     (-> NumpyEngine), or a tree-level ``Graph`` (snapshotted first;
     backend selects the substrate).
     """
-    from ..flat_graph import FlatGraph
+    from ..flat_graph import CompressedPool, FlatGraph
     from ..graph import Graph, flat_snapshot
-    from ..sharded_pool import ShardedGraph
+    from ..sharded_pool import CompressedShardedGraph, ShardedGraph
 
     if backend not in (None, "numpy", "jax", "sharded"):
         raise ValueError(
             f"unknown backend {backend!r}; expected 'numpy', 'jax' or 'sharded'"
         )
+    if isinstance(obj, CompressedPool):
+        if backend in ("numpy", "sharded"):
+            raise TypeError("CompressedPool is jax-native; decompress first")
+        from .jax_backend import CompressedEngine
+
+        return CompressedEngine(obj)
+    if isinstance(obj, CompressedShardedGraph):
+        if backend in ("numpy", "jax"):
+            raise TypeError("CompressedShardedGraph is sharded-native")
+        from .sharded_backend import CompressedShardedEngine
+
+        return CompressedShardedEngine(obj)
     if isinstance(obj, ShardedGraph):
         if backend in ("numpy", "jax"):
             raise TypeError("ShardedGraph is sharded-native; pass backend='sharded'")

@@ -198,6 +198,14 @@ class TraversalEngine:
         both.  Backends with real weights override."""
         return self.degrees.astype(self.ops.float_dtype)
 
+    @property
+    def resident_nbytes(self) -> Optional[int]:
+        """Device (or host-array) bytes this engine keeps alive per
+        snapshot — graph substrate plus derived aux.  The compression
+        benchmarks compare raw vs compressed engines through this one
+        number; backends that don't track it return None."""
+        return None
+
     def frontier_from_ids(self, ids):  # pragma: no cover - interface
         raise NotImplementedError
 

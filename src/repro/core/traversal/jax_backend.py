@@ -72,7 +72,9 @@ import numpy as np
 
 from repro.kernels import ops as kops
 
-from ..flat_graph import FlatGraph, unpack
+from .. import compressed as cz
+from .. import flat_graph as _fg
+from ..flat_graph import CompressedPool, FlatGraph, unpack
 from .base import DENSE_THRESHOLD_DENOM, HOST_SYNCS, ArrayOps, TraversalEngine
 
 
@@ -722,6 +724,12 @@ class JaxEngine(TraversalEngine):
             self._wdeg = _segsum_rows(msg[None, :], self.g.offsets)[0]
         return self._wdeg
 
+    @property
+    def resident_nbytes(self) -> int:
+        """Device bytes held per snapshot: raw pool + ``EngineAux`` (the
+        BYTES bench's baseline numerator)."""
+        return cz.pytree_nbytes(self.g) + cz.pytree_nbytes(self.aux)
+
     # -- frontiers ----------------------------------------------------------
     def frontier_from_ids(self, ids) -> JaxVertexSubset:
         mask = jnp.zeros(self._n, dtype=bool).at[jnp.asarray(ids)].set(True)
@@ -913,18 +921,29 @@ class JaxEngine(TraversalEngine):
 # ---------------------------------------------------------------------------
 
 
-def _endpoints(g: FlatGraph, aux: Optional[EngineAux]):
-    if aux is not None:
+def _ensure_flat(g):
+    """Trace-time dispatch for chunked operands: the whole-graph loops
+    accept a ``CompressedPool`` wherever they accept a ``FlatGraph``; the
+    decode happens once inside the same trace (jit re-specializes per
+    input pytree structure, so the raw path compiles exactly as before)."""
+    return _fg.decompress(g) if isinstance(g, CompressedPool) else g
+
+
+def _endpoints(g: FlatGraph, aux):
+    if isinstance(aux, EngineAux):
         return aux.src_c, aux.dst_c, aux.evalid
     return _pool_endpoints(g)
 
 
 @jax.jit
-def dense_expand(g: FlatGraph, frontier: jax.Array, aux: Optional[EngineAux] = None) -> jax.Array:
+def dense_expand(g, frontier: jax.Array, aux: Optional[EngineAux] = None) -> jax.Array:
     """One dense edgeMap expansion: bool[n] frontier -> bool[n] reached.
 
     Every pool slot looks up whether its source is in the frontier; a
-    segment-or over destinations (one gather + one masked scatter)."""
+    segment-or over destinations (one gather + one masked scatter).
+    ``g`` may be a ``CompressedPool`` (chunked operand): the dst decode
+    fuses into this trace."""
+    g = _ensure_flat(g)
     src_c, dst_c, evalid = _endpoints(g, aux)
     n = g.offsets.shape[0] - 1
     msg = frontier[src_c] & evalid
@@ -932,8 +951,10 @@ def dense_expand(g: FlatGraph, frontier: jax.Array, aux: Optional[EngineAux] = N
 
 
 @jax.jit
-def bfs_levels(g: FlatGraph, source: jax.Array, aux: Optional[EngineAux] = None) -> jax.Array:
-    """Full BFS levels via lax.while_loop (fixed-shape iterations)."""
+def bfs_levels(g, source: jax.Array, aux: Optional[EngineAux] = None) -> jax.Array:
+    """Full BFS levels via lax.while_loop (fixed-shape iterations).
+    Accepts a ``CompressedPool`` (decode fused into the trace)."""
+    g = _ensure_flat(g)
     endpoints = _endpoints(g, aux)
     n = g.offsets.shape[0] - 1
     levels = jnp.full(n, jnp.int32(-1))
@@ -958,8 +979,10 @@ def bfs_levels(g: FlatGraph, source: jax.Array, aux: Optional[EngineAux] = None)
 
 
 @jax.jit
-def cc_labels(g: FlatGraph, aux: Optional[EngineAux] = None) -> jax.Array:
-    """Min-label propagation to fixpoint (jit while_loop)."""
+def cc_labels(g, aux: Optional[EngineAux] = None) -> jax.Array:
+    """Min-label propagation to fixpoint (jit while_loop).
+    Accepts a ``CompressedPool`` (decode fused into the trace)."""
+    g = _ensure_flat(g)
     src_c, dst_c, evalid = _endpoints(g, aux)
     n = g.offsets.shape[0] - 1
     labels0 = jnp.arange(n, dtype=jnp.int32)
@@ -976,3 +999,277 @@ def cc_labels(g: FlatGraph, aux: Optional[EngineAux] = None) -> jax.Array:
 
     labels, _ = jax.lax.while_loop(cond, body, (labels0, jnp.bool_(True)))
     return labels
+
+
+# ---------------------------------------------------------------------------
+# compressed engine: queries served from a chunk-compressed resident pool
+# ---------------------------------------------------------------------------
+
+
+class CompressedAux(NamedTuple):
+    """Per-snapshot derived state for ``CompressedEngine`` — the
+    compressed counterpart of ``EngineAux``.
+
+    The two O(cap) int lanes of ``EngineAux`` (``dst_sorted``,
+    ``src_by_dst``) are themselves chunk-compressed: ``dst_sorted`` is
+    ascending (ideal delta profile), ``src_by_dst`` is ascending within
+    each dst segment.  The O(n) arrays (degrees, segment bounds) and the
+    float value lane stay raw — they are small, respectively not
+    delta-friendly.  ``valid_by_dst`` collapses to one scalar: valid
+    slots are exactly the sorted prefix ``[:m_valid]``.
+    """
+
+    dst_sorted_c: cz.ChunkedStream  # destinations ascending (pad = n)
+    srcbd_c: cz.ChunkedStream  # sources permuted dst-major
+    dst_offsets: jax.Array  # int32[n+1] segment bounds into dst_sorted
+    degrees: jax.Array  # int32[n]
+    m_valid: jax.Array  # int32 scalar: count of valid pool slots
+    w_by_dst: Optional[jax.Array] = None  # float32[capC] values dst-major
+
+
+@jax.jit
+def engine_aux_compressed(cg: CompressedPool) -> CompressedAux:
+    """One jit: decompress -> ``engine_aux`` -> re-compress the big int
+    lanes.  The uncompressed aux is a transient of this trace; resident
+    state is the compressed pytree.  Lane width / escape capacity are
+    inherited from the pool stream (static via dtypes)."""
+    g = _fg.decompress(cg)
+    aux = engine_aux(g)
+    width, k = cg.dst.width, cg.dst.k
+    dst_sorted_c = cz.encode_stream(aux.dst_sorted, width=width, k=k)
+    srcbd_c = cz.encode_stream(aux.src_by_dst, width=width, k=k)
+    w = aux.w_by_dst
+    if w is not None and dst_sorted_c.length > w.shape[0]:
+        w = jnp.pad(w, (0, dst_sorted_c.length - w.shape[0]))
+    return CompressedAux(
+        dst_sorted_c=dst_sorted_c,
+        srcbd_c=srcbd_c,
+        dst_offsets=aux.dst_offsets,
+        degrees=aux.degrees,
+        m_valid=aux.evalid.sum().astype(jnp.int32),
+        w_by_dst=w,
+    )
+
+
+def _inflate(cg: CompressedPool, caux: CompressedAux):
+    """Trace-level inflate: (CompressedPool, CompressedAux) ->
+    (FlatGraph, EngineAux) inside the caller's jit.  Every compressed
+    query step is `inflate + the existing module-level step` in ONE
+    trace: decoded arrays are transients XLA fuses into their consumers,
+    the resident state stays compressed, and the raw steps' compiled
+    logic is reused verbatim rather than forked."""
+    g = _fg.decompress(cg)
+    cap = g.edge_capacity
+    src_c, dst_c, evalid = _pool_endpoints(g)
+    dst_sorted = cz.decode_stream(caux.dst_sorted_c, cap)
+    src_by_dst = cz.decode_stream(caux.srcbd_c, cap)
+    valid_by_dst = jnp.arange(cap) < caux.m_valid
+    w_by_dst = None if caux.w_by_dst is None else caux.w_by_dst[:cap]
+    aux = EngineAux(
+        src_c=src_c,
+        dst_c=dst_c,
+        evalid=evalid,
+        degrees=caux.degrees,
+        dst_sorted=dst_sorted,
+        src_by_dst=src_by_dst,
+        valid_by_dst=valid_by_dst,
+        dst_offsets=caux.dst_offsets,
+        w_by_dst=w_by_dst,
+    )
+    return g, aux
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("F", "C", "mode", "n", "ids_budget", "edge_budget", "ops"),
+)
+def _edge_map_step_compressed(cg, caux, U, state, *, F, C, mode, n, ids_budget, edge_budget, ops=JAX_OPS):
+    g, aux = _inflate(cg, caux)
+    return _edge_map_step(
+        g.offsets, g.keys, aux.src_c, aux.dst_c, aux.evalid, aux.degrees,
+        g.m, g.weights, U, state,
+        F=F, C=C, mode=mode, n=n,
+        ids_budget=ids_budget, edge_budget=edge_budget, ops=ops,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("F", "C", "mode", "n", "ids_budget", "edge_budget", "ops"),
+)
+def _edge_map_step_batch_compressed(cg, caux, U_b, state_b, *, F, C, mode, n, ids_budget, edge_budget, ops=JAX_OPS):
+    g, aux = _inflate(cg, caux)
+    return _edge_map_step_batch(
+        g.offsets, g.keys, aux.src_c, aux.dst_c, aux.evalid, aux.degrees,
+        g.m, g.weights, U_b, state_b,
+        F=F, C=C, mode=mode, n=n,
+        ids_budget=ids_budget, edge_budget=edge_budget, ops=ops,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("ids_budget", "edge_budget"))
+def bfs_batch_compressed(cg, caux, sources, *, ids_budget, edge_budget):
+    g, aux = _inflate(cg, caux)
+    return bfs_batch(g, aux, sources, ids_budget=ids_budget, edge_budget=edge_budget)
+
+
+@functools.partial(jax.jit, static_argnames=("float_dtype",))
+def bc_batch_compressed(cg, caux, sources, *, float_dtype=jnp.float32):
+    g, aux = _inflate(cg, caux)
+    return bc_batch(g, aux, sources, float_dtype=float_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ids_budget", "edge_budget", "float_dtype"))
+def sssp_batch_compressed(cg, caux, sources, *, ids_budget, edge_budget, float_dtype=jnp.float32):
+    g, aux = _inflate(cg, caux)
+    return sssp_batch(
+        g, aux, sources,
+        ids_budget=ids_budget, edge_budget=edge_budget, float_dtype=float_dtype,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n", "dtype"))
+def _edge_map_reduce_compressed(caux: CompressedAux, values_b, *, n, dtype):
+    """The (+, x) semiring reduce on fully compressed operands — the one
+    path where decode runs INSIDE the Pallas kernel itself: the chunked
+    ``dst_sorted`` lane feeds ``segment_sum_*_chunked`` undecoded and the
+    kernel's prologue decodes each tile next to the one-hot matmul.  The
+    src gather lane still decodes in-trace (a gather needs materialized
+    indices), fused by XLA with the message build."""
+    src_by_dst = cz.decode_stream(caux.srcbd_c)  # int32[capC]
+    valid = jnp.arange(src_by_dst.shape[0]) < caux.m_valid
+    msg = jnp.where(valid[None, :], values_b[:, src_by_dst], 0.0).T.astype(dtype)
+    s = caux.dst_sorted_c
+    if caux.w_by_dst is None:
+        return kops.segment_sum_chunked(s.anchors, s.deltas, s.ovf_pos, s.ovf_add, msg, n)
+    return kops.segment_sum_weighted_chunked(
+        s.anchors, s.deltas, s.ovf_pos, s.ovf_add, caux.w_by_dst, msg, n
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def _weighted_degrees_compressed(cg: CompressedPool, *, dtype=jnp.float32):
+    g = _fg.decompress(cg)
+    _, _, evalid = _pool_endpoints(g)
+    msg = jnp.where(evalid, g.weights.astype(dtype), 0.0)
+    return _segsum_rows(msg[None, :], g.offsets)[0]
+
+
+class CompressedEngine(JaxEngine):
+    """``JaxEngine`` served from a chunk-compressed resident snapshot.
+
+    Holds a ``CompressedPool`` + ``CompressedAux`` instead of the raw
+    pool + ``EngineAux`` — the HBM-resident state is the compressed
+    layout, and every query dispatches a jit whose prologue inflates (or,
+    for ``edge_map_reduce``, a Pallas kernel that decodes in-tile).  The
+    method surface, budgets, frontier helpers and batched-driver
+    quantization are inherited; only the dispatch targets differ.
+    """
+
+    def __init__(
+        self,
+        cg: CompressedPool,
+        aux: Optional[CompressedAux] = None,
+        float_dtype=None,
+    ):
+        self.cg = cg
+        self._n = cg.n
+        self._m = int(cg.m)
+        cap = cg.edge_capacity
+        self.ops = JAX_OPS if float_dtype is None else JaxOps(float_dtype)
+        self.caux = engine_aux_compressed(cg) if aux is None else aux
+        self._degrees = self.caux.degrees
+        self._wdeg = None
+        # Aux spill check: engine construction already syncs (int(cg.m)
+        # above), so reading three flag bytes here is free — and a
+        # spilled aux stream would silently mis-decode every query.
+        if bool(np.asarray(cg.dst.spill)) or bool(
+            np.asarray(self.caux.dst_sorted_c.spill)
+        ) or bool(np.asarray(self.caux.srcbd_c.spill)):
+            raise ValueError(
+                "compressed stream spilled its escape lane; rebuild the "
+                "snapshot with a wider delta lane or keep the raw engine"
+            )
+        self._auto_ids_budget = min(self._n, _round_up(cap // DENSE_THRESHOLD_DENOM + 1, 64))
+        self._auto_edge_budget = min(cap, _round_up(cap // DENSE_THRESHOLD_DENOM + 1, 64))
+        self._full_ids_budget = self._n
+        self._full_edge_budget = max(cap, 1)
+
+    @property
+    def weights(self) -> Optional[jax.Array]:
+        return self.cg.weights
+
+    @property
+    def weighted_degrees(self) -> jax.Array:
+        if self.cg.weights is None:
+            return self._degrees.astype(self.ops.float_dtype)
+        if self._wdeg is None:
+            self._wdeg = _weighted_degrees_compressed(
+                self.cg, dtype=self.ops.float_dtype
+            )
+        return self._wdeg
+
+    @property
+    def resident_nbytes(self) -> int:
+        """Device bytes held per snapshot: compressed pool + compressed
+        aux (the BYTES bench's numerator for this engine)."""
+        return cz.pytree_nbytes(self.cg) + cz.pytree_nbytes(self.caux)
+
+    def edge_map(self, U, F, C, state, direction_optimize=True, mode="auto"):
+        if mode == "auto" and not direction_optimize:
+            mode = "sparse"
+        ids_b, edge_b = self._budgets(mode)
+        state, out = _edge_map_step_compressed(
+            self.cg, self.caux, U.dense, state,
+            F=F, C=C, mode=mode, n=self._n,
+            ids_budget=ids_b, edge_budget=edge_b, ops=self.ops,
+        )
+        return JaxVertexSubset(out), state
+
+    def edge_map_batch(self, U_b, F, C, state_b, direction_optimize=True, mode="auto"):
+        if mode == "auto" and not direction_optimize:
+            mode = "sparse"
+        ids_b, edge_b = self._budgets(mode)
+        state_b, out = _edge_map_step_batch_compressed(
+            self.cg, self.caux, jnp.asarray(U_b, dtype=bool), state_b,
+            F=F, C=C, mode=mode, n=self._n,
+            ids_budget=ids_b, edge_budget=edge_b, ops=self.ops,
+        )
+        return out, state_b
+
+    def bfs_batch(self, sources):
+        padded, B = self._quantized_sources(sources)
+        parents, depths = bfs_batch_compressed(
+            self.cg, self.caux, padded,
+            ids_budget=self._auto_ids_budget, edge_budget=self._auto_edge_budget,
+        )
+        return parents[:B], depths[:B]
+
+    def bc_batch(self, sources):
+        padded, B = self._quantized_sources(sources)
+        return bc_batch_compressed(
+            self.cg, self.caux, padded, float_dtype=self.ops.float_dtype
+        )[:B]
+
+    def sssp_batch(self, sources):
+        padded, B = self._quantized_sources(sources)
+        return sssp_batch_compressed(
+            self.cg, self.caux, padded,
+            ids_budget=self._auto_ids_budget, edge_budget=self._auto_edge_budget,
+            float_dtype=self.ops.float_dtype,
+        )[:B]
+
+    def cc_labels(self) -> jax.Array:
+        return cc_labels(self.cg)
+
+    def edge_map_reduce(self, values: jax.Array) -> jax.Array:
+        out = _edge_map_reduce_compressed(
+            self.caux, values[None, :], n=self._n, dtype=self.ops.float_dtype
+        )
+        return out[:, 0].astype(values.dtype)
+
+    def edge_map_reduce_batch(self, values: jax.Array) -> jax.Array:
+        out = _edge_map_reduce_compressed(
+            self.caux, values, n=self._n, dtype=self.ops.float_dtype
+        )
+        return out.T.astype(values.dtype)

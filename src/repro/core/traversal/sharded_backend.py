@@ -47,16 +47,20 @@ pin the O(frontier + batch)-not-O(pool) wire contract on the jaxpr.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .. import compressed as cz
 from ..sharded_pool import (
+    CompressedShardedGraph,
+    CompressedShardedPool,
     ShardAux,
     ShardedGraph,
+    _decompress_pool_impl,
     _shard_map,
     graph_num_edges,
     pool_mesh,
@@ -666,6 +670,12 @@ class ShardedEngine(TraversalEngine):
             )
         return self._wdeg
 
+    @property
+    def resident_nbytes(self) -> int:
+        """Device bytes held per snapshot (pool + aux) — the raw side of
+        the BYTES bench comparison."""
+        return cz.pytree_nbytes(self.sg.pool) + cz.pytree_nbytes(self.aux)
+
     # -- frontiers ----------------------------------------------------------
     def frontier_from_ids(self, ids) -> JaxVertexSubset:
         mask = jnp.zeros(self._n, dtype=bool).at[jnp.asarray(ids)].set(True)
@@ -791,3 +801,353 @@ class ShardedEngine(TraversalEngine):
 
         HOST_SYNCS.bump()
         return np.asarray(x)
+
+
+# ---------------------------------------------------------------------------
+# compressed sharded backend: queries over CompressedShardedGraph
+# ---------------------------------------------------------------------------
+
+
+class CompressedShardAux(NamedTuple):
+    """Per-shard derived state for ``CompressedShardedEngine`` — the
+    sharded counterpart of ``jax_backend.CompressedAux``.
+
+    The two O(cap) int lanes of ``ShardAux`` that dominate its footprint
+    (``dst_sorted``, ``src_by_dst``) are chunk-compressed per shard row;
+    ``valid_by_dst`` collapses to one count per row (valid slots are the
+    sorted prefix).  The O(S·n) arrays stay raw.  Every leaf keeps the
+    (n_shards, ...) layout so ``P('shard', ...)`` specs still apply.
+    """
+
+    dst_sorted_c: cz.ChunkedStream  # (S, ...) destinations ascending
+    srcbd_c: cz.ChunkedStream  # (S, ...) sources permuted dst-major
+    dst_offsets: jax.Array  # int32[S, n+1]
+    degrees: jax.Array  # int32[S, n]
+    deg_total: jax.Array  # int32[n]
+    m_valid: jax.Array  # int32[S] valid slots per shard row
+    w_by_dst: Optional[jax.Array] = None  # float32[S, cap] dst-major
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def shard_aux_compressed(cp: CompressedShardedPool, n: int) -> CompressedShardAux:
+    """One jit: decompress -> ``shard_aux`` -> re-compress the big int
+    lanes (vmapped per shard row, so GSPMD keeps the encode shard-local).
+    The uncompressed aux is a transient of this trace."""
+    p = _decompress_pool_impl(cp)
+    aux = shard_aux(p, n)
+    width, k = cp.dst.width, cp.dst.k
+    enc = jax.vmap(lambda v: cz._encode_impl(v, width, k))
+    return CompressedShardAux(
+        dst_sorted_c=enc(aux.dst_sorted),
+        srcbd_c=enc(aux.src_by_dst),
+        dst_offsets=aux.dst_offsets,
+        degrees=aux.degrees,
+        deg_total=aux.deg_total,
+        m_valid=aux.evalid.sum(axis=1).astype(jnp.int32),
+        w_by_dst=aux.w_by_dst,
+    )
+
+
+def _inflate_sharded(cp: CompressedShardedPool, caux: CompressedShardAux, n: int):
+    """Trace-level inflate: (pool, aux) -> (ShardedPool, ShardAux) inside
+    the caller's jit — the sharded analogue of ``jax_backend._inflate``.
+    Forward lanes (clipped endpoints, validity) are recomputed from the
+    decoded keys (cheaper than storing them); the dst-major permutation
+    lanes decode from their streams (recomputing them would redo the
+    per-row sort the aux exists to amortize).  All per-row, so the decode
+    stays shard-local under GSPMD."""
+    p = _decompress_pool_impl(cp)
+    cap = p.data.shape[1]
+
+    def row(drow, nrow):
+        src = (drow >> 32).astype(jnp.int32)
+        dst = (drow & 0xFFFFFFFF).astype(jnp.int32)
+        valid = jnp.arange(cap) < nrow
+        evalid = valid & (dst >= 0) & (dst < n)
+        return (
+            jnp.clip(src, 0, max(n - 1, 0)),
+            jnp.clip(dst, 0, max(n - 1, 0)),
+            evalid,
+        )
+
+    src_c, dst_c, evalid = jax.vmap(row)(p.data, p.n)
+    aux = ShardAux(
+        offsets=cp.offsets,
+        src_c=src_c,
+        dst_c=dst_c,
+        evalid=evalid,
+        degrees=caux.degrees,
+        deg_total=caux.deg_total,
+        dst_sorted=cz.decode_stream(caux.dst_sorted_c),
+        src_by_dst=cz.decode_stream(caux.srcbd_c),
+        valid_by_dst=jnp.arange(cap)[None, :] < caux.m_valid[:, None],
+        dst_offsets=caux.dst_offsets,
+        w_by_dst=caux.w_by_dst,
+    )
+    return p, aux
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "F", "C", "mode", "n", "ids_budget", "edge_budget", "ops", "mesh", "weighted",
+    ),
+)
+def _sharded_edge_map_step_compressed(
+    cp, caux, m, U, state, *,
+    F, C, mode, n, ids_budget, edge_budget, ops, mesh, weighted,
+):
+    p, aux = _inflate_sharded(cp, caux, n)
+    return _sharded_edge_map_step(
+        aux.offsets, p.data, aux.src_c, aux.dst_c, aux.evalid, aux.degrees,
+        m, p.vals if weighted else None, U, state,
+        F=F, C=C, mode=mode, n=n,
+        ids_budget=ids_budget, edge_budget=edge_budget,
+        ops=ops, mesh=mesh, weighted=weighted,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "ids_budget", "edge_budget", "mesh")
+)
+def bfs_batch_sharded_compressed(
+    cp, caux, m, sources, *, n, ids_budget, edge_budget, mesh
+):
+    p, aux = _inflate_sharded(cp, caux, n)
+    return bfs_batch_sharded(
+        aux.offsets, p.data, aux.src_c, aux.dst_c, aux.evalid, aux.degrees,
+        aux.src_by_dst, aux.valid_by_dst, aux.dst_offsets, m, sources,
+        n=n, ids_budget=ids_budget, edge_budget=edge_budget, mesh=mesh,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "ids_budget", "edge_budget", "mesh", "weighted", "float_dtype"),
+)
+def sssp_batch_sharded_compressed(
+    cp, caux, m, sources, *,
+    n, ids_budget, edge_budget, mesh, weighted, float_dtype=jnp.float32,
+):
+    p, aux = _inflate_sharded(cp, caux, n)
+    return sssp_batch_sharded(
+        aux.offsets, p.data, aux.src_c, aux.dst_c, aux.evalid, aux.degrees,
+        aux.src_by_dst, aux.valid_by_dst, aux.dst_offsets,
+        p.vals if weighted else None,
+        aux.w_by_dst if weighted else None,
+        m, sources,
+        n=n, ids_budget=ids_budget, edge_budget=edge_budget, mesh=mesh,
+        weighted=weighted, float_dtype=float_dtype,
+    )
+
+
+def _reduce_partial_compressed(
+    anch, dl, pos, add, mv, bounds, wbd, values_b, n_pad, dtype
+):
+    """Per-device partial of the (+, x) reduce with the src gather lane
+    decoded INSIDE the shard-local function — the sharded half of the
+    fused-decode contract (the sharded reduce is a segmented row-sum, not
+    the Pallas kernel, so 'inside the kernel' here means inside the
+    shard_map body where the operand never exists uncompressed outside
+    this trace)."""
+    no_spill = jnp.zeros((), bool)
+
+    def one(anch_r, dl_r, pos_r, add_r, mv_r, brow, wrow):
+        srow = cz.decode_rows(
+            cz.ChunkedStream(anch_r, dl_r, pos_r, add_r, no_spill)
+        ).reshape(-1)
+        vrow = jnp.arange(srow.shape[0]) < mv_r
+        msg = jnp.where(vrow[None, :], values_b[:, srow], 0.0).astype(dtype)
+        if wrow is not None:
+            msg = msg * wrow[None, :].astype(dtype)
+        return _segsum_rows(msg, brow)
+
+    if wbd is None:
+        parts = jax.vmap(lambda a, d, p, v, c, b: one(a, d, p, v, c, b, None))(
+            anch, dl, pos, add, mv, bounds
+        )
+    else:
+        parts = jax.vmap(one)(anch, dl, pos, add, mv, bounds, wbd)
+    partial = parts.sum(axis=0)  # (B, n)
+    padded = jnp.pad(partial, ((0, 0), (0, n_pad - partial.shape[1])))
+    return jax.lax.psum_scatter(padded, AXIS, scatter_dimension=1, tiled=True)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "mesh", "weighted", "dtype"))
+def _sharded_reduce_batch_compressed(
+    srcbd_c,  # cz.ChunkedStream, (S, ...) leaves
+    m_valid,  # int32[S]
+    dst_offsets,  # int32[S, n+1]
+    w_by_dst,  # float32[S, cap] or None
+    values_b,  # (B, n) replicated value rows
+    *,
+    n: int,
+    mesh: Mesh,
+    weighted: bool,
+    dtype,
+):
+    n_pad = _round_up(max(n, 1), mesh.shape[AXIS])
+    stream = (srcbd_c.anchors, srcbd_c.deltas, srcbd_c.ovf_pos, srcbd_c.ovf_add)
+    if weighted:
+        out = _shard_map(
+            lambda a, d, p, v, c, b, w, x: _reduce_partial_compressed(
+                a, d, p, v, c, b, w, x, n_pad, dtype
+            ),
+            mesh=mesh,
+            in_specs=(_SPEC2,) * 4 + (P(AXIS), _SPEC2, _SPEC2, P()),
+            out_specs=P(None, AXIS),
+            check_rep=False,
+        )(*stream, m_valid, dst_offsets, w_by_dst, values_b)
+    else:
+        out = _shard_map(
+            lambda a, d, p, v, c, b, x: _reduce_partial_compressed(
+                a, d, p, v, c, b, None, x, n_pad, dtype
+            ),
+            mesh=mesh,
+            in_specs=(_SPEC2,) * 4 + (P(AXIS), _SPEC2, P()),
+            out_specs=P(None, AXIS),
+            check_rep=False,
+        )(*stream, m_valid, dst_offsets, values_b)
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "dtype"))
+def _sharded_weighted_degrees_compressed(cp, *, n, dtype):
+    p = _decompress_pool_impl(cp)
+    cap = p.data.shape[1]
+
+    def row(drow, nrow):
+        dst = (drow & 0xFFFFFFFF).astype(jnp.int32)
+        return (jnp.arange(cap) < nrow) & (dst >= 0) & (dst < n)
+
+    evalid = jax.vmap(row)(p.data, p.n)
+    return _sharded_weighted_degrees(cp.offsets, evalid, p.vals, dtype)
+
+
+class CompressedShardedEngine(ShardedEngine):
+    """``ShardedEngine`` served from a chunk-compressed resident pool.
+
+    Holds a ``CompressedShardedPool`` + ``CompressedShardAux``; every
+    query step inflates per shard row inside its own jit (decoded rows
+    are transients of the trace) and then runs the exact raw shard_map
+    step — same collective schedule, same wire contract, compressed HBM
+    residency.  Frontier helpers / budgets / vertexMap are inherited;
+    only the data-touching dispatch targets differ.
+    """
+
+    def __init__(
+        self,
+        csg: CompressedShardedGraph,
+        aux: Optional[CompressedShardAux] = None,
+        mesh: Optional[Mesh] = None,
+        float_dtype=None,
+    ):
+        self.csg = csg
+        self._n = csg.n
+        self.mesh = pool_mesh(csg.n_shards) if mesh is None else mesh
+        if csg.n_shards % self.mesh.shape[AXIS] != 0:
+            raise ValueError(
+                f"n_shards={csg.n_shards} must be a multiple of the mesh "
+                f"size {self.mesh.shape[AXIS]}"
+            )
+        self._m = graph_num_edges(csg)  # one device read per engine build
+        self.ops = ShardedOps(jnp.float32 if float_dtype is None else float_dtype)
+        self.caux = (
+            shard_aux_compressed(csg.pool, csg.n) if aux is None else aux
+        )
+        self._wdeg = None
+        # Spill check: construction already syncs (graph_num_edges), so
+        # reading the flag rows here is free — a spilled stream would
+        # silently mis-decode every query.
+        if bool(np.asarray(csg.pool.dst.spill).any()) or bool(
+            np.asarray(self.caux.dst_sorted_c.spill).any()
+        ) or bool(np.asarray(self.caux.srcbd_c.spill).any()):
+            raise ValueError(
+                "compressed sharded stream spilled its escape lane; "
+                "rebuild with a wider delta lane or keep the raw engine"
+            )
+
+        S = csg.n_shards
+        cap = csg.pool.cap_per
+        total_cap = S * cap
+        self._auto_ids_budget = min(
+            self._n, _round_up(total_cap // DENSE_THRESHOLD_DENOM + 1, 64)
+        )
+        self._auto_edge_budget = min(
+            cap, _round_up(total_cap // DENSE_THRESHOLD_DENOM + 1, 64)
+        )
+        self._full_ids_budget = self._n
+        self._full_edge_budget = max(cap, 1)
+
+    @property
+    def degrees(self) -> jax.Array:
+        return self.caux.deg_total
+
+    @property
+    def weights(self) -> Optional[jax.Array]:
+        return self.csg.pool.vals
+
+    @property
+    def weighted_degrees(self) -> jax.Array:
+        if self.csg.pool.vals is None:
+            return self.caux.deg_total.astype(self.ops.float_dtype)
+        if self._wdeg is None:
+            self._wdeg = _sharded_weighted_degrees_compressed(
+                self.csg.pool, n=self._n, dtype=self.ops.float_dtype
+            )
+        return self._wdeg
+
+    @property
+    def resident_nbytes(self) -> int:
+        return cz.pytree_nbytes(self.csg.pool) + cz.pytree_nbytes(self.caux)
+
+    def edge_map(self, U, F, C, state, direction_optimize=True, mode="auto"):
+        if mode == "auto" and not direction_optimize:
+            mode = "sparse"
+        ids_b, edge_b = self._budgets(mode)
+        state, out = _sharded_edge_map_step_compressed(
+            self.csg.pool, self.caux, jnp.int32(self._m), U.dense, state,
+            F=F, C=C, mode=mode, n=self._n,
+            ids_budget=ids_b, edge_budget=edge_b,
+            ops=self.ops, mesh=self.mesh,
+            weighted=self.csg.pool.vals is not None,
+        )
+        return JaxVertexSubset(out), state
+
+    def edge_map_reduce_batch(self, values: jax.Array) -> jax.Array:
+        out = _sharded_reduce_batch_compressed(
+            self.caux.srcbd_c,
+            self.caux.m_valid,
+            self.caux.dst_offsets,
+            self.caux.w_by_dst,
+            jnp.asarray(values),
+            n=self._n,
+            mesh=self.mesh,
+            weighted=self.caux.w_by_dst is not None,
+            dtype=self.ops.float_dtype,
+        )
+        return out.astype(jnp.asarray(values).dtype)
+
+    def bfs_batch(self, sources) -> Tuple[jax.Array, jax.Array]:
+        padded, B = JaxEngine._quantized_sources(sources)
+        parents, depths = bfs_batch_sharded_compressed(
+            self.csg.pool, self.caux, jnp.int32(self._m), padded,
+            n=self._n,
+            ids_budget=self._auto_ids_budget,
+            edge_budget=self._auto_edge_budget,
+            mesh=self.mesh,
+        )
+        return parents[:B], depths[:B]
+
+    def sssp_batch(self, sources) -> jax.Array:
+        padded, B = JaxEngine._quantized_sources(sources)
+        dist = sssp_batch_sharded_compressed(
+            self.csg.pool, self.caux, jnp.int32(self._m), padded,
+            n=self._n,
+            ids_budget=self._auto_ids_budget,
+            edge_budget=self._auto_edge_budget,
+            mesh=self.mesh,
+            weighted=self.csg.pool.vals is not None,
+            float_dtype=self.ops.float_dtype,
+        )
+        return dist[:B]

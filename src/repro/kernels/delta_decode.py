@@ -45,6 +45,86 @@ def _decode_kernel(anchors_ref, deltas_ref, out_ref, carry_ref):
     carry_ref[...] = carry_ref[...] + c[:, -1:]
 
 
+def _row_block_for(deltas_dtype) -> int:
+    """Dtype-aware default row block: narrow delta lanes need taller tiles
+    to meet the TPU minimum sublane counts (int8 -> (32, 128), int16 ->
+    (16, 128) per the Mosaic tiling table); interpret mode accepts any."""
+    return {1: 32, 2: 16}.get(jnp.dtype(deltas_dtype).itemsize, DEFAULT_ROW_BLOCK)
+
+
+def _decode_chunked_kernel(anchors_ref, deltas_ref, pos_ref, add_ref, out_ref, carry_ref):
+    """One (R, C) tile of the escape-lane decode (core/compressed layout).
+
+    Same scan-carry cumsum as ``_decode_kernel`` over the narrow delta
+    lane, plus the per-chunk overflow corrections: escape ``k`` of a row
+    adds ``ovf_add[r, k]`` to every column >= ``ovf_pos[r, k]`` (a step
+    function of the GLOBAL column), so the correction is applied per tile
+    from global column indices and the carry tracks only the raw lane
+    cumsum — corrections never enter the carry, keeping it branch-free.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        carry_ref[...] = anchors_ref[...]  # (R, 1) absolute anchors
+
+    d = deltas_ref[...].astype(jnp.int32)  # (R, C) narrow lane
+    c = jnp.cumsum(d, axis=1)
+    out = carry_ref[...] + c
+    R, C = d.shape
+    cols = j * C + jax.lax.broadcasted_iota(jnp.int32, (R, C), 1)
+    for k in range(pos_ref.shape[1]):  # static K, unrolled
+        out = out + jnp.where(cols >= pos_ref[:, k : k + 1], add_ref[:, k : k + 1], 0)
+    out_ref[...] = out
+    carry_ref[...] = carry_ref[...] + c[:, -1:]
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "col_block", "interpret"))
+def delta_decode_chunked(
+    anchors: jax.Array,  # int32 (n_chunks,)
+    deltas: jax.Array,  # int8|int16 (n_chunks, chunk_len); col 0 MUST be 0
+    ovf_pos: jax.Array,  # int32 (n_chunks, K) escape columns, pad chunk_len
+    ovf_add: jax.Array,  # int32 (n_chunks, K) escaped delta values
+    row_block: int | None = None,
+    col_block: int = DEFAULT_COL_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode fixed-width chunks with an escape lane (ChunkedStream rows):
+
+      out[i, j] = anchors[i] + sum(lane deltas[i, :j+1])
+                  + sum_k ovf_add[i, k] * 1[j >= ovf_pos[i, k]]
+
+    Shapes must be multiples of the block sizes (kernels/ops.py pads).
+    The escape tables ride whole (K columns) in every grid step — K is
+    tiny and static, so they live comfortably in VMEM next to the tile.
+    """
+    if row_block is None:
+        row_block = _row_block_for(deltas.dtype)
+    n_chunks, max_len = deltas.shape
+    K = ovf_pos.shape[1]
+    assert n_chunks % row_block == 0 and max_len % col_block == 0
+    grid = (n_chunks // row_block, max_len // col_block)
+    return pl.pallas_call(
+        _decode_chunked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((row_block, col_block), lambda i, j: (i, j)),
+            pl.BlockSpec((row_block, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((row_block, K), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block, col_block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, max_len), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((row_block, 1), jnp.int32)],
+        interpret=interpret,
+    )(
+        anchors.reshape(-1, 1).astype(jnp.int32),
+        deltas,
+        ovf_pos.astype(jnp.int32),
+        ovf_add.astype(jnp.int32),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("row_block", "col_block", "interpret"))
 def delta_decode_padded(
     anchors: jax.Array,  # int32 (n_chunks,)

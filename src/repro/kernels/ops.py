@@ -39,10 +39,16 @@ def _pad_to(x: np.ndarray | jax.Array, mult: int, axis: int, value=0):
 def decode_chunks(anchors: jax.Array, deltas: jax.Array) -> jax.Array:
     """Decode padded chunk deltas -> absolute values.
 
-    anchors: (n_chunks,) int32; deltas: (n_chunks, max_len) int32 with
-    column 0 equal to 0 (the anchor position).  Pads to kernel tiles.
+    anchors: (n_chunks,) int32; deltas: (n_chunks, max_len) int32.  The
+    kernel's chunk layout defines column 0 as the anchor position, i.e.
+    ``deltas[:, 0] == 0`` so that ``out[:, 0] == anchors``.  Rather than
+    silently assuming it, this boundary NORMALIZES column 0 to zero:
+    whatever a caller left in that slot (e.g. a scatter artifact from a
+    ragged->padded conversion) is dropped, and the decode of well-formed
+    inputs is unchanged.  Pads both axes to kernel tiles.
     """
     n, L = deltas.shape
+    deltas = deltas.at[:, 0].set(0)  # enforce the anchor-column invariant
     a = _pad_to(anchors, delta_decode.DEFAULT_ROW_BLOCK, 0)
     d = _pad_to(
         _pad_to(deltas, delta_decode.DEFAULT_ROW_BLOCK, 0),
@@ -51,6 +57,30 @@ def decode_chunks(anchors: jax.Array, deltas: jax.Array) -> jax.Array:
     )
     out = delta_decode.delta_decode_padded(a, d, interpret=_interpret())
     return out[:n, :L]
+
+
+def decode_chunked_stream(
+    anchors: jax.Array,
+    deltas: jax.Array,
+    ovf_pos: jax.Array,
+    ovf_add: jax.Array,
+) -> jax.Array:
+    """Decode escape-lane chunks (core/compressed.ChunkedStream arrays)
+    via the Pallas kernel; pads chunk rows to the dtype-aware row block.
+
+    Kernels take the raw arrays, not the ChunkedStream NamedTuple, so
+    this package never imports from ``repro.core`` (no cycle); engine
+    callers unpack the stream.  Row padding uses anchor 0 / empty escape
+    slots (pos = chunk_len), which decode to benign zeros and are sliced
+    off."""
+    n, L = deltas.shape
+    rb = delta_decode._row_block_for(deltas.dtype)
+    a = _pad_to(anchors, rb, 0)
+    d = _pad_to(deltas, rb, 0)
+    p = _pad_to(ovf_pos, rb, 0, value=L)
+    v = _pad_to(ovf_add, rb, 0)
+    out = delta_decode.delta_decode_chunked(a, d, p, v, interpret=_interpret())
+    return out[:n]
 
 
 def decode_pool(packed, total_len: int | None = None) -> np.ndarray:
@@ -115,6 +145,68 @@ def segment_sum_weighted(
     n_with_pad = n_pad + segment_reduce.DST_BLOCK
     out = segment_reduce.segment_sum_weighted_sorted(
         d, wp, m, n_with_pad, interpret=_interpret()
+    )
+    return out[:n_out]
+
+
+def _pad_chunked_dst(anchors, deltas, ovf_pos, ovf_add, msg, w, n_out):
+    """Shared padding for the chunked segment sums.
+
+    Pads chunk rows to whole edge blocks; padding chunks carry anchor
+    ``n_pad`` with zero deltas and empty escape slots, so every padded
+    slot decodes to the same OOB dst that the raw path pads with — the
+    extra DST_BLOCK swallows them identically."""
+    R, C = deltas.shape
+    rpb = segment_reduce.EDGE_BLOCK // C
+    n_pad = n_out + (-n_out) % segment_reduce.DST_BLOCK
+    a = _pad_to(anchors, rpb, 0, value=n_pad)
+    d = _pad_to(deltas, rpb, 0)
+    p = _pad_to(ovf_pos, rpb, 0, value=C)
+    v = _pad_to(ovf_add, rpb, 0)
+    m = _pad_to(msg, segment_reduce.EDGE_BLOCK, 0)
+    wp = None if w is None else _pad_to(w, segment_reduce.EDGE_BLOCK, 0)
+    assert m.shape[0] == a.shape[0] * C, "msg rows must cover the padded stream"
+    n_with_pad = n_pad + segment_reduce.DST_BLOCK
+    return a, d, p, v, m, wp, n_with_pad
+
+
+def segment_sum_chunked(
+    anchors: jax.Array,
+    deltas: jax.Array,
+    ovf_pos: jax.Array,
+    ovf_add: jax.Array,
+    msg: jax.Array,
+    n_out: int,
+) -> jax.Array:
+    """``segment_sum`` with a chunk-compressed dst operand; the delta
+    decode fuses into the reduce kernel.  msg row ``r*CHUNK + c`` pairs
+    with chunk ``r`` column ``c``; msg rows past the valid prefix must be
+    zero (the compressed aux masks them)."""
+    a, d, p, v, m, _, n_with_pad = _pad_chunked_dst(
+        anchors, deltas, ovf_pos, ovf_add, msg, None, n_out
+    )
+    out = segment_reduce.segment_sum_sorted_chunked(
+        a, d, p, v, m, n_with_pad, interpret=_interpret()
+    )
+    return out[:n_out]
+
+
+def segment_sum_weighted_chunked(
+    anchors: jax.Array,
+    deltas: jax.Array,
+    ovf_pos: jax.Array,
+    ovf_add: jax.Array,
+    w: jax.Array,
+    msg: jax.Array,
+    n_out: int,
+) -> jax.Array:
+    """Weighted chunked segment-sum; same contract as ``segment_sum_chunked``
+    (weight pads are 0)."""
+    a, d, p, v, m, wp, n_with_pad = _pad_chunked_dst(
+        anchors, deltas, ovf_pos, ovf_add, msg, w, n_out
+    )
+    out = segment_reduce.segment_sum_weighted_chunked(
+        a, d, p, v, wp, m, n_with_pad, interpret=_interpret()
     )
     return out[:n_out]
 

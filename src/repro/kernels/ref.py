@@ -17,6 +17,24 @@ def delta_decode_ref(anchors: jax.Array, deltas: jax.Array) -> jax.Array:
     )
 
 
+def delta_decode_chunked_ref(
+    anchors: jax.Array, deltas: jax.Array, ovf_pos: jax.Array, ovf_add: jax.Array
+) -> jax.Array:
+    """Escape-lane decode oracle (core/compressed ChunkedStream rows):
+    anchor + lane cumsum, then each escape k adds ovf_add[i, k] to every
+    column >= ovf_pos[i, k] (unused slots carry pos == chunk_len, which
+    never triggers)."""
+    base = anchors[:, None].astype(jnp.int32) + jnp.cumsum(
+        deltas.astype(jnp.int32), axis=1
+    )
+    cols = jax.lax.broadcasted_iota(jnp.int32, deltas.shape, 1)
+    corr = jnp.sum(
+        jnp.where(cols[:, :, None] >= ovf_pos[:, None, :], ovf_add[:, None, :], 0),
+        axis=-1,
+    )
+    return base + corr
+
+
 def segment_sum_sorted_ref(dst: jax.Array, msg: jax.Array, n_out: int) -> jax.Array:
     """Scatter-add oracle (jax.ops.segment_sum)."""
     return jax.ops.segment_sum(msg, dst.astype(jnp.int32), num_segments=n_out)

@@ -139,6 +139,179 @@ def segment_sum_weighted_sorted(
 
 
 # ---------------------------------------------------------------------------
+# chunk-compressed operands: delta decode fused as an in-kernel prologue
+# ---------------------------------------------------------------------------
+#
+# The compressed pool (core/compressed.py) stores the dst-sorted edge ids
+# as (anchor, narrow fixed-width deltas, escape lane) chunks of CHUNK=128
+# slots.  CHUNK divides EDGE_BLOCK, so one edge block is exactly
+# EDGE_BLOCK // CHUNK whole chunk rows and the decode never needs a
+# cross-block carry here: each chunk row decodes self-contained
+# (anchor + row cumsum + escape-step corrections), is flattened to the
+# (1, EDGE_BLOCK) dst lane, and feeds the identical one-hot MXU matmul.
+# Compressed dst ids therefore never round-trip through HBM decoded —
+# the decode lives in the same kernel as the reduce.
+#
+# Note: the in-kernel (rows, CHUNK) -> (1, EDGE_BLOCK) reshape is a relayout
+# on real TPU hardware; this repo's acceptance target is CPU interpret
+# mode where it is free.  On TPU the reshape is sublane->lane shuffling of
+# a VMEM-resident tile — cheap relative to the HBM bytes saved, but worth
+# re-measuring before flipping the compressed path on for TPU runs.
+
+
+def _decode_dst_tile(anch, deltas, pos, add):
+    """Decode (rows, CHUNK) chunk tiles -> (1, rows * CHUNK) int32 dst lane.
+
+    Escape positions are per-chunk columns, so the correction mask uses
+    the LOCAL column iota (every chunk row sits whole inside this tile).
+    """
+    d = deltas.astype(jnp.int32)
+    rows, C = d.shape
+    dec = anch + jnp.cumsum(d, axis=1)  # anch is (rows, 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (rows, C), 1)
+    for k in range(pos.shape[1]):  # static K, unrolled
+        dec = dec + jnp.where(cols >= pos[:, k : k + 1], add[:, k : k + 1], 0)
+    return dec.reshape(1, rows * C)
+
+
+def _segsum_chunked_kernel(anch_ref, del_ref, pos_ref, add_ref, msg_ref, out_ref):
+    i = pl.program_id(0)  # dst block
+    j = pl.program_id(1)  # edge block
+
+    @pl.when(j == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dst = _decode_dst_tile(anch_ref[...], del_ref[...], pos_ref[...], add_ref[...])
+    d0 = i * out_ref.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (out_ref.shape[0], dst.shape[1]), 0)
+    onehot = (dst - d0 == rows).astype(msg_ref.dtype)
+    out_ref[...] += jax.lax.dot(
+        onehot, msg_ref[...], precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _segsum_chunked_weighted_kernel(
+    anch_ref, del_ref, pos_ref, add_ref, w_ref, msg_ref, out_ref
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dst = _decode_dst_tile(anch_ref[...], del_ref[...], pos_ref[...], add_ref[...])
+    w = w_ref[...]
+    d0 = i * out_ref.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (out_ref.shape[0], dst.shape[1]), 0)
+    onehot_w = jnp.where(dst - d0 == rows, w, 0.0).astype(msg_ref.dtype)
+    out_ref[...] += jax.lax.dot(
+        onehot_w, msg_ref[...], precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _chunked_specs(chunk_len: int, K: int, edge_block: int, D: int):
+    rpb = edge_block // chunk_len  # whole chunk rows per edge block
+    return rpb, [
+        pl.BlockSpec((rpb, 1), lambda i, j: (j, 0)),  # anchors
+        pl.BlockSpec((rpb, chunk_len), lambda i, j: (j, 0)),  # deltas
+        pl.BlockSpec((rpb, K), lambda i, j: (j, 0)),  # ovf_pos
+        pl.BlockSpec((rpb, K), lambda i, j: (j, 0)),  # ovf_add
+    ]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_out", "edge_block", "dst_block", "interpret")
+)
+def segment_sum_sorted_chunked(
+    anchors: jax.Array,  # int32 (R,) chunk anchors of the sorted dst lane
+    deltas: jax.Array,  # int8|int16 (R, CHUNK); col 0 == 0
+    ovf_pos: jax.Array,  # int32 (R, K) escape columns (CHUNK = unused)
+    ovf_add: jax.Array,  # int32 (R, K) escaped deltas
+    msg: jax.Array,  # (R * CHUNK, D) messages, edge order
+    n_out: int,
+    edge_block: int = EDGE_BLOCK,
+    dst_block: int = DST_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """``segment_sum_sorted`` with the dst operand chunk-compressed; the
+    delta decode runs as a prologue inside the same kernel.  R * CHUNK
+    must be a multiple of edge_block and CHUNK must divide edge_block
+    (kernels/ops.py pads; padding chunks decode to OOB dst)."""
+    R, chunk_len = deltas.shape
+    E, D = msg.shape
+    K = ovf_pos.shape[1]
+    assert E == R * chunk_len
+    assert edge_block % chunk_len == 0 and E % edge_block == 0
+    assert n_out % dst_block == 0
+    grid = (n_out // dst_block, E // edge_block)
+    rpb, chunk_specs = _chunked_specs(chunk_len, K, edge_block, D)
+    return pl.pallas_call(
+        _segsum_chunked_kernel,
+        grid=grid,
+        in_specs=chunk_specs + [pl.BlockSpec((edge_block, D), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((dst_block, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_out, D), jnp.float32),
+        interpret=interpret,
+    )(
+        anchors.reshape(-1, 1).astype(jnp.int32),
+        deltas,
+        ovf_pos.astype(jnp.int32),
+        ovf_add.astype(jnp.int32),
+        msg,
+    ).astype(msg.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_out", "edge_block", "dst_block", "interpret")
+)
+def segment_sum_weighted_chunked(
+    anchors: jax.Array,
+    deltas: jax.Array,
+    ovf_pos: jax.Array,
+    ovf_add: jax.Array,
+    w: jax.Array,  # float (R * CHUNK,) per-edge weights; pad 0
+    msg: jax.Array,
+    n_out: int,
+    edge_block: int = EDGE_BLOCK,
+    dst_block: int = DST_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Weighted variant of ``segment_sum_sorted_chunked`` (same fused
+    in-kernel decode; weights fold into the one-hot as in the raw path)."""
+    R, chunk_len = deltas.shape
+    E, D = msg.shape
+    K = ovf_pos.shape[1]
+    assert E == R * chunk_len
+    assert edge_block % chunk_len == 0 and E % edge_block == 0
+    assert n_out % dst_block == 0
+    grid = (n_out // dst_block, E // edge_block)
+    rpb, chunk_specs = _chunked_specs(chunk_len, K, edge_block, D)
+    return pl.pallas_call(
+        _segsum_chunked_weighted_kernel,
+        grid=grid,
+        in_specs=chunk_specs
+        + [
+            pl.BlockSpec((1, edge_block), lambda i, j: (0, j)),
+            pl.BlockSpec((edge_block, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((dst_block, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_out, D), jnp.float32),
+        interpret=interpret,
+    )(
+        anchors.reshape(-1, 1).astype(jnp.int32),
+        deltas,
+        ovf_pos.astype(jnp.int32),
+        ovf_add.astype(jnp.int32),
+        w.reshape(1, -1).astype(msg.dtype),
+        msg,
+    ).astype(msg.dtype)
+
+
+# ---------------------------------------------------------------------------
 # fixed-fanout aggregation (sampled GNN regime: GraphSAGE minibatch)
 # ---------------------------------------------------------------------------
 

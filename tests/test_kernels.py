@@ -40,6 +40,71 @@ def test_decode_pool_roundtrip():
     np.testing.assert_array_equal(out, data)
 
 
+def test_decode_chunks_normalizes_anchor_column():
+    """decode_chunks defines column 0 as the anchor position and
+    NORMALIZES whatever the caller left there to zero (the documented
+    ``deltas[:, 0] == 0`` invariant): garbage in that slot must not leak
+    into the decode."""
+    rng = np.random.default_rng(7)
+    deltas = rng.integers(0, 50, size=(6, 96)).astype(np.int32)
+    deltas[:, 0] = rng.integers(1, 1000, 6)  # scatter artifacts in col 0
+    anchors = rng.integers(0, 1 << 20, size=6).astype(np.int32)
+    got = ops.decode_chunks(jnp.asarray(anchors), jnp.asarray(deltas))
+    clean = deltas.copy()
+    clean[:, 0] = 0
+    want = ref.delta_decode_ref(jnp.asarray(anchors), jnp.asarray(clean))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got)[:, 0], anchors)
+
+
+def _random_chunked_stream(rng, R, L, k=8, n_esc=3):
+    """Raw escape-lane chunk arrays (the ChunkedStream layout) with
+    ``n_esc`` escapes per row at ascending columns, int16 lanes."""
+    deltas = rng.integers(0, 100, size=(R, L)).astype(np.int16)
+    deltas[:, 0] = 0
+    ovf_pos = np.full((R, k), L, np.int32)
+    ovf_add = np.zeros((R, k), np.int32)
+    for r in range(R):
+        cols = np.sort(rng.choice(np.arange(1, L), n_esc, replace=False))
+        ovf_pos[r, :n_esc] = cols
+        ovf_add[r, :n_esc] = rng.integers(40_000, 1 << 20, n_esc)
+        deltas[r, cols] = 0  # escaped slots store 0 in the lane
+    anchors = rng.integers(0, 1 << 10, size=R).astype(np.int32)
+    return anchors, deltas, ovf_pos, ovf_add
+
+
+@pytest.mark.parametrize("R,L", [(4, 128), (7, 128), (1, 128), (13, 128)])
+def test_decode_chunked_stream_vs_ref(R, L):
+    """Escape-lane kernel decode == oracle, incl. row counts that are
+    NOT a multiple of the kernel's row block."""
+    rng = np.random.default_rng(8)
+    a, d, p, v = _random_chunked_stream(rng, R, L)
+    got = ops.decode_chunked_stream(
+        jnp.asarray(a), jnp.asarray(d), jnp.asarray(p), jnp.asarray(v)
+    )
+    want = ref.delta_decode_chunked_ref(
+        jnp.asarray(a), jnp.asarray(d), jnp.asarray(p), jnp.asarray(v)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_decode_chunked_stream_matches_core_codec():
+    """The kernel decode agrees with core/compressed's pure-jnp decode on
+    a stream the real encoder built (the cross-layer contract)."""
+    from repro.core import compressed as cz
+
+    rng = np.random.default_rng(9)
+    deltas = rng.integers(0, 200, 5 * cz.CHUNK)
+    deltas[rng.choice(deltas.size, 10, replace=False)] = 50_000
+    vals = np.cumsum(deltas).astype(np.int32)
+    c = cz.encode_stream(jnp.asarray(vals), width=2)
+    assert not bool(c.spill)
+    got = ops.decode_chunked_stream(c.anchors, c.deltas, c.ovf_pos, c.ovf_add)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(cz.decode_rows(c))
+    )
+
+
 # ---------------------------------------------------------------------------
 # segment sum (one-hot MXU formulation)
 # ---------------------------------------------------------------------------
@@ -69,6 +134,59 @@ def test_segment_sum_empty_segments():
     out = np.asarray(ops.segment_sum(dst, msg, 16))
     assert out[5].sum() == 16.0 and out[9].sum() == 8.0
     assert out.sum() == 24.0
+
+
+def _sorted_chunked_dst(rng, E, n_out):
+    """A sorted dst stream encoded through the real codec (carry-forward
+    pad convention), plus the raw sorted array it encodes."""
+    from repro.core import compressed as cz
+
+    dst = np.sort(rng.integers(0, n_out, E)).astype(np.int32)
+    c = cz.encode_stream(jnp.asarray(dst), width=2)
+    assert not bool(c.spill)
+    return dst, c
+
+
+@pytest.mark.parametrize("E,D,n_out", [(512, 32, 128), (700, 16, 300)])
+def test_segment_sum_chunked_vs_raw(E, D, n_out):
+    """Fused-decode chunked segment-sum == raw segment-sum on the same
+    edges, incl. an edge count that is NOT a multiple of EDGE_BLOCK
+    (the builder's carry-forward pads must contribute nothing)."""
+    rng = np.random.default_rng(4)
+    dst, c = _sorted_chunked_dst(rng, E, n_out)
+    msg = rng.standard_normal((c.length, D)).astype(np.float32)
+    msg[E:] = 0.0  # rows past the valid prefix must be masked to zero
+    got = np.asarray(
+        ops.segment_sum_chunked(
+            c.anchors, c.deltas, c.ovf_pos, c.ovf_add, jnp.asarray(msg), n_out
+        )
+    )
+    want = np.asarray(
+        ref.segment_sum_sorted_ref(jnp.asarray(dst), jnp.asarray(msg[:E]), n_out)
+    )
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_segment_sum_weighted_chunked_vs_raw():
+    rng = np.random.default_rng(6)
+    E, D, n_out = 600, 16, 200
+    dst, c = _sorted_chunked_dst(rng, E, n_out)
+    w = np.zeros(c.length, np.float32)
+    w[:E] = rng.random(E).astype(np.float32) + 0.5
+    msg = rng.standard_normal((c.length, D)).astype(np.float32)
+    msg[E:] = 0.0
+    got = np.asarray(
+        ops.segment_sum_weighted_chunked(
+            c.anchors, c.deltas, c.ovf_pos, c.ovf_add,
+            jnp.asarray(w), jnp.asarray(msg), n_out,
+        )
+    )
+    want = np.asarray(
+        ref.segment_sum_sorted_ref(
+            jnp.asarray(dst), jnp.asarray(w[:E, None] * msg[:E]), n_out
+        )
+    )
+    np.testing.assert_allclose(got, want, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
