@@ -26,10 +26,19 @@ published atomically next to the tree exactly like the flat mirror, and
 ``query_batch`` routes to the sharded engine by default on such
 streams.
 
+Incremental queries (DESIGN.md §11): every edge publish records its
+batch as a ``versioning.Delta`` in the version's aux, and
+``stream.subscribe(kind, ...)`` returns a ``Subscription`` whose
+``refresh()`` advances a standing result (pagerank / cc / bfs / sssp)
+across publishes through the delta-aware warm-start path instead of
+recomputing — time-to-fresh-result scales with the batch, not the
+graph.
+
 ``run_concurrent`` reproduces the paper's §7.3 experiment: one writer
 thread applying a stream of edge updates while reader threads run global
 queries; reports update throughput, per-edge visibility latency, and
-query latencies (concurrent vs isolated).
+query latencies (concurrent vs isolated) — plus subscriber staleness
+when the reader is a live ``Subscription``.
 """
 from __future__ import annotations
 
@@ -40,7 +49,7 @@ from typing import Callable, List, NamedTuple, Optional, Tuple
 import numpy as np
 
 from . import graph as G
-from .versioning import Version, VersionedGraph
+from .versioning import DELTA, Delta, Version, VersionedGraph
 
 MIRROR = "flat"  # aux key of the FlatGraph mirror on a Version
 SHARDED_MIRROR = "sharded"  # aux key of the ShardedGraph mirror
@@ -302,9 +311,16 @@ class AspenStream:
             return self._sharded_delete(mirror, edges)
         return self._mirror_delete(mirror, edges)
 
-    def _publish(self, tree_fn, mirror_fn) -> Version[G.Graph]:
+    def _publish(self, tree_fn, mirror_fn, delta: Optional[Delta] = None) -> Version[G.Graph]:
         """One writer transaction: update tree + mirror from the held
         version, publish both atomically as a single new version.
+
+        ``delta`` — the applied edge batch as a ``versioning.Delta`` —
+        rides the published aux under ``versioning.DELTA``: the update
+        record is a first-class artifact of its version (GC'd with it),
+        and ``vg.delta_between`` recovers the exact diff between any two
+        still-live stamps for the incremental query path.  Vertex-set
+        ops publish no delta (the full-recompute signal).
 
         Self-healing: if the held version carries no mirror (e.g. it was
         published through the raw ``vg`` writer API), the mirror is
@@ -312,11 +328,13 @@ class AspenStream:
 
         def txn(v: Version[G.Graph]):
             g2 = tree_fn(v.graph)
-            if not self._mirror_enabled:
-                return g2, None
-            m = v.aux.get(self._mirror_kind)
-            m2 = mirror_fn(m, v.graph, g2) if m is not None else self._mirror_from_tree(g2)
-            return g2, {self._mirror_kind: m2}
+            aux = {} if delta is None else {DELTA: delta}
+            if self._mirror_enabled:
+                m = v.aux.get(self._mirror_kind)
+                aux[self._mirror_kind] = (
+                    mirror_fn(m, v.graph, g2) if m is not None else self._mirror_from_tree(g2)
+                )
+            return g2, (aux or None)
 
         with self._wlock:
             return self.vg.update_with_aux(txn)
@@ -348,6 +366,7 @@ class AspenStream:
         return self._publish(
             lambda g: G.insert_edges(g, edges, weights=weights),
             lambda m, g_old, g_new: self._apply_insert(m, g_old, edges, weights),
+            delta=Delta(ins=edges, ins_w=weights),
         )
 
     def delete_edges(self, edges: np.ndarray, symmetric: bool = True):
@@ -357,6 +376,7 @@ class AspenStream:
         return self._publish(
             lambda g: G.delete_edges(g, edges),
             lambda m, g_old, g_new: self._apply_delete(m, edges),
+            delta=Delta(dels=edges),
         )
 
     def insert_vertices(self, vs: np.ndarray):
@@ -442,23 +462,32 @@ class AspenStream:
         unchanged version are O(1) dict hits, and the cache dies with
         the version (version-pinned — it can never serve a stale graph).
         """
-        from .traversal import make_engine
-
         v = self.acquire()
         try:
-            key = ("engine", backend)
-            eng = v.cache.get(key)
-            if eng is None:
-                if backend == "jax" and MIRROR in v.aux:
-                    eng = make_engine(v.aux[MIRROR])
-                elif backend == "sharded" and SHARDED_MIRROR in v.aux:
-                    eng = make_engine(v.aux[SHARDED_MIRROR])
-                else:
-                    eng = make_engine(G.flat_snapshot(v.graph), backend=backend)
-                eng = v.cache.setdefault(key, eng)
-            return eng
+            return self._engine_for(v, backend)
         finally:
             self.release(v)
+
+    def _default_backend(self) -> str:
+        return "sharded" if self._mirror_kind == SHARDED_MIRROR else "jax"
+
+    def _engine_for(self, v: Version[G.Graph], backend: str):
+        """``engine`` for an ALREADY-ACQUIRED version (the caller holds
+        the reference): subscriptions pin their engine to the version
+        they hold, never the racy current one."""
+        from .traversal import make_engine
+
+        key = ("engine", backend)
+        eng = v.cache.get(key)
+        if eng is None:
+            if backend == "jax" and MIRROR in v.aux:
+                eng = make_engine(v.aux[MIRROR])
+            elif backend == "sharded" and SHARDED_MIRROR in v.aux:
+                eng = make_engine(v.aux[SHARDED_MIRROR])
+            else:
+                eng = make_engine(G.flat_snapshot(v.graph), backend=backend)
+            eng = v.cache.setdefault(key, eng)
+        return eng
 
     def query_batch(
         self, sources=None, kind: str = "bfs", backend: Optional[str] = None, **kw
@@ -481,24 +510,222 @@ class AspenStream:
         scores for the personalization rows passed as ``resets``
         (``sources`` unused).  Extra kwargs are forwarded to the
         traversal-layer ``*_multi``.
+
+        Identical ``(kind, source)`` requests inside one batch compute
+        ONCE: the engine sees the unique sources and the result rows fan
+        back out to every caller's lane (Zipfian query mixes repeat hot
+        sources constantly, so the dedup is free qps).
         """
         from .traversal import algorithms as talg
 
         if backend is None:
-            backend = "sharded" if self._mirror_kind == SHARDED_MIRROR else "jax"
+            backend = self._default_backend()
         eng = self.engine(backend)
         if kind == "pagerank":
             return talg.pagerank_multi(eng, **kw)
         sources = np.asarray(sources, dtype=np.int64).reshape(-1)
+        uniq, inv = np.unique(sources, return_inverse=True)
         if kind == "bfs":
-            return talg.bfs_multi(eng, sources, **kw)[0]
+            return talg.bfs_multi(eng, uniq, **kw)[0][inv]
         if kind == "distances":
-            return talg.landmark_distances(eng, sources, **kw)
+            return talg.landmark_distances(eng, uniq, **kw)[inv]
         if kind == "bc":
-            return talg.bc_multi(eng, sources, **kw)
+            return talg.bc_multi(eng, uniq, **kw)[inv]
         if kind == "sssp":
-            return talg.sssp_multi(eng, sources, **kw)
+            return talg.sssp_multi(eng, uniq, **kw)[inv]
         raise ValueError(f"unknown query kind {kind!r}")
+
+    def subscribe(
+        self,
+        kind: str,
+        sources=None,
+        backend: Optional[str] = None,
+        **params,
+    ) -> "Subscription":
+        """Open a live subscription: a handle whose ``refresh()`` keeps
+        the result of one standing query (``"pagerank"`` / ``"cc"`` /
+        ``"bfs"`` / ``"sssp"``) continuously fresh across publishes by
+        applying the delta-aware incremental path per new version
+        instead of recomputing from scratch (see ``Subscription``)."""
+        return Subscription(self, kind, sources=sources, backend=backend, **params)
+
+
+class Subscription:
+    """A standing query kept continuously fresh across publishes.
+
+    The handle holds (acquires) the version its current result was
+    computed against — version-pinned exactly like the engine cache, so
+    the pinned version, its delta record and its cached engines are all
+    GC'd together the moment the subscription advances past them or
+    closes.  ``refresh()`` compares the held stamp with the writer's
+    current one; when behind, it asks ``vg.delta_between`` for the
+    composed update record and applies the *incremental* path over the
+    new snapshot:
+
+      pagerank  warm-start power iteration from the previous scores to
+                the same fixed-point tolerance (valid for ANY change —
+                damping < 1 gives a unique fixed point, the init only
+                sets how far away iteration starts);
+      cc        min-label propagation seeded from the delta endpoints
+                (exact; deltas with deletions fall back to full);
+      bfs/sssp  dirty-subtree revalidation seeded into the warm
+                ``sssp_batch_from`` drivers (exact, see
+                ``algorithms.incremental_bfs`` / ``incremental_sssp``).
+
+    A broken delta chain (a hop GC'd before this subscriber caught up,
+    or a version published without a delta record) downgrades that one
+    refresh to a full recompute — never to a wrong answer.
+    ``n_full`` / ``n_incremental`` count which path each refresh took.
+    Thread-safe; at most one refresh runs at a time."""
+
+    KINDS = ("pagerank", "cc", "bfs", "sssp")
+
+    def __init__(
+        self,
+        stream: AspenStream,
+        kind: str,
+        sources=None,
+        backend: Optional[str] = None,
+        damping: float = 0.85,
+        tol: float = 1e-6,
+        max_iters: int = 200,
+    ):
+        if kind not in self.KINDS:
+            raise ValueError(f"unknown subscription kind {kind!r}")
+        if kind in ("bfs", "sssp"):
+            if sources is None:
+                raise ValueError(f"{kind!r} subscriptions need sources")
+            self._sources = np.asarray(sources, dtype=np.int64).reshape(-1)
+        else:
+            self._sources = None
+        self._stream = stream
+        self.kind = kind
+        self._backend = backend
+        self._damping, self._tol, self._max_iters = damping, tol, max_iters
+        self._lock = threading.Lock()
+        self.n_full = 0
+        self.n_incremental = 0
+        self._closed = False
+        self._v = stream.acquire()
+        try:
+            self._recompute(self._v)
+        except BaseException:
+            stream.release(self._v)
+            raise
+
+    @property
+    def stamp(self) -> int:
+        """The version stamp the current result reflects."""
+        return self._v.stamp
+
+    @property
+    def value(self):
+        """The current result, as of ``stamp`` (no refresh): pagerank ->
+        scores (n,); cc -> labels (n,); bfs -> (parents, depths)
+        int64[B, n]; sssp -> distances float64[B, n]."""
+        if self.kind == "pagerank":
+            return self._scores
+        if self.kind == "cc":
+            return self._labels
+        if self.kind == "bfs":
+            return self._parents, self._depths
+        return self._dist
+
+    def _engine(self, v: Version[G.Graph]):
+        backend = self._backend
+        if backend is None:
+            backend = self._stream._default_backend()
+        return self._stream._engine_for(v, backend)
+
+    def _recompute(self, v: Version[G.Graph]) -> None:
+        from .traversal import algorithms as talg
+
+        eng = self._engine(v)
+        if self.kind == "pagerank":
+            self._scores = talg.pagerank(
+                eng, damping=self._damping, tol=self._tol, max_iters=self._max_iters
+            )
+        elif self.kind == "cc":
+            self._labels = np.asarray(talg.connected_components(eng), np.int64)
+        elif self.kind == "bfs":
+            parents, depths = talg.bfs_multi(eng, self._sources)
+            self._parents = np.asarray(parents, np.int64)
+            self._depths = np.asarray(depths, np.int64)
+        else:
+            self._dist = np.asarray(talg.sssp_multi(eng, self._sources), np.float64)
+            # the shortest-path-tree parents are the state the NEXT
+            # delta's dirty-subtree computation needs
+            self._tree = talg.shortest_path_parents(eng, self._dist, self._sources)
+        self.n_full += 1
+
+    def _advance(self, v: Version[G.Graph], delta: Optional[Delta]) -> None:
+        from .traversal import algorithms as talg
+
+        if self.kind == "pagerank":
+            eng = self._engine(v)
+            self._scores = talg.pagerank(
+                eng,
+                damping=self._damping,
+                tol=self._tol,
+                max_iters=self._max_iters,
+                init=self._scores,
+            )
+            self.n_incremental += 1
+            return
+        if delta is None or (self.kind == "cc" and delta.has_deletions):
+            self._recompute(v)
+            return
+        eng = self._engine(v)
+        if self.kind == "cc":
+            self._labels = np.asarray(
+                talg.incremental_connected_components(eng, self._labels, delta),
+                np.int64,
+            )
+        elif self.kind == "bfs":
+            self._parents, self._depths = talg.incremental_bfs(
+                eng, self._sources, self._parents, self._depths, delta
+            )
+        else:
+            self._dist = talg.incremental_sssp(
+                eng, self._sources, self._dist, self._tree, delta
+            )
+            self._tree = talg.shortest_path_parents(eng, self._dist, self._sources)
+        self.n_incremental += 1
+
+    def refresh(self):
+        """Bring the result up to the writer's current version (no-op
+        when already fresh) and return it."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("subscription is closed")
+            cur = self._stream.acquire()
+            if cur.stamp == self._v.stamp:
+                self._stream.release(cur)
+                return self.value
+            try:
+                delta = self._stream.vg.delta_between(self._v, cur)
+                self._advance(cur, delta)
+            except BaseException:
+                self._stream.release(cur)
+                raise
+            old, self._v = self._v, cur
+            self._stream.release(old)
+            return self.value
+
+    def close(self) -> None:
+        """Release the pinned version (idempotent).  The held version —
+        and with it the delta record and cached engines — becomes
+        collectible as soon as no other reader holds it."""
+        with self._lock:
+            if not self._closed:
+                self._closed = True
+                self._stream.release(self._v)
+
+    def __enter__(self) -> "Subscription":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class ConcurrentStats(NamedTuple):
@@ -509,6 +736,7 @@ class ConcurrentStats(NamedTuple):
     n_updates: int
     n_queries: int
     queries_per_sec: float = 0.0  # single-source queries served / reader-busy s
+    subscriber_staleness: float = 0.0  # mean versions-behind after refresh
 
 
 def run_concurrent(
@@ -520,13 +748,20 @@ def run_concurrent(
     symmetric: bool = True,
     engine_backend: Optional[str] = None,
     queries_per_call: int = 1,
+    subscription: Optional[Subscription] = None,
 ) -> ConcurrentStats:
     """Paper §7.3: writer applies updates one batch at a time while a
     reader repeatedly runs query_fn against fresh snapshots.
 
     ``query_fn`` receives a ``FlatSnapshot`` per query by default; pass
     ``engine_backend`` ("numpy"/"jax") to hand it the stream's cached
-    traversal engine instead (the dual-representation serve path).
+    traversal engine instead (the dual-representation serve path), or
+    ``subscription`` to hand it a live ``Subscription`` handle (the
+    incremental serve path: ``query_fn`` typically just calls
+    ``refresh()``).  In subscriber mode the reader additionally samples
+    *staleness* — how many versions the writer has published past the
+    one the subscriber serves, measured right after each refresh —
+    reported as ``subscriber_staleness``.
 
     ``queries_per_call`` declares how many user queries one ``query_fn``
     invocation serves (a batched reader passes e.g. a ``bfs_multi``
@@ -561,8 +796,11 @@ def run_concurrent(
             i += batch_size
 
     q_lat: List[float] = []
+    staleness: List[int] = []
 
     def _substrate():
+        if subscription is not None:
+            return subscription
         if engine_backend is not None:
             return stream.engine(engine_backend)
         return stream.flat_snapshot()
@@ -573,6 +811,8 @@ def run_concurrent(
             t0 = time.perf_counter()
             query_fn(sub)
             q_lat.append(time.perf_counter() - t0)
+            if subscription is not None:
+                staleness.append(stream.vg.current_stamp - subscription.stamp)
 
     tu = threading.Thread(target=updater)
     tq = threading.Thread(target=reader)
@@ -600,6 +840,7 @@ def run_concurrent(
         n_updates=n_upd[0],
         n_queries=len(q_lat) * queries_per_call,
         queries_per_sec=len(q_lat) * queries_per_call / max(sum(q_lat), 1e-9),
+        subscriber_staleness=float(np.mean(staleness)) if staleness else 0.0,
     )
 
 

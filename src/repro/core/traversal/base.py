@@ -68,14 +68,27 @@ Backends MAY additionally expose in-trace batched drivers:
   bc_batch(sources)   -> dependency scores (B, n)
   sssp_batch(sources) -> shortest-path distances (B, n) (+inf = unreached)
 
+and, for the incremental (delta-aware) query path:
+
+  sssp_batch_from(dist0, frontier0, unit=False) -> distances (B, n)
+      the same (min, +) loop seeded from arbitrary initial state (the
+      previous version's still-valid distances + the clean frontier)
+      instead of point sources; ``unit=True`` forces unit weights (the
+      hop metric, how incremental BFS rides the driver)
+  parents_from_depths(depths) -> parents (B, n)
+      the drivers' post-hoc max-contention parent rule as a standalone
+      pass, so warm-started BFS re-derives parents bit-identical to a
+      full recompute
+
 where a whole multi-source traversal (every frontier round of every
 lane) runs as ONE device dispatch with O(1) host syncs total, instead
 of D serial round-trip-synced steps per source.  The backend-generic
 wrappers in ``algorithms.py`` (``bfs_multi`` / ``bc_multi`` /
-``landmark_distances`` / ``pagerank_multi``) dispatch to these via
-``getattr`` and fall back to a per-source python loop, so the same
-call site serves both substrates.  ``HOST_SYNCS`` below is the spy
-counter tests use to pin the O(1)-sync contract.
+``landmark_distances`` / ``pagerank_multi``, and ``warm_distances`` /
+``incremental_bfs`` / ``incremental_sssp`` for the incremental path)
+dispatch to these via ``getattr`` and fall back to a per-source python
+loop, so the same call site serves both substrates.  ``HOST_SYNCS``
+below is the spy counter tests use to pin the O(1)-sync contract.
 
 F and C are *pure, functional* callbacks written against ``ops`` (which
 is numpy-or-jnp, so one definition serves both backends).  Contract v2

@@ -487,17 +487,51 @@ def bfs_batch(
         return newly, jnp.where(newly, d + 1, dep), d + 1
 
     _, depths, _ = jax.lax.while_loop(cond, body, (frontier, depths, jnp.int32(0)))
+    return _parents_pass(g, aux, depths), depths
 
-    du = depths[:, aux.src_c]
-    dv = depths[:, aux.dst_c]
-    ok = aux.evalid[None, :] & (du >= 0) & (dv == du + 1)
-    safe = jnp.where(ok, aux.dst_c[None, :], n)
-    cand = jnp.full((B, n), -1, jnp.int32).at[lane[:, None], safe].max(
-        jnp.broadcast_to(aux.src_c[None, :], (B, cap)), mode="drop"
-    )
+
+def _segmax_rows(msg_b: jax.Array, bounds: jax.Array) -> jax.Array:
+    """Row-wise segmented MAX over a contiguously-segmented axis:
+    (B, cap) messages + int32[S+1] segment bounds -> (B, S) maxima
+    (-1 for empty segments).  The (max) twin of ``_segmin_rows`` —
+    same segmented associative_scan, no scatter."""
+    cap = msg_b.shape[1]
+    flags = jnp.zeros(cap, dtype=bool).at[bounds[:-1]].set(True, mode="drop")
+    flags_b = jnp.broadcast_to(flags, msg_b.shape)
+
+    def op(x, y):
+        mx, fx = x
+        my, fy = y
+        return jnp.where(fy, my, jnp.maximum(mx, my)), fx | fy
+
+    scanned, _ = jax.lax.associative_scan(op, (msg_b, flags_b), axis=1)
+    neg = jnp.asarray(-1, msg_b.dtype)
+    ends = jnp.clip(bounds[1:] - 1, 0, cap - 1)
+    return jnp.where(bounds[1:] > bounds[:-1], scanned[:, ends], neg)
+
+
+def _parents_pass(g: FlatGraph, aux: EngineAux, depths: jax.Array) -> jax.Array:
+    """Assign BFS parents from final depths in ONE pass: parent(v) =
+    max u with depth(u) = depth(v) - 1 and u->v — exactly the
+    max-contention rule of the numpy backend.  Computed as a segmented
+    max over the dst-major pool (each segment IS one vertex's in-edge
+    list), because an XLA scatter-max serializes per element on CPU
+    while the segmented scan vectorizes like the pull rounds.  Also the
+    jitted ``parents_from_depths`` entry point, so incremental BFS
+    (which recomputes depths through the warm ``sssp_batch_from`` path)
+    derives parents bit-identical to a full ``bfs_batch``."""
+    n = g.offsets.shape[0] - 1
+    depths = depths.astype(jnp.int32)
+    du = depths[:, aux.src_by_dst]
+    dv = depths[:, aux.dst_sorted]  # pad slots (dst_sorted == n) clip; masked
+    ok = aux.valid_by_dst[None, :] & (du >= 0) & (dv == du + 1)
+    msg = jnp.where(ok, jnp.broadcast_to(aux.src_by_dst[None, :], du.shape), -1)
+    cand = _segmax_rows(msg, aux.dst_offsets)
     vid = jnp.arange(n, dtype=jnp.int32)[None, :]
-    parents = jnp.where(depths == 0, vid, jnp.where(depths > 0, cand, -1))
-    return parents, depths
+    return jnp.where(depths == 0, vid, jnp.where(depths > 0, cand, -1))
+
+
+parents_from_depths = jax.jit(_parents_pass)
 
 
 @functools.partial(jax.jit, static_argnames=("float_dtype",))
@@ -564,51 +598,36 @@ def bc_batch(
     return dep.at[lane, sources].set(0.0)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("ids_budget", "edge_budget", "float_dtype")
-)
-def sssp_batch(
+def _bellman_ford(
     g: FlatGraph,
     aux: EngineAux,
-    sources: jax.Array,  # int32[B], each in [0, n)
+    dist: jax.Array,  # float[B, n] initial distances (+inf = unknown)
+    frontier: jax.Array,  # bool[B, n] initial relax frontier
     *,
     ids_budget: int,
     edge_budget: int,
     float_dtype=jnp.float32,
+    unit: bool = False,
 ) -> jax.Array:
-    """Multi-source Bellman–Ford over the weighted (min, +) semiring,
-    fully in-trace: returns distances float[B, n] (+inf = unreached).
-
-    The whole frontier loop (frontier = vertices whose distance
-    improved last round) of all B lanes is one ``lax.while_loop`` —
-    one device dispatch, zero per-round host syncs, exactly the
-    ``bfs_batch`` contract.  Per round the batched Beamer rule picks
-    push (budget-bounded vmapped expand + masked scatter-min) or pull;
-    the pull round is the (min, +) semiring specialization of the
-    dense direction — a segmented row-MIN scan over the dst-major pool
-    (``_segmin_rows``), the weighted analogue of the BFS pull's
-    row-cumsum.  An unweighted graph runs the same driver with unit
-    weights (hop distances), so ``sssp_batch`` never changes what an
-    unweighted stream compiles for BFS/BC/PageRank.
-    """
+    """The (min, +) relaxation loop shared by ``sssp_batch`` (point
+    sources) and ``sssp_batch_from`` (warm start from a previous
+    version's distances): one ``lax.while_loop`` to fixpoint from
+    whatever (dist, frontier) it is seeded with.  ``unit=True`` forces
+    unit weights — the hop metric on a weighted pool, which is how
+    incremental BFS rides this driver."""
     n = g.offsets.shape[0] - 1
     cap = g.keys.shape[0]
-    B = sources.shape[0]
-    lane = jnp.arange(B)
-    sources = sources.astype(jnp.int32)
     inf = jnp.asarray(jnp.inf, float_dtype)
     w_pool = (
         jnp.ones(cap, float_dtype)
-        if g.weights is None
+        if (unit or g.weights is None)
         else g.weights.astype(float_dtype)
     )
     w_by_dst = (
         jnp.ones(cap, float_dtype)
-        if aux.w_by_dst is None
+        if (unit or aux.w_by_dst is None)
         else aux.w_by_dst.astype(float_dtype)
     )
-    dist = jnp.full((B, n), inf, float_dtype).at[lane, sources].set(0.0)
-    frontier = jnp.zeros((B, n), bool).at[lane, sources].set(True)
     thresh = jnp.maximum(1, g.m // DENSE_THRESHOLD_DENOM)
 
     def push(args):
@@ -649,6 +668,85 @@ def sssp_batch(
 
     _, dist = jax.lax.while_loop(cond, body, (frontier, dist))
     return dist
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ids_budget", "edge_budget", "float_dtype")
+)
+def sssp_batch(
+    g: FlatGraph,
+    aux: EngineAux,
+    sources: jax.Array,  # int32[B], each in [0, n)
+    *,
+    ids_budget: int,
+    edge_budget: int,
+    float_dtype=jnp.float32,
+) -> jax.Array:
+    """Multi-source Bellman–Ford over the weighted (min, +) semiring,
+    fully in-trace: returns distances float[B, n] (+inf = unreached).
+
+    The whole frontier loop (frontier = vertices whose distance
+    improved last round) of all B lanes is one ``lax.while_loop`` —
+    one device dispatch, zero per-round host syncs, exactly the
+    ``bfs_batch`` contract.  Per round the batched Beamer rule picks
+    push (budget-bounded vmapped expand + masked scatter-min) or pull;
+    the pull round is the (min, +) semiring specialization of the
+    dense direction — a segmented row-MIN scan over the dst-major pool
+    (``_segmin_rows``), the weighted analogue of the BFS pull's
+    row-cumsum.  An unweighted graph runs the same driver with unit
+    weights (hop distances), so ``sssp_batch`` never changes what an
+    unweighted stream compiles for BFS/BC/PageRank.
+    """
+    n = g.offsets.shape[0] - 1
+    B = sources.shape[0]
+    lane = jnp.arange(B)
+    sources = sources.astype(jnp.int32)
+    inf = jnp.asarray(jnp.inf, float_dtype)
+    dist = jnp.full((B, n), inf, float_dtype).at[lane, sources].set(0.0)
+    frontier = jnp.zeros((B, n), bool).at[lane, sources].set(True)
+    return _bellman_ford(
+        g,
+        aux,
+        dist,
+        frontier,
+        ids_budget=ids_budget,
+        edge_budget=edge_budget,
+        float_dtype=float_dtype,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ids_budget", "edge_budget", "float_dtype", "unit"),
+)
+def sssp_batch_from(
+    g: FlatGraph,
+    aux: EngineAux,
+    dist0: jax.Array,  # float[B, n] (+inf = unknown/unreached)
+    frontier0: jax.Array,  # bool[B, n] initial relax frontier
+    *,
+    ids_budget: int,
+    edge_budget: int,
+    float_dtype=jnp.float32,
+    unit: bool = False,
+) -> jax.Array:
+    """``sssp_batch`` seeded from ARBITRARY initial state instead of
+    point sources — the warm-start entry point of the incremental
+    BFS/SSSP path (``traversal.algorithms.warm_distances``): the
+    previous version's still-valid distances come in as ``dist0``, the
+    clean reached set as ``frontier0``, and the same in-trace loop
+    relaxes only what the update batch can have changed.  ``unit=True``
+    runs the hop metric (incremental BFS) on a weighted pool."""
+    return _bellman_ford(
+        g,
+        aux,
+        dist0.astype(float_dtype),
+        frontier0,
+        ids_budget=ids_budget,
+        edge_budget=edge_budget,
+        float_dtype=float_dtype,
+        unit=unit,
+    )
 
 
 class JaxEngine(TraversalEngine):
@@ -865,6 +963,45 @@ class JaxEngine(TraversalEngine):
             edge_budget=self._auto_edge_budget,
             float_dtype=self.ops.float_dtype,
         )[:B]
+
+    @staticmethod
+    def _quantized_state(dist0, frontier0):
+        """Row-pad warm-start state to power-of-two B (inf distances,
+        empty frontiers: pad lanes are fixpoints the loop never
+        touches) — the state analogue of ``_quantized_sources``."""
+        dist0 = np.asarray(dist0, np.float64)
+        frontier0 = np.asarray(frontier0, bool)
+        B, n = dist0.shape
+        pad = max(1, int(2 ** np.ceil(np.log2(max(B, 1)))))
+        if pad != B:
+            dist0 = np.concatenate([dist0, np.full((pad - B, n), np.inf)])
+            frontier0 = np.concatenate(
+                [frontier0, np.zeros((pad - B, n), bool)]
+            )
+        return dist0, frontier0, B
+
+    def sssp_batch_from(self, dist0, frontier0, unit: bool = False) -> jax.Array:
+        """Warm-start (min, +) relaxation from arbitrary initial state
+        (see module-level ``sssp_batch_from``) — the incremental
+        BFS/SSSP driver."""
+        dist0, frontier0, B = self._quantized_state(dist0, frontier0)
+        return sssp_batch_from(
+            self.g,
+            self.aux,
+            jnp.asarray(dist0, self.ops.float_dtype),
+            jnp.asarray(frontier0),
+            ids_budget=self._auto_ids_budget,
+            edge_budget=self._auto_edge_budget,
+            float_dtype=self.ops.float_dtype,
+            unit=unit,
+        )[:B]
+
+    def parents_from_depths(self, depths) -> jax.Array:
+        """BFS parents from depth rows via the driver's one-pass
+        scatter-max rule (see ``_parents_pass``)."""
+        return parents_from_depths(
+            self.g, self.aux, jnp.asarray(np.asarray(depths, np.int32))
+        )
 
     def cc_labels(self) -> jax.Array:
         """Whole-graph min-label CC, fully in-trace over the prebuilt
@@ -1128,6 +1265,27 @@ def sssp_batch_compressed(cg, caux, sources, *, ids_budget, edge_budget, float_d
     )
 
 
+@functools.partial(
+    jax.jit, static_argnames=("ids_budget", "edge_budget", "float_dtype", "unit")
+)
+def sssp_batch_from_compressed(
+    cg, caux, dist0, frontier0, *, ids_budget, edge_budget,
+    float_dtype=jnp.float32, unit=False,
+):
+    g, aux = _inflate(cg, caux)
+    return sssp_batch_from(
+        g, aux, dist0, frontier0,
+        ids_budget=ids_budget, edge_budget=edge_budget,
+        float_dtype=float_dtype, unit=unit,
+    )
+
+
+@jax.jit
+def parents_from_depths_compressed(cg, caux, depths):
+    g, aux = _inflate(cg, caux)
+    return _parents_pass(g, aux, depths)
+
+
 @functools.partial(jax.jit, static_argnames=("n", "dtype"))
 def _edge_map_reduce_compressed(caux: CompressedAux, values_b, *, n, dtype):
     """The (+, x) semiring reduce on fully compressed operands — the one
@@ -1258,6 +1416,20 @@ class CompressedEngine(JaxEngine):
             ids_budget=self._auto_ids_budget, edge_budget=self._auto_edge_budget,
             float_dtype=self.ops.float_dtype,
         )[:B]
+
+    def sssp_batch_from(self, dist0, frontier0, unit: bool = False):
+        dist0, frontier0, B = self._quantized_state(dist0, frontier0)
+        return sssp_batch_from_compressed(
+            self.cg, self.caux,
+            jnp.asarray(dist0, self.ops.float_dtype), jnp.asarray(frontier0),
+            ids_budget=self._auto_ids_budget, edge_budget=self._auto_edge_budget,
+            float_dtype=self.ops.float_dtype, unit=unit,
+        )[:B]
+
+    def parents_from_depths(self, depths):
+        return parents_from_depths_compressed(
+            self.cg, self.caux, jnp.asarray(np.asarray(depths, np.int32))
+        )
 
     def cc_labels(self) -> jax.Array:
         return cc_labels(self.cg)

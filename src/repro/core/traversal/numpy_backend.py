@@ -209,6 +209,23 @@ class NumpyEngine(TraversalEngine):
             self._rev_csr_cache = (in_offsets, in_srcs, in_w)
         return self._rev_csr_cache
 
+    def parents_from_depths(self, depths) -> np.ndarray:
+        """BFS parents int64[B, n] from depth rows: one vectorized
+        maximum.at pass per lane over the cached CSR, the same
+        max-contention rule (parent(v) = max u with depth(u) =
+        depth(v) - 1 and u->v) as the per-round ``_bfs_relax`` scatter
+        and the jax drivers' post-hoc pass — so incremental BFS parents
+        match a full recompute's exactly."""
+        srcs, nbrs = self._csr()
+        vid = np.arange(self._n, dtype=np.int64)
+        rows = []
+        for row in np.asarray(depths, np.int64):
+            ok = (row[srcs] >= 0) & (row[nbrs] == row[srcs] + 1)
+            cand = np.full(self._n, -1, np.int64)
+            np.maximum.at(cand, nbrs[ok], srcs[ok])
+            rows.append(np.where(row == 0, vid, np.where(row > 0, cand, -1)))
+        return np.stack(rows) if rows else np.empty((0, self._n), np.int64)
+
     # -- frontiers ----------------------------------------------------------
     def frontier_from_ids(self, ids) -> VertexSubset:
         return from_ids(self._n, ids)

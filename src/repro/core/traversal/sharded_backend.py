@@ -414,6 +414,85 @@ def bfs_batch_sharded(
     )
 
 
+def _sharded_bellman_ford(
+    offsets, keys, degrees, sbd, vbd, doff, vals, wbd, m,
+    dist, frontier,
+    *, n, ids_budget, edge_budget, float_dtype, unit=False,
+):
+    """The per-device (min, +) relaxation loop shared by
+    ``sssp_batch_sharded`` (point sources) and
+    ``sssp_batch_sharded_from`` (warm start): runs INSIDE the callers'
+    shard_map from whatever replicated (dist, frontier) it is seeded
+    with, pmin-merging each round across shards.  ``unit=True`` forces
+    unit weights — the hop metric, how incremental BFS rides this
+    driver on a weighted pool."""
+    inf = jnp.asarray(jnp.inf, float_dtype)
+    w_pool = (
+        jnp.ones(keys.shape, float_dtype)
+        if (unit or vals is None)
+        else vals.astype(float_dtype)
+    )
+    w_dst = (
+        jnp.ones(keys.shape, float_dtype)
+        if (unit or wbd is None)
+        else wbd.astype(float_dtype)
+    )
+    thresh = jnp.maximum(1, m // DENSE_THRESHOLD_DENOM)
+    deg_loc = degrees.sum(axis=0)
+
+    def push(args):
+        f_b, d_b = args
+
+        def one(U, d):
+            def one_row(off_row, key_row, w_row):
+                us, vs, ev, eidx = _sparse_expand(
+                    off_row, key_row, U, n, ids_budget, edge_budget
+                )
+                cand = d[us] + w_row[eidx]
+                return (
+                    jnp.full(n, inf, float_dtype)
+                    .at[jnp.where(ev, vs, n)]
+                    .min(cand, mode="drop")
+                )
+
+            return jax.vmap(one_row)(offsets, keys, w_pool).min(axis=0)
+
+        loc = jax.vmap(one)(f_b, d_b)
+        return jax.lax.pmin(loc, AXIS)
+
+    def pull(args):
+        f_b, d_b = args
+
+        def one_row(srow, vrow, brow, wrow):
+            msg = jnp.where(
+                f_b[:, srow] & vrow[None, :],
+                d_b[:, srow] + wrow[None, :],
+                inf,
+            )
+            return _segmin_rows(msg, brow)
+
+        loc = jax.vmap(one_row)(sbd, vbd, doff, w_dst).min(axis=0)
+        return jax.lax.pmin(loc, AXIS)
+
+    def cond(carry):
+        return carry[0].any()
+
+    def step(carry):
+        f, d = carry
+        size_b = f.sum(axis=1)
+        deg_b = jax.lax.psum(
+            jnp.where(f, deg_loc[None, :], 0).sum(axis=1), AXIS
+        )
+        cand = jax.lax.cond(
+            ((size_b + deg_b) > thresh).any(), pull, push, (f, d)
+        )
+        newly = cand < d
+        return newly, jnp.where(newly, cand, d)
+
+    _, dist = jax.lax.while_loop(cond, step, (frontier, dist))
+    return dist
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("n", "ids_budget", "edge_budget", "mesh", "weighted", "float_dtype"),
@@ -448,77 +527,18 @@ def sssp_batch_sharded(
 
     def body(offsets, keys, src_c, dst_c, evalid, degrees, sbd, vbd, doff,
              vals, wbd, m, sources):
-        cap = keys.shape[1]
         B = sources.shape[0]
         lane = jnp.arange(B)
         src = sources.astype(jnp.int32)
         inf = jnp.asarray(jnp.inf, float_dtype)
-        w_pool = (
-            jnp.ones(keys.shape, float_dtype)
-            if vals is None
-            else vals.astype(float_dtype)
-        )
-        w_dst = (
-            jnp.ones(keys.shape, float_dtype)
-            if wbd is None
-            else wbd.astype(float_dtype)
-        )
         dist = jnp.full((B, n), inf, float_dtype).at[lane, src].set(0.0)
         frontier = jnp.zeros((B, n), bool).at[lane, src].set(True)
-        thresh = jnp.maximum(1, m // DENSE_THRESHOLD_DENOM)
-        deg_loc = degrees.sum(axis=0)
-
-        def push(args):
-            f_b, d_b = args
-
-            def one(U, d):
-                def one_row(off_row, key_row, w_row):
-                    us, vs, ev, eidx = _sparse_expand(
-                        off_row, key_row, U, n, ids_budget, edge_budget
-                    )
-                    cand = d[us] + w_row[eidx]
-                    return (
-                        jnp.full(n, inf, float_dtype)
-                        .at[jnp.where(ev, vs, n)]
-                        .min(cand, mode="drop")
-                    )
-
-                return jax.vmap(one_row)(offsets, keys, w_pool).min(axis=0)
-
-            loc = jax.vmap(one)(f_b, d_b)
-            return jax.lax.pmin(loc, AXIS)
-
-        def pull(args):
-            f_b, d_b = args
-
-            def one_row(srow, vrow, brow, wrow):
-                msg = jnp.where(
-                    f_b[:, srow] & vrow[None, :],
-                    d_b[:, srow] + wrow[None, :],
-                    inf,
-                )
-                return _segmin_rows(msg, brow)
-
-            loc = jax.vmap(one_row)(sbd, vbd, doff, w_dst).min(axis=0)
-            return jax.lax.pmin(loc, AXIS)
-
-        def cond(carry):
-            return carry[0].any()
-
-        def step(carry):
-            f, d = carry
-            size_b = f.sum(axis=1)
-            deg_b = jax.lax.psum(
-                jnp.where(f, deg_loc[None, :], 0).sum(axis=1), AXIS
-            )
-            cand = jax.lax.cond(
-                ((size_b + deg_b) > thresh).any(), pull, push, (f, d)
-            )
-            newly = cand < d
-            return newly, jnp.where(newly, cand, d)
-
-        _, dist = jax.lax.while_loop(cond, step, (frontier, dist))
-        return dist
+        return _sharded_bellman_ford(
+            offsets, keys, degrees, sbd, vbd, doff, vals, wbd, m,
+            dist, frontier,
+            n=n, ids_budget=ids_budget, edge_budget=edge_budget,
+            float_dtype=float_dtype,
+        )
 
     if weighted:
         local = body
@@ -534,6 +554,70 @@ def sssp_batch_sharded(
         args = (offsets, keys, src_c, dst_c, evalid, degrees, src_by_dst,
                 valid_by_dst, dst_offsets, m, sources)
         specs = (_SPEC2,) * 9 + (P(), P())
+    return _shard_map(
+        local, mesh=mesh, in_specs=specs, out_specs=P(), check_rep=False
+    )(*args)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n", "ids_budget", "edge_budget", "mesh", "weighted", "unit", "float_dtype"
+    ),
+)
+def sssp_batch_sharded_from(
+    offsets,
+    keys,
+    src_c,
+    dst_c,
+    evalid,
+    degrees,
+    src_by_dst,
+    valid_by_dst,
+    dst_offsets,
+    vals,  # float32[S, cap] pool-order values, or None
+    w_by_dst,  # float32[S, cap] dst-major values, or None
+    m,
+    dist0,  # float[B, n] replicated (+inf = unknown)
+    frontier0,  # bool[B, n] replicated initial relax frontier
+    *,
+    n: int,
+    ids_budget: int,
+    edge_budget: int,
+    mesh: Mesh,
+    weighted: bool,
+    unit: bool = False,
+    float_dtype=jnp.float32,
+) -> jax.Array:
+    """``sssp_batch_sharded`` seeded from arbitrary replicated state
+    instead of point sources — the sharded warm-start entry point of
+    the incremental BFS/SSSP path.  Distance/frontier state is
+    vertex-shaped and replicated (``P()``), exactly like the in-loop
+    carry, so per-round collective traffic stays O(frontier + batch)."""
+
+    def body(offsets, keys, src_c, dst_c, evalid, degrees, sbd, vbd, doff,
+             vals, wbd, m, dist0, frontier0):
+        return _sharded_bellman_ford(
+            offsets, keys, degrees, sbd, vbd, doff, vals, wbd, m,
+            dist0.astype(float_dtype), frontier0,
+            n=n, ids_budget=ids_budget, edge_budget=edge_budget,
+            float_dtype=float_dtype, unit=unit,
+        )
+
+    if weighted and not unit:
+        local = body
+        args = (offsets, keys, src_c, dst_c, evalid, degrees, src_by_dst,
+                valid_by_dst, dst_offsets, vals, w_by_dst, m, dist0, frontier0)
+        specs = (_SPEC2,) * 11 + (P(), P(), P())
+    else:
+        def local(offsets, keys, src_c, dst_c, evalid, degrees, sbd, vbd, doff,
+                  m, dist0, frontier0):
+            return body(offsets, keys, src_c, dst_c, evalid, degrees, sbd, vbd,
+                        doff, None, None, m, dist0, frontier0)
+
+        args = (offsets, keys, src_c, dst_c, evalid, degrees, src_by_dst,
+                valid_by_dst, dst_offsets, m, dist0, frontier0)
+        specs = (_SPEC2,) * 9 + (P(), P(), P())
     return _shard_map(
         local, mesh=mesh, in_specs=specs, out_specs=P(), check_rep=False
     )(*args)
@@ -791,6 +875,37 @@ class ShardedEngine(TraversalEngine):
         )
         return dist[:B]
 
+    def sssp_batch_from(self, dist0, frontier0, unit: bool = False) -> jax.Array:
+        """Warm-start (min, +) relaxation from arbitrary initial state
+        (see ``sssp_batch_sharded_from``) — the incremental BFS/SSSP
+        driver on the sharded pool."""
+        dist0, frontier0, B = JaxEngine._quantized_state(dist0, frontier0)
+        weighted = self.sg.pool.vals is not None and not unit
+        dist = sssp_batch_sharded_from(
+            self.aux.offsets,
+            self.sg.pool.data,
+            self.aux.src_c,
+            self.aux.dst_c,
+            self.aux.evalid,
+            self.aux.degrees,
+            self.aux.src_by_dst,
+            self.aux.valid_by_dst,
+            self.aux.dst_offsets,
+            self.sg.pool.vals if weighted else None,
+            self.aux.w_by_dst if weighted else None,
+            jnp.int32(self._m),
+            jnp.asarray(dist0, self.ops.float_dtype),
+            jnp.asarray(frontier0),
+            n=self._n,
+            ids_budget=self._auto_ids_budget,
+            edge_budget=self._auto_edge_budget,
+            mesh=self.mesh,
+            weighted=weighted,
+            unit=unit,
+            float_dtype=self.ops.float_dtype,
+        )
+        return dist[:B]
+
     # -- vertexMap ----------------------------------------------------------
     def vertex_map(self, U: JaxVertexSubset, Pred: Callable, state) -> JaxVertexSubset:
         keep = Pred(self.ops, state, jnp.arange(self._n, dtype=jnp.int32))
@@ -938,6 +1053,29 @@ def sssp_batch_sharded_compressed(
         m, sources,
         n=n, ids_budget=ids_budget, edge_budget=edge_budget, mesh=mesh,
         weighted=weighted, float_dtype=float_dtype,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n", "ids_budget", "edge_budget", "mesh", "weighted", "unit", "float_dtype"
+    ),
+)
+def sssp_batch_sharded_from_compressed(
+    cp, caux, m, dist0, frontier0, *,
+    n, ids_budget, edge_budget, mesh, weighted, unit=False,
+    float_dtype=jnp.float32,
+):
+    p, aux = _inflate_sharded(cp, caux, n)
+    return sssp_batch_sharded_from(
+        aux.offsets, p.data, aux.src_c, aux.dst_c, aux.evalid, aux.degrees,
+        aux.src_by_dst, aux.valid_by_dst, aux.dst_offsets,
+        p.vals if weighted else None,
+        aux.w_by_dst if weighted else None,
+        m, dist0, frontier0,
+        n=n, ids_budget=ids_budget, edge_budget=edge_budget, mesh=mesh,
+        weighted=weighted, unit=unit, float_dtype=float_dtype,
     )
 
 
@@ -1148,6 +1286,22 @@ class CompressedShardedEngine(ShardedEngine):
             edge_budget=self._auto_edge_budget,
             mesh=self.mesh,
             weighted=self.csg.pool.vals is not None,
+            float_dtype=self.ops.float_dtype,
+        )
+        return dist[:B]
+
+    def sssp_batch_from(self, dist0, frontier0, unit: bool = False) -> jax.Array:
+        dist0, frontier0, B = JaxEngine._quantized_state(dist0, frontier0)
+        weighted = self.csg.pool.vals is not None and not unit
+        dist = sssp_batch_sharded_from_compressed(
+            self.csg.pool, self.caux, jnp.int32(self._m),
+            jnp.asarray(dist0, self.ops.float_dtype), jnp.asarray(frontier0),
+            n=self._n,
+            ids_budget=self._auto_ids_budget,
+            edge_budget=self._auto_edge_budget,
+            mesh=self.mesh,
+            weighted=weighted,
+            unit=unit,
             float_dtype=self.ops.float_dtype,
         )
         return dist[:B]

@@ -31,9 +31,91 @@ leak across the version lifecycle or outlive their snapshot.
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, Dict, Generic, Optional, TypeVar
+from typing import Any, Callable, Dict, Generic, List, Optional, TypeVar
+
+import numpy as np
 
 G = TypeVar("G")
+
+DELTA = "delta"  # aux key of the per-version update record
+
+
+class Delta:
+    """The edge batch one published version applied to its predecessor.
+
+    Versions are purely functional, so the diff between consecutive
+    stamps is exactly the batch the writer applied — recording it at
+    publish time makes the diff a first-class artifact the incremental
+    query path (warm-start PageRank, incremental CC/BFS/SSSP) consumes
+    instead of recomputing from scratch.  Stored per version in
+    ``Version.aux[DELTA]``, so it is GC'd with its version like every
+    other aux representation.
+
+    ``ins``/``dels`` are directed int64[k, 2] edge arrays exactly as
+    applied (a symmetric insert records both directions); ``ins_w`` is
+    the per-inserted-edge value lane or None.  A version published
+    through a non-edge path (vertex-set ops, raw ``vg`` writes) carries
+    no delta at all, which ``delta_between`` reports as None — the
+    full-recompute signal.
+    """
+
+    __slots__ = ("ins", "ins_w", "dels", "__weakref__")
+
+    def __init__(
+        self,
+        ins: Optional[np.ndarray] = None,
+        ins_w: Optional[np.ndarray] = None,
+        dels: Optional[np.ndarray] = None,
+    ):
+        empty = np.empty((0, 2), dtype=np.int64)
+        self.ins = empty if ins is None else np.asarray(ins, np.int64).reshape(-1, 2)
+        self.dels = empty if dels is None else np.asarray(dels, np.int64).reshape(-1, 2)
+        self.ins_w = None if ins_w is None else np.asarray(ins_w, np.float32).reshape(-1)
+
+    @property
+    def empty(self) -> bool:
+        return self.ins.shape[0] == 0 and self.dels.shape[0] == 0
+
+    @property
+    def has_deletions(self) -> bool:
+        return self.dels.shape[0] > 0
+
+    @property
+    def endpoints(self) -> np.ndarray:
+        """Unique vertex ids touched by the batch (the perturbation /
+        seed-frontier set of the incremental algorithms)."""
+        return np.unique(np.concatenate([self.ins.ravel(), self.dels.ravel()]))
+
+    @property
+    def nbytes(self) -> int:
+        w = 0 if self.ins_w is None else self.ins_w.nbytes
+        return self.ins.nbytes + self.dels.nbytes + w
+
+    @classmethod
+    def concat(cls, parts: "List[Delta]") -> "Delta":
+        """Compose deltas across consecutive stamps.  Inserts and
+        deletes are unioned independently — conservative for the
+        incremental consumers (they relax over the NEW snapshot, so
+        seeds/dirty sets may only be supersets)."""
+        if not parts:
+            return cls()
+        ins = np.concatenate([p.ins for p in parts])
+        dels = np.concatenate([p.dels for p in parts])
+        if any(p.ins_w is not None for p in parts):
+            ins_w = np.concatenate(
+                [
+                    p.ins_w
+                    if p.ins_w is not None
+                    else np.ones(p.ins.shape[0], np.float32)
+                    for p in parts
+                ]
+            )
+        else:
+            ins_w = None
+        return cls(ins=ins, ins_w=ins_w, dels=dels)
+
+    def __repr__(self):
+        return f"Delta(ins={self.ins.shape[0]}, dels={self.dels.shape[0]})"
 
 
 class Version(Generic[G]):
@@ -72,10 +154,20 @@ class VersionedGraph(Generic[G]):
 
     def release(self, v: Version[G]) -> bool:
         """Drop a reference; returns True if this was the last one and the
-        version was garbage-collected."""
+        version was garbage-collected.
+
+        Idempotent past zero: releasing a version whose refcount has
+        already drained (a double-release) is a no-op returning False
+        rather than driving the count negative — a negative count would
+        keep the version collectible forever while a later acquire/
+        release pair races it, corrupting the live list.  (A
+        double-release *while other readers still hold the version* is
+        indistinguishable from a legitimate release without per-acquire
+        tokens; the clamp closes the corrupting case.)"""
         with self._lock:
+            if v._refcount <= 0:
+                return False
             v._refcount -= 1
-            assert v._refcount >= 0, "release without acquire"
             if v._refcount == 0 and v is not self._current:
                 self._versions.pop(v.stamp, None)
                 self._collected += 1
@@ -118,6 +210,31 @@ class VersionedGraph(Generic[G]):
             return self.set(graph, aux)
         finally:
             self.release(v)
+
+    # -- deltas --------------------------------------------------------------
+    def delta_between(self, v_old: Version[G], v_new: Version[G]) -> Optional[Delta]:
+        """The composed edge delta taking ``v_old``'s graph to
+        ``v_new``'s, or None when it cannot be derived — any hop already
+        collected, or any hop published without a delta record (vertex
+        ops, raw writes).  None is the full-recompute signal; an
+        incremental consumer holding ``v_old`` (subscriptions do) always
+        finds the one-hop chain intact because the hop's delta lives on
+        ``v_new`` itself."""
+        if v_new.stamp < v_old.stamp:
+            return None
+        if v_new.stamp == v_old.stamp:
+            return Delta()
+        with self._lock:
+            parts: List[Delta] = []
+            for s in range(v_old.stamp + 1, v_new.stamp + 1):
+                v = self._versions.get(s)
+                if v is None:
+                    return None  # hop collected: chain broken
+                d = v.aux.get(DELTA)
+                if not isinstance(d, Delta):
+                    return None  # hop published without a delta record
+                parts.append(d)
+        return Delta.concat(parts)
 
     # -- introspection -------------------------------------------------------
     @property

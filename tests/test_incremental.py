@@ -1,0 +1,400 @@
+"""Incremental computation across versions (DESIGN.md §11).
+
+Pins the PR's contract:
+
+  (1) delta capture — every edge-batch publish records the applied
+      batch in ``Version.aux["delta"]``, and ``vg.delta_between``
+      composes records across live hops (None — the full-recompute
+      signal — when a hop was collected or published without one);
+  (2) warm-start PageRank — seeded from the previous version's scores
+      it reaches the full-recompute fixed point (f32 tolerance) in
+      <= half the spy-counted rounds after a 1%-of-edges batch;
+  (3) incremental CC / BFS / SSSP match a full recompute EXACTLY on
+      the numpy and jax backends (the sharded backend is pinned in
+      test_sharded_engine.py, including the 8-device mesh);
+  (4) subscriptions stay fresh through the incremental path when the
+      delta chain is intact and fall back to a full recompute — never
+      a wrong answer — when it is not;
+  (5) ``query_batch`` computes each unique source once and fans the
+      row back out to every duplicate request.
+"""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.streaming import AspenStream
+from repro.core.traversal import algorithms as talg
+from repro.core.versioning import DELTA, Delta
+from repro.data.rmat import rmat_edges, symmetrize
+
+N = 256
+
+
+def _weights_for(edges):
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    return ((lo * 1000003 + hi) % 7 + 1).astype(np.float64)  # symmetric, integer
+
+
+@pytest.fixture(scope="module")
+def base_edges():
+    return symmetrize(rmat_edges(8, 2000, seed=7))  # 256 vertices
+
+
+@pytest.fixture(scope="module")
+def batch(base_edges):
+    """~1% of directed edges, self-loop-free, deterministic."""
+    k = max(1, base_edges.shape[0] // 100)
+    rng = np.random.default_rng(3)
+    b = rng.integers(0, N, size=(4 * k, 2)).astype(np.int64)
+    return b[b[:, 0] != b[:, 1]][:k]
+
+
+def _hold_after(stream):
+    """Acquire the just-published version so the delta chain to it
+    stays intact while later hops are published."""
+    return stream.vg.acquire()
+
+
+# ---------------------------------------------------------------------------
+# delta capture + delta_between
+# ---------------------------------------------------------------------------
+
+
+def test_publish_records_delta(base_edges, batch):
+    s = AspenStream(G.build_graph(N, base_edges))
+    s.insert_edges(batch)
+    v = s.vg.acquire()
+    d = v.aux.get(DELTA)
+    assert isinstance(d, Delta)
+    # symmetric insert records both directions, exactly as applied
+    assert d.ins.shape == (2 * batch.shape[0], 2)
+    assert not d.has_deletions and d.ins_w is None
+    applied = np.concatenate([batch, batch[:, ::-1]])
+    np.testing.assert_array_equal(
+        d.ins[np.lexsort(d.ins.T)], applied[np.lexsort(applied.T)]
+    )
+    s.delete_edges(base_edges[:10], symmetric=False)
+    v2 = s.vg.acquire()
+    d2 = v2.aux.get(DELTA)
+    assert d2.has_deletions and d2.ins.shape[0] == 0
+    np.testing.assert_array_equal(d2.dels, base_edges[:10])
+    s.vg.release(v)
+    s.vg.release(v2)
+
+
+def test_publish_records_weighted_delta(batch):
+    s = AspenStream()
+    w = _weights_for(batch).astype(np.float32)
+    s.insert_edges(batch, weights=w)
+    v = s.vg.acquire()
+    d = v.aux[DELTA]
+    assert d.ins_w is not None and d.ins_w.shape[0] == d.ins.shape[0]
+    # the recorded lane matches the applied (symmetrized) batch
+    assert d.nbytes >= d.ins.nbytes
+    s.vg.release(v)
+
+
+def test_delta_between_identity_and_reverse(base_edges):
+    s = AspenStream(G.build_graph(N, base_edges))
+    v = s.vg.acquire()
+    same = s.vg.delta_between(v, v)
+    assert isinstance(same, Delta) and same.empty
+    s.insert_edges(base_edges[:2])
+    v2 = s.vg.acquire()
+    assert s.vg.delta_between(v2, v) is None  # backwards: underivable
+    s.vg.release(v)
+    s.vg.release(v2)
+
+
+def test_delta_between_concatenates_live_hops(base_edges, batch):
+    s = AspenStream(G.build_graph(N, base_edges))
+    v0 = s.vg.acquire()
+    held = []
+    for i in range(3):
+        s.insert_edges(batch[i : i + 1])
+        held.append(_hold_after(s))
+    s.delete_edges(base_edges[:2], symmetric=False)
+    vend = s.vg.acquire()
+    d = s.vg.delta_between(v0, vend)
+    assert d.ins.shape[0] == 6  # 3 symmetric single-edge inserts
+    assert d.dels.shape[0] == 2
+    for v in [v0, vend] + held:
+        s.vg.release(v)
+
+
+def test_delta_between_none_when_hop_collected(base_edges, batch):
+    s = AspenStream(G.build_graph(N, base_edges))
+    v0 = s.vg.acquire()
+    s.insert_edges(batch[:1])  # nobody holds this hop ...
+    s.insert_edges(batch[1:2])  # ... so this publish collects it
+    vend = s.vg.acquire()
+    assert s.vg.delta_between(v0, vend) is None
+    s.vg.release(v0)
+    s.vg.release(vend)
+
+
+def test_delta_between_none_without_delta_record(base_edges):
+    s = AspenStream(G.build_graph(N, base_edges), mirror=False)
+    v0 = s.vg.acquire()
+    s.vg.set(v0.graph)  # raw write: no delta record on the hop
+    vend = s.vg.acquire()
+    assert s.vg.delta_between(v0, vend) is None
+    s.vg.release(v0)
+    s.vg.release(vend)
+
+
+def test_delta_concat_mixed_weight_lanes():
+    a = Delta(ins=np.array([[0, 1]]), ins_w=np.array([3.0], np.float32))
+    b = Delta(ins=np.array([[1, 2]]))  # unweighted hop: ones-filled
+    c = Delta.concat([a, b])
+    np.testing.assert_array_equal(c.ins, [[0, 1], [1, 2]])
+    np.testing.assert_allclose(c.ins_w, [3.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# warm-start PageRank (the 1%-batch acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _streams_around_batch(base_edges, batch):
+    s1 = AspenStream(G.build_graph(N, base_edges))
+    new = np.concatenate([base_edges, batch, batch[:, ::-1]])
+    s2 = AspenStream(G.build_graph(N, new))
+    return s1, s2
+
+
+def test_warm_pagerank_half_rounds_jax(base_edges, batch):
+    """After a 1%-of-edges batch, PageRank warm-started from the prior
+    scores is within f32 tolerance of the full-recompute fixed point in
+    <= half the rounds the full recompute spent (spy-counted)."""
+    s1, s2 = _streams_around_batch(base_edges, batch)
+    eng1, eng2 = s1.engine("jax"), s2.engine("jax")
+    tol = 1e-6
+    prev = np.asarray(talg.pagerank(eng1, tol=tol))
+    talg.PAGERANK_ROUNDS.count = 0
+    cold = np.asarray(talg.pagerank(eng2, tol=tol))
+    cold_rounds = talg.PAGERANK_ROUNDS.count
+    assert cold_rounds >= 4  # the spy actually counted a real run
+
+    warm = np.asarray(talg.pagerank(eng2, iters=cold_rounds // 2, init=prev))
+    assert np.abs(warm - cold).max() <= 2e-6  # f32 tolerance
+
+    # the early-exit mode converges strictly faster warm than cold too
+    talg.PAGERANK_ROUNDS.count = 0
+    talg.pagerank(eng2, tol=tol, init=prev)
+    assert talg.PAGERANK_ROUNDS.count < cold_rounds
+
+
+def test_warm_pagerank_fixed_point_numpy(base_edges, batch):
+    """Same contract on the f64 numpy engine: warm and cold agree at
+    the fixed point regardless of init (damping < 1 => unique)."""
+    s1, s2 = _streams_around_batch(base_edges, batch)
+    eng1, eng2 = s1.engine("numpy"), s2.engine("numpy")
+    prev = np.asarray(talg.pagerank(eng1, tol=1e-10))
+    talg.PAGERANK_ROUNDS.count = 0
+    cold = np.asarray(talg.pagerank(eng2, tol=1e-10))
+    cold_rounds = talg.PAGERANK_ROUNDS.count
+    talg.PAGERANK_ROUNDS.count = 0
+    warm = np.asarray(talg.pagerank(eng2, tol=1e-10, init=prev))
+    assert talg.PAGERANK_ROUNDS.count < cold_rounds
+    assert np.abs(warm - cold).max() <= 1e-9
+
+
+# ---------------------------------------------------------------------------
+# incremental CC / BFS / SSSP: exact vs full recompute on numpy and jax
+# ---------------------------------------------------------------------------
+
+
+def _versioned_pair(base_edges, batch, weighted=False):
+    """One stream, two held versions one edge batch apart (inserts AND
+    deletions), plus the composed delta between them."""
+    w = _weights_for(base_edges) if weighted else None
+    s = AspenStream(G.build_graph(N, base_edges, weights=w))
+    v1 = s.vg.acquire()
+    kw = {"weights": _weights_for(batch)} if weighted else {}
+    s.insert_edges(batch, **kw)
+    vmid = _hold_after(s)
+    s.delete_edges(base_edges[:20], symmetric=False)
+    v2 = s.vg.acquire()
+    d = s.vg.delta_between(v1, v2)
+    assert isinstance(d, Delta) and d.has_deletions
+    return s, v1, v2, d, [vmid]
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_incremental_cc_exact(base_edges, batch, backend):
+    s, v1, v2, d, held = _versioned_pair(base_edges, batch)
+    e1, e2 = s._engine_for(v1, backend), s._engine_for(v2, backend)
+    prev = np.asarray(talg.connected_components(e1), np.int64)
+    # deletions present: downgrades to full recompute, still exact
+    got = talg.incremental_connected_components(e2, prev, d)
+    np.testing.assert_array_equal(got, talg.connected_components(e2))
+    # insert-only hop: the seeded label-prop path, exact
+    emid = s._engine_for(held[0], backend)
+    dmid = s.vg.delta_between(v1, held[0])
+    assert not dmid.has_deletions
+    got_mid = talg.incremental_connected_components(emid, prev, dmid)
+    np.testing.assert_array_equal(got_mid, talg.connected_components(emid))
+    # broken chain (None) is the full-recompute signal, still exact
+    got_none = talg.incremental_connected_components(e2, prev, None)
+    np.testing.assert_array_equal(got_none, talg.connected_components(e2))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_incremental_bfs_exact(base_edges, batch, backend):
+    s, v1, v2, d, held = _versioned_pair(base_edges, batch)
+    e1, e2 = s._engine_for(v1, backend), s._engine_for(v2, backend)
+    src = np.array([0, 31, 128], np.int64)
+    p1, d1 = talg.bfs_multi(e1, src)
+    fp, fd = talg.bfs_multi(e2, src)
+    ip, idp = talg.incremental_bfs(e2, src, p1, d1, d)
+    np.testing.assert_array_equal(idp, fd)  # depths exact
+    np.testing.assert_array_equal(ip, fp)  # parents bit-identical
+
+    # pure-insert hop exercises the no-dirty fast frontier too
+    emid = s._engine_for(held[0], backend)
+    dmid = s.vg.delta_between(v1, held[0])
+    mp, md = talg.bfs_multi(emid, src)
+    ip2, id2 = talg.incremental_bfs(emid, src, p1, d1, dmid)
+    np.testing.assert_array_equal(id2, md)
+    np.testing.assert_array_equal(ip2, mp)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_incremental_sssp_exact(base_edges, batch, backend):
+    s, v1, v2, d, held = _versioned_pair(base_edges, batch, weighted=True)
+    e1, e2 = s._engine_for(v1, backend), s._engine_for(v2, backend)
+    src = np.array([0, 31, 128], np.int64)
+    dist1 = np.asarray(talg.sssp_multi(e1, src), np.float64)
+    tree1 = talg.shortest_path_parents(e1, dist1, src)
+    got = talg.incremental_sssp(e2, src, dist1, tree1, d)
+    np.testing.assert_array_equal(got, talg.sssp_multi(e2, src))
+
+
+def test_shortest_path_parents_support(base_edges):
+    """The recorded SSSP tree is a valid support: every non-source
+    finite vertex has a parent edge with dist[v] == dist[p] + w."""
+    w = _weights_for(base_edges)
+    s = AspenStream(G.build_graph(N, base_edges, weights=w))
+    eng = s.engine("numpy")
+    src = np.array([0, 7], np.int64)
+    dist = np.asarray(talg.sssp_multi(eng, src), np.float64)
+    tree = talg.shortest_path_parents(eng, dist, src)
+    for b in range(src.size):
+        reached = np.isfinite(dist[b])
+        assert tree[b, src[b]] == src[b]
+        others = reached & (np.arange(N) != src[b])
+        assert (tree[b, others] >= 0).all()
+        assert (~reached == (tree[b] == -1))[np.arange(N) != src[b]].all()
+
+
+# ---------------------------------------------------------------------------
+# subscriptions
+# ---------------------------------------------------------------------------
+
+
+def test_subscription_stays_fresh_incrementally(base_edges, batch):
+    s = AspenStream(G.build_graph(N, base_edges))
+    src = np.array([0, 31], np.int64)
+    sub_bfs = s.subscribe("bfs", sources=src, backend="numpy")
+    sub_cc = s.subscribe("cc", backend="numpy")
+    sub_pr = s.subscribe("pagerank", backend="numpy", tol=1e-10)
+    assert (sub_bfs.n_full, sub_bfs.n_incremental) == (1, 0)
+    for i in range(3):  # refresh every hop: chain always intact
+        s.insert_edges(batch[2 * i : 2 * i + 2])
+        for sub in (sub_bfs, sub_cc, sub_pr):
+            sub.refresh()
+    s.delete_edges(base_edges[:5], symmetric=False)
+    for sub in (sub_bfs, sub_cc, sub_pr):
+        sub.refresh()
+        assert sub.stamp == s.vg.current_stamp
+    assert sub_bfs.n_incremental == 4 and sub_bfs.n_full == 1
+    assert sub_pr.n_incremental == 4 and sub_pr.n_full == 1
+    # cc took the incremental path on inserts, full on the deletion hop
+    assert sub_cc.n_incremental == 3 and sub_cc.n_full == 2
+
+    eng = s.engine("numpy")
+    fp, fd = talg.bfs_multi(eng, src)
+    np.testing.assert_array_equal(sub_bfs.value[0], fp)
+    np.testing.assert_array_equal(sub_bfs.value[1], fd)
+    np.testing.assert_array_equal(sub_cc.value, talg.connected_components(eng))
+    assert np.abs(sub_pr.value - talg.pagerank(eng, tol=1e-10)).max() <= 1e-9
+    for sub in (sub_bfs, sub_cc, sub_pr):
+        sub.close()
+
+
+def test_subscription_weighted_sssp(base_edges, batch):
+    w = _weights_for(base_edges)
+    s = AspenStream(G.build_graph(N, base_edges, weights=w))
+    src = np.array([3, 200], np.int64)
+    with s.subscribe("sssp", sources=src, backend="jax") as sub:
+        s.insert_edges(batch, weights=_weights_for(batch))
+        sub.refresh()
+        s.delete_edges(base_edges[:10], symmetric=False)
+        sub.refresh()
+        assert sub.n_incremental == 2
+        eng = s.engine("jax")
+        np.testing.assert_array_equal(sub.value, talg.sssp_multi(eng, src))
+
+
+def test_subscription_full_fallback_on_broken_chain(base_edges, batch):
+    s = AspenStream(G.build_graph(N, base_edges))
+    sub = s.subscribe("bfs", sources=[0], backend="numpy")
+    # two hops land before the subscriber catches up; the first is
+    # collected immediately => delta chain broken => full recompute
+    s.insert_edges(batch[:2])
+    s.insert_edges(batch[2:4])
+    sub.refresh()
+    assert sub.n_full == 2 and sub.n_incremental == 0
+    eng = s.engine("numpy")
+    np.testing.assert_array_equal(sub.value[1], talg.bfs_multi(eng, [0])[1])
+    sub.close()
+
+
+def test_subscription_close_idempotent_and_guards(base_edges):
+    s = AspenStream(G.build_graph(N, base_edges))
+    sub = s.subscribe("cc", backend="numpy")
+    held_stamp = sub.stamp
+    sub.close()
+    sub.close()  # idempotent
+    with pytest.raises(RuntimeError):
+        sub.refresh()
+    with pytest.raises(ValueError):
+        s.subscribe("nope")
+    with pytest.raises(ValueError):
+        s.subscribe("bfs")  # sources required
+    assert held_stamp == 0
+
+
+# ---------------------------------------------------------------------------
+# query_batch dedup
+# ---------------------------------------------------------------------------
+
+
+def test_query_batch_dedups_identical_sources(base_edges, monkeypatch):
+    s = AspenStream(G.build_graph(N, base_edges))
+    seen = []
+    real = talg.bfs_multi
+
+    def spy(eng, sources, **kw):
+        seen.append(np.asarray(sources))
+        return real(eng, sources, **kw)
+
+    monkeypatch.setattr(talg, "bfs_multi", spy)
+    req = [7, 0, 7, 7, 3, 0]
+    rows = s.query_batch(req, kind="bfs", backend="numpy")
+    assert len(seen) == 1 and seen[0].shape == (3,)  # unique sources only
+    assert rows.shape == (len(req), N)  # ... fanned back out
+    monkeypatch.undo()
+    full = talg.bfs_multi(s.engine("numpy"), np.asarray(req, np.int64))[0]
+    np.testing.assert_array_equal(rows, full)
+
+
+def test_query_batch_dedup_distances(base_edges):
+    s = AspenStream(G.build_graph(N, base_edges))
+    rows = s.query_batch([5, 5, 1, 5], kind="distances", backend="numpy")
+    np.testing.assert_array_equal(rows[0], rows[1])
+    np.testing.assert_array_equal(rows[0], rows[3])
+    direct = talg.landmark_distances(s.engine("numpy"), np.array([5, 1]))
+    np.testing.assert_array_equal(rows[2], direct[1])

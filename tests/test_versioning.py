@@ -130,3 +130,63 @@ def test_stream_concurrent_mirror_consistency():
         fg.to_edge_array(s.flat_graph()),
         fg.to_edge_array(traversal.flat_graph_of(snap)),
     )
+
+
+def test_release_idempotent_past_zero():
+    """Double-release regression: a stale release must not drive the
+    refcount negative (which would let a later acquire/release pair
+    collect a version someone still holds)."""
+    vg = VersionedGraph("v0")
+    v = vg.acquire()
+    vg.set("v1")
+    assert vg.release(v) is True  # last ref: collected
+    assert vg.release(v) is False  # stale double-release: no-op
+    assert vg.release(v) is False
+    # the clamp keeps a subsequent acquire/release pair coherent
+    cur = vg.acquire()
+    assert cur._refcount == 1
+    vg.release(cur)
+    assert cur._refcount == 0
+    assert vg.live_versions() == 1
+
+
+def test_aux_gc_under_live_subscription():
+    """1k publishes against a live subscription: collected versions drop
+    their delta records and cached engines (no monotonic growth of
+    retained arrays), and the live-version count stays bounded by the
+    held set, not the publish count."""
+    from repro.core.versioning import DELTA
+
+    edges = symmetrize(rmat_edges(6, 300, seed=23))
+    n = 64
+    s = AspenStream(G.build_graph(n, edges), mirror=False)
+    sub = s.subscribe("cc", backend="numpy")
+
+    rng = np.random.default_rng(5)
+    delta_refs, engine_refs = [], []
+    for i in range(1000):
+        e = rng.integers(0, n, size=(1, 2)).astype(np.int64)
+        if e[0, 0] == e[0, 1]:
+            e[0, 1] = (e[0, 1] + 1) % n
+        s.insert_edges(e)
+        if i % 100 == 0:
+            v = s.acquire()
+            delta_refs.append(weakref.ref(v.aux[DELTA]))
+            engine_refs.append(weakref.ref(s._engine_for(v, "numpy")))
+            s.release(v)
+        sub.refresh()  # every hop: the chain is always intact
+        # subscription + current is the whole live set
+        assert s.vg.live_versions() <= 3
+
+    assert sub.n_incremental >= 999  # one-hop refreshes ride the delta
+    sub.refresh()
+    labels = np.asarray(talg.connected_components(s.engine("numpy")), np.int64)
+    np.testing.assert_array_equal(sub.value, labels)
+
+    sub.close()
+    gc.collect()
+    # every sampled delta record and engine died with its version
+    assert all(r() is None for r in delta_refs[:-1])
+    assert all(r() is None for r in engine_refs[:-1])
+    assert s.vg.live_versions() == 1
+    assert s.vg.collected_versions() >= 999
