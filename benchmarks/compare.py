@@ -1,0 +1,114 @@
+"""Perf-regression gate: fresh bench rows vs the committed trajectory.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        --baseline BENCH_BYTES.json --current rows.json \
+        [--threshold 0.25] [--warn-only] [--units ms,us,s,B/edge]
+
+``--baseline`` is a trajectory file (``benchmarks.trajectory``; the LAST
+run record is the baseline) or a plain ``benchmarks.run --json`` row
+list.  ``--current`` is either form too.  Rows are matched by exact
+name; a row regresses when its value grows more than ``--threshold``
+(default 25%) over baseline, counted only for cost-like units (time and
+bytes — bigger is worse; dimensionless "x" ratio rows are reported but
+never gate, their targets live in the bench notes).  Exit 1 on any
+regression unless ``--warn-only``; missing/new rows are reported but
+never gate (bench row names carry graph sizes and may legitimately
+shift when a generator changes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+COST_UNITS = ("s", "ms", "us", "ns", "B/edge", "B", "MB")
+
+
+def load_rows(path: str) -> dict:
+    """name -> row dict, from a trajectory file (last record) or a plain
+    row list."""
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list) or not data:
+        return {}
+    if isinstance(data[0], dict) and "rows" in data[0]:
+        data = data[-1]["rows"]  # trajectory: newest record gates
+    return {r["name"]: r for r in data if isinstance(r, dict) and "name" in r}
+
+
+def compare(
+    baseline: dict,
+    current: dict,
+    threshold: float = 0.25,
+    units: tuple = COST_UNITS,
+) -> tuple[list, list, list]:
+    """(regressions, improvements, informational) row comparisons."""
+    regressions, improvements, info = [], [], []
+    for name, cur in sorted(current.items()):
+        base = baseline.get(name)
+        if base is None:
+            info.append((name, None, cur.get("value"), "new row"))
+            continue
+        bv, cv = float(base["value"]), float(cur["value"])
+        unit = cur.get("unit", "")
+        if unit not in units or bv <= 0:
+            info.append((name, bv, cv, f"not gated ({unit or 'no unit'})"))
+            continue
+        rel = (cv - bv) / bv
+        if rel > threshold:
+            regressions.append((name, bv, cv, f"+{rel:.0%} ({unit})"))
+        elif rel < -threshold:
+            improvements.append((name, bv, cv, f"{rel:.0%} ({unit})"))
+    for name in sorted(set(baseline) - set(current)):
+        info.append((name, baseline[name].get("value"), None, "missing row"))
+    return regressions, improvements, info
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--threshold", type=float, default=0.25)
+    ap.add_argument(
+        "--warn-only",
+        action="store_true",
+        help="report regressions but always exit 0 (noisy CI machines)",
+    )
+    ap.add_argument(
+        "--units",
+        default=",".join(COST_UNITS),
+        help="comma-separated units that gate (bigger value = worse)",
+    )
+    args = ap.parse_args()
+
+    baseline = load_rows(args.baseline)
+    current = load_rows(args.current)
+    if not baseline:
+        print(f"no baseline rows in {args.baseline}; nothing to gate")
+        return
+    regs, imps, info = compare(
+        baseline, current, args.threshold, tuple(args.units.split(","))
+    )
+
+    def show(tag, items):
+        for name, bv, cv, why in items:
+            b = "-" if bv is None else f"{bv:.6g}"
+            c = "-" if cv is None else f"{cv:.6g}"
+            print(f"{tag} {name}: {b} -> {c}  [{why}]")
+
+    show("REGRESSION", regs)
+    show("improved  ", imps)
+    show("info      ", info)
+    n_gated = sum(
+        1 for r in current.values() if r.get("unit", "") in args.units.split(",")
+    )
+    print(
+        f"# {len(regs)} regression(s), {len(imps)} improvement(s) over "
+        f"{n_gated} gated rows at +{args.threshold:.0%}"
+    )
+    if regs and not args.warn_only:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

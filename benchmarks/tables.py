@@ -821,7 +821,12 @@ def bench_bytes(quick: bool = False) -> List[Row]:
     scales: pool-only bytes/edge, whole-engine resident bytes/edge
     (pool + traversal aux), and the edgeMap (+, x) reduce throughput of
     the fused-decode Pallas kernel vs the raw kernel (PageRank's inner
-    loop).  One sharded-engine residency row pins the per-shard variant.
+    loop).  The compressed pool uses the adaptive per-chunk width
+    (int8 lanes with an int16 hi-plane only on wide chunks, §12); a
+    fixed int16-wide row pins how much the width tags buy, and an
+    ``ideal_gap`` row checks the resident bytes against the
+    ``chunk_stats.bytes_ideal`` prediction.  One sharded-engine
+    residency row pins the per-shard variant.
     """
     import jax
     import jax.numpy as jnp
@@ -838,16 +843,32 @@ def bench_bytes(quick: bool = False) -> List[Row]:
     for log_n, m in scales:
         n, edges = _test_graph(log_n, m)
         g = fg.from_edges(n, edges)
-        cg = fg.compress_host(g, width=2)
+        cg = fg.compress_host(g)  # adaptive per-chunk widths (§12)
+        cg2 = fg.compress_host(g, width=2)
         e_raw = make_engine(g)
         e_cmp = make_engine(cg)
         me = int(g.m)
         tag = f"n=2^{log_n},m={me}"
         pool_raw = g.keys.nbytes / me
         pool_cmp = cz.stream_nbytes(cg.dst) / me
+        pool_f2 = cz.stream_nbytes(cg2.dst) / me
+        ideal = fg.chunk_stats(g)["bytes_ideal"] / me
         rows += [
             (f"BYTES/pool_raw/{tag}", pool_raw, "B/edge", "packed int64 keys"),
-            (f"BYTES/pool_comp/{tag}", pool_cmp, "B/edge", "int16 delta chunks"),
+            (f"BYTES/pool_comp/{tag}", pool_cmp, "B/edge", "adaptive-width delta chunks"),
+            (f"BYTES/pool_fixed2/{tag}", pool_f2, "B/edge", "fixed int16 delta chunks"),
+            (
+                f"BYTES/pool_adaptive_gain/{tag}",
+                pool_f2 / pool_cmp,
+                "x",
+                "fixed-int16 / adaptive bytes; >= 1 by construction",
+            ),
+            (
+                f"BYTES/pool_ideal_gap/{tag}",
+                pool_cmp / ideal,
+                "x",
+                "resident / bytes_ideal; target <= 1.05",
+            ),
             (f"BYTES/pool_ratio/{tag}", pool_raw / pool_cmp, "x", "paper: 4.7-11.3x (T2)"),
             (
                 f"BYTES/resident_raw/{tag}",
@@ -890,7 +911,7 @@ def bench_bytes(quick: bool = False) -> List[Row]:
     # sharded residency at the smallest scale (the per-shard variant)
     n, edges = _test_graph(11, 30_000, seed=1)
     sg = sp.graph_from_edges(n, edges, n_shards=2)
-    csg = sp.compress_sharded(sg, width=2)
+    csg = sp.compress_sharded(sg)  # adaptive per-chunk widths
     es_raw = make_engine(sg)
     es_cmp = make_engine(csg)
     me = sp.graph_num_edges(sg)

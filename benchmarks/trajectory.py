@@ -1,0 +1,118 @@
+"""Perf-trajectory appender: one committed JSON file per tracked bench.
+
+    PYTHONPATH=src python -m benchmarks.trajectory --bench bytes \
+        --out BENCH_BYTES.json [--quick] [--rows rows.json]
+
+Each tracked bench (BYTES, SHARD, INCR today) keeps an append-per-run
+file at the repo root: a JSON list of run records, newest last, so the
+measurement history travels with the code and ``benchmarks.compare``
+can gate a fresh run against the last committed record.
+
+Run record schema::
+
+    {
+      "sha":   "<git HEAD at measurement time, 'unknown' outside git>",
+      "date":  "<UTC ISO-8601>",
+      "quick": true,
+      "bench": "bytes",
+      "rows":  [{"name": ..., "value": ..., "unit": ..., "notes": ...}]
+    }
+
+``--rows`` appends pre-computed rows (the ``--json`` output of
+``benchmarks.run``) instead of re-running the bench — CI measures once
+and both archives and compares the same numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import subprocess
+import sys
+
+
+def git_sha(cwd: str | None = None) -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=cwd,
+            capture_output=True,
+            text=True,
+            timeout=10,
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except Exception:  # noqa: BLE001
+        return "unknown"
+
+
+def load_trajectory(path: str) -> list:
+    """The run list at ``path`` ([] when absent); tolerates a legacy
+    plain-rows file by wrapping it as one sha-less record."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise ValueError(f"{path}: expected a JSON list of run records")
+    if data and isinstance(data[0], dict) and "rows" not in data[0]:
+        # plain benchmarks.run --json row list
+        return [{"sha": "unknown", "date": "", "quick": True, "rows": data}]
+    return data
+
+
+def append_run(path: str, rows: list, *, bench: str, quick: bool, sha: str | None = None) -> dict:
+    runs = load_trajectory(path)
+    record = {
+        "sha": sha if sha is not None else git_sha(os.path.dirname(os.path.abspath(path)) or None),
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(timespec="seconds"),
+        "quick": bool(quick),
+        "bench": bench,
+        "rows": rows,
+    }
+    runs.append(record)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(runs, f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
+    return record
+
+
+def run_bench(bench: str, quick: bool) -> list:
+    from benchmarks.tables import ALL_BENCHES
+
+    if bench not in ALL_BENCHES:
+        raise SystemExit(f"unknown bench {bench!r}; one of {sorted(ALL_BENCHES)}")
+    rows = ALL_BENCHES[bench](quick=quick)
+    return [
+        {"name": n, "value": v, "unit": u, "notes": notes}
+        for n, v, u, notes in rows
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", required=True, help="bench name from ALL_BENCHES")
+    ap.add_argument("--out", required=True, help="trajectory JSON to append to")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--rows", default=None, help="pre-computed rows JSON (skip re-running)"
+    )
+    args = ap.parse_args()
+
+    if args.rows:
+        with open(args.rows) as f:
+            rows = json.load(f)
+    else:
+        rows = run_bench(args.bench, args.quick)
+    rec = append_run(args.out, rows, bench=args.bench, quick=args.quick)
+    print(
+        f"appended {len(rows)} rows for {args.bench} @ {rec['sha'][:12]} -> {args.out}",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -29,8 +29,10 @@ import time
 
 import numpy as np
 
+from repro.core import compressed as cz
 from repro.core import flat_graph as fg, graph as G
 from repro.core import sharded_pool as sp
+from repro.core.streaming import MIRROR, AspenStream
 from repro.core.traversal import NumpyEngine, make_engine
 from repro.core.traversal import algorithms as talg
 from repro.data.rmat import rmat_edges, symmetrize
@@ -51,5 +53,23 @@ assert np.array_equal(p_np, talg.bfs(eng_sh, src)), "sharded BFS parents diverge
 assert np.array_equal(
     talg.connected_components(eng_np), talg.connected_components(eng_sh)
 ), "sharded CC labels diverge"
-print(f"parity OK (bfs/pagerank/cc x 3 backends, n={n}, m={edges.shape[0]}) in {time.time() - t0:.1f}s")
+
+# adaptive-width compressed mirror (compressed=True streams, DESIGN.md §12):
+# the resident pool must carry width tags, decode exactly, and cost no more
+# bytes than the fixed int16 layout
+stream = AspenStream(G.build_graph(n, edges), compressed=True)
+v = stream.acquire()
+cg = v.aux[MIRROR]  # the RESIDENT mirror (flat_graph() would decompress)
+stream.release(v)
+assert cg.dst.adaptive, "compressed stream mirror is not adaptive-width"
+assert not bool(np.asarray(cg.dst.spill)), "adaptive mirror spilled"
+assert cz.stream_nbytes(cg.dst) <= cz.stream_nbytes(
+    fg.compress_host(fg.from_edges(n, edges), width=2).dst
+), "adaptive pool larger than fixed int16"
+eng_cz = stream.engine("jax")
+assert np.array_equal(p_np, talg.bfs(eng_cz, src)), "compressed BFS parents diverge"
+assert np.allclose(
+    talg.pagerank(eng_np, iters=5), talg.pagerank(eng_cz, iters=5), atol=1e-5
+), "compressed PageRank diverges"
+print(f"parity OK (bfs/pagerank/cc x 3 backends + adaptive compressed, n={n}, m={edges.shape[0]}) in {time.time() - t0:.1f}s")
 EOF

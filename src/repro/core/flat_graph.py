@@ -307,7 +307,9 @@ def src_from_offsets(offsets: jax.Array, cap: int) -> jax.Array:
     return (jnp.searchsorted(offsets, slots, side="right") - 1).astype(jnp.int32)
 
 
-def _compress_impl(g: FlatGraph, width: int, k: int) -> CompressedPool:
+def _compress_impl(
+    g: FlatGraph, width: int, k: int, hi_cap: int | None = None
+) -> CompressedPool:
     cap = g.edge_capacity
     _, dst = unpack(g.keys)
     # Pad slots hold SENT64 (dst lane decodes to -1); encoding that cliff
@@ -316,17 +318,23 @@ def _compress_impl(g: FlatGraph, width: int, k: int) -> CompressedPool:
     # from ``m`` anyway, the encoded pad content is never observed.
     last = dst[jnp.maximum(g.m - 1, 0)]
     dst_enc = jnp.where(jnp.arange(cap) < g.m, dst, last)
-    stream = cz.encode_stream(dst_enc, width=width, k=k)
+    if hi_cap is None:
+        stream = cz.encode_stream(dst_enc, width=width, k=k)
+    else:  # adaptive per-chunk widths; ``width`` is ignored
+        stream = cz.encode_stream_adaptive(dst_enc, hi_cap=hi_cap, k=k)
     w = g.weights
     if w is not None and stream.length > cap:
         w = jnp.pad(w, (0, stream.length - cap))
     return CompressedPool(g.offsets, stream, g.m.astype(jnp.int32), w)
 
 
-compress = functools.partial(jax.jit, static_argnames=("width", "k"))(
-    lambda g, width=2, k=cz.OVF_SLOTS: _compress_impl(g, width, k)
+compress = functools.partial(
+    jax.jit, static_argnames=("width", "k", "hi_cap")
+)(lambda g, width=2, k=cz.OVF_SLOTS, hi_cap=None: _compress_impl(g, width, k, hi_cap))
+compress.__doc__ = (
+    "jit FlatGraph -> CompressedPool (static lane width/escape capacity;"
+    " hi_cap selects the adaptive per-chunk-width layout)."
 )
-compress.__doc__ = "jit FlatGraph -> CompressedPool (static lane width/escape capacity)."
 
 
 def _decompress_impl(cg: CompressedPool) -> FlatGraph:
@@ -346,33 +354,44 @@ decompress.__doc__ = (
 
 
 def compress_host(
-    g: FlatGraph, width: int | None = None, k: int = cz.OVF_SLOTS
+    g: FlatGraph,
+    width: int | None = None,
+    k: int = cz.OVF_SLOTS,
+    hi_headroom: float = 0.0,
 ) -> CompressedPool:
-    """Host build: compress with lane-width auto-selection and a one-time
-    spill check (the one place a host sync is acceptable — builds and
+    """Host build: compress with width selection and a one-time spill
+    check (the one place a host sync is acceptable — builds and
     rebuilds, not the streaming hot path).
 
-    ``width=None`` picks int8 when the graph's delta profile stays within
-    an average of one escape per chunk, else int16.  Raises if even the
-    int16 lane spills (> k escapes in some chunk) — the caller keeps the
-    raw layout; silent corruption is never an option.
+    ``width=None`` (the default) builds the ADAPTIVE per-chunk-width
+    layout: encode once with a full-capacity hi plane, then slice the
+    plane to exactly the wide-chunk count — resident bytes match
+    ``chunk_stats(g)["bytes_ideal"]`` by construction.  ``hi_headroom``
+    reserves extra hi rows as a fraction of the chunk count so streaming
+    updates can widen chunks in place without spilling (0.0 = exact
+    fit).  ``width=1|2`` pins the fixed-width layout.  Raises if the
+    stream spills its escape lane either way — the caller keeps the raw
+    layout; silent corruption is never an option.
     """
-    widths = (1, 2) if width is None else (width,)
-    cg = None
-    for w in widths:
-        cg = compress(g, width=w, k=k)
+    if width is None:
+        R = (max(g.edge_capacity, 1) + cz.CHUNK - 1) // cz.CHUNK
+        cg = compress(g, k=k, hi_cap=R)
         if bool(cg.dst.spill):
-            cg = None
-            continue
-        if width is None and w == 1:
-            used = int(np.asarray(cg.dst.ovf_pos < cz.CHUNK).sum())
-            if used > cg.dst.anchors.shape[0]:  # > 1 escape/chunk average
-                cg = None
-                continue
-        break
-    if cg is None:
+            raise ValueError(
+                f"graph spills the k={k} escape lane even at adaptive "
+                "(int16-wide) chunks; keep the raw pool (delta gaps "
+                "exceed the chunk escape budget)"
+            )
+        n_wide = int(np.asarray(cg.dst.wide).sum())
+        hi_cap = n_wide
+        if hi_headroom > 0.0:
+            hi_cap = min(R, n_wide + max(4, int(np.ceil(hi_headroom * R))))
+        hi = jnp.asarray(np.asarray(cg.dst.hi)[:hi_cap])
+        return cg._replace(dst=cg.dst._replace(hi=hi))
+    cg = compress(g, width=width, k=k)
+    if bool(cg.dst.spill):
         raise ValueError(
-            f"graph spills the k={k} escape lane even at int16 deltas; "
+            f"graph spills the k={k} escape lane at width={width} deltas; "
             "keep the raw pool (delta gaps exceed the chunk escape budget)"
         )
     return cg
@@ -394,13 +413,16 @@ def insert_edges_compressed(
     n_out: int | None = None,
 ) -> CompressedPool:
     """InsertEdges on the compressed pool: decompress -> rank-merge ->
-    recompress, one jit.  Lane width and escape capacity are inherited
-    from the input stream (static via its dtypes/shapes), so a whole
-    update stream reuses one compiled step.  The output spill flag ORs in
-    the input's — once a stream spills it stays flagged until rebuilt."""
+    recompress, one jit.  Lane width (or the adaptive layout's hi-plane
+    capacity) and escape capacity are inherited from the input stream
+    (static via its dtypes/shapes) — adaptive streams re-select each
+    chunk's width on recompress — so a whole update stream reuses one
+    compiled step.  The output spill flag ORs in the input's — once a
+    stream spills it stays flagged until rebuilt."""
     g = _decompress_impl(cg)
     g2 = _insert_edges_impl(g, batch, out_cap, optimized, n_out)
-    out = _compress_impl(g2, cg.dst.width, cg.dst.k)
+    hi_cap = cg.dst.hi.shape[-2] if cg.dst.hi is not None else None
+    out = _compress_impl(g2, cg.dst.width, cg.dst.k, hi_cap)
     return out._replace(dst=out.dst._replace(spill=out.dst.spill | cg.dst.spill))
 
 
@@ -411,7 +433,8 @@ def delete_edges_compressed(
     """DeleteEdges on the compressed pool (see ``insert_edges_compressed``)."""
     g = _decompress_impl(cg)
     g2 = _delete_edges_impl(g, batch, out_cap)
-    out = _compress_impl(g2, cg.dst.width, cg.dst.k)
+    hi_cap = cg.dst.hi.shape[-2] if cg.dst.hi is not None else None
+    out = _compress_impl(g2, cg.dst.width, cg.dst.k, hi_cap)
     return out._replace(dst=out.dst._replace(spill=out.dst.spill | cg.dst.spill))
 
 
@@ -423,10 +446,14 @@ def chunk_stats(
     Wires the canonical ``chunk_structure`` boundaries (hash heads — the
     paper's recomputable chunking) alongside the fixed-geometry chunks the
     device layout actually uses, and reports per-chunk delta widths and
-    escape counts.  ``tests/test_compressed.py`` checks these numbers
-    against what ``compress`` really builds; the BYTES bench reports
-    ``bytes_ideal`` (per-chunk int8/int16 width selection) next to the
-    resident uniform-width layout.
+    escape counts.  ``bytes_ideal`` is the EXACT resident byte count of
+    the adaptive per-chunk-width layout (``compress_host(g)``): the stat
+    and the encoder agree by construction — a chunk goes wide iff more
+    than ``k`` of its deltas overflow int8, and the layout pays
+    anchors(4) + lane(CHUNK) + wide tag(1) + escape slots(8k) per chunk
+    plus CHUNK hi-plane bytes per wide chunk.  ``tests/test_compressed.py``
+    pins ``bytes_ideal == stream_nbytes`` of the built pool on RMAT
+    streams; the BYTES bench reports it next to the fixed-width layouts.
     """
     heads = np.asarray(chunk_structure(g, b, seed))
     m = int(g.m)
@@ -451,12 +478,10 @@ def chunk_stats(
     bytes_fixed = {
         w: R * (4 + w * cz.CHUNK + ovf_bytes) for w in (1, 2)
     }
-    per_chunk_ideal = np.where(
-        width_per_chunk < 4,
-        4 + width_per_chunk * cz.CHUNK
-        + 8 * np.where(width_per_chunk == 1, esc8, esc16),
-        4 * cz.CHUNK,  # incompressible chunk: raw int32 lane
-    )
+    # the adaptive encoder's exact width rule + byte accounting
+    wide = esc8 > k
+    n_wide = int(wide.sum())
+    bytes_ideal = R * (4 + cz.CHUNK + 1 + ovf_bytes) + n_wide * cz.CHUNK
     return {
         "canonical_chunks": int(heads.sum()),
         "fixed_chunks": R,
@@ -467,7 +492,8 @@ def chunk_stats(
         "spill_i8": bool((esc8 > k).any()),
         "spill_i16": bool((esc16 > k).any()),
         "bytes_fixed": bytes_fixed,
-        "bytes_ideal": int(per_chunk_ideal.sum()),
+        "n_wide": n_wide,
+        "bytes_ideal": int(bytes_ideal),
     }
 
 

@@ -613,7 +613,7 @@ class CompressedShardedGraph(NamedTuple):
 
 
 def _compress_pool_impl(
-    p: ShardedPool, n: int, width: int, k: int
+    p: ShardedPool, n: int, width: int, k: int, hi_cap: int | None = None
 ) -> CompressedShardedPool:
     S, cap = p.data.shape
     bounds = jnp.arange(n + 1, dtype=jnp.int64) << 32
@@ -626,6 +626,8 @@ def _compress_pool_impl(
         # ``_compress_impl``; decompress re-masks pad slots from ``n``).
         last = dst[jnp.maximum(nrow - 1, 0)]
         dst_enc = jnp.where(jnp.arange(cap) < nrow, dst, last)
+        if hi_cap is not None:
+            return offs, cz._encode_adaptive_impl(dst_enc, hi_cap, k)
         return offs, cz._encode_impl(dst_enc, width, k)
 
     offsets, stream = jax.vmap(row)(p.data, p.n)
@@ -635,7 +637,7 @@ def _compress_pool_impl(
     return CompressedShardedPool(offsets, stream, p.n, p.lo, vals)
 
 
-compress_pool = functools.partial(jax.jit, static_argnums=(1, 2, 3))(
+compress_pool = functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))(
     _compress_pool_impl
 )
 compress_pool.__doc__ = (
@@ -670,30 +672,39 @@ decompress_pool.__doc__ = (
 
 
 def compress_sharded(
-    sg: ShardedGraph, width: int | None = None, k: int = cz.OVF_SLOTS
+    sg: ShardedGraph,
+    width: int | None = None,
+    k: int = cz.OVF_SLOTS,
+    hi_headroom: float = 0.0,
 ) -> CompressedShardedGraph:
-    """Host build with lane-width auto-selection and a one-time spill
-    check, mirroring ``flat_graph.compress_host``: int8 when the delta
-    profile stays within ~1 escape/chunk on average, else int16; raises
-    if any shard row spills even at int16 (keep the raw layout)."""
-    widths = (1, 2) if width is None else (width,)
-    cp = None
-    for w in widths:
-        cp = compress_pool(sg.pool, sg.n, w, k)
+    """Host build mirroring ``flat_graph.compress_host``: the default is
+    the ADAPTIVE per-chunk-width layout (one int8 lane + a compacted
+    hi-byte plane sized by the widest shard's wide-chunk count, plus
+    ``hi_headroom`` slack rows for streaming growth); pass an explicit
+    ``width`` (1 or 2) for the fixed layouts.  Raises if any shard row
+    spills even at the widest encoding (keep the raw layout)."""
+    if width is None:
+        S, cap = sg.pool.data.shape
+        R = (max(cap, 1) + cz.CHUNK - 1) // cz.CHUNK
+        cp = compress_pool(sg.pool, sg.n, 0, k, R)
         if bool(np.asarray(cp.dst.spill).any()):
-            cp = None
-            continue
-        if width is None and w == 1:
-            used = int(np.asarray(cp.dst.ovf_pos < cz.CHUNK).sum())
-            n_chunks = int(np.prod(cp.dst.anchors.shape))
-            if used > n_chunks:  # > 1 escape/chunk average
-                cp = None
-                continue
-        break
-    if cp is None:
+            raise ValueError(
+                f"sharded pool spills the k={k} escape lane even at "
+                "adaptive (int16-wide) chunks; keep the raw layout"
+            )
+        # Exact-fit slice of the hi plane: the leaf is one (S, H, CHUNK)
+        # array, so H is the max wide-chunk count over shards (+ slack).
+        n_wide = int(np.asarray(cp.dst.wide).sum(axis=-1).max())
+        slack = 0 if hi_headroom <= 0 else max(4, int(np.ceil(hi_headroom * R)))
+        hc = min(R, n_wide + slack)
+        hi = jnp.asarray(np.asarray(cp.dst.hi)[:, :hc])
+        cp = cp._replace(dst=cp.dst._replace(hi=hi))
+        return CompressedShardedGraph(cp, sg.n)
+    cp = compress_pool(sg.pool, sg.n, width, k)
+    if bool(np.asarray(cp.dst.spill).any()):
         raise ValueError(
-            f"sharded pool spills the k={k} escape lane even at int16 "
-            "deltas; keep the raw layout"
+            f"sharded pool spills the k={k} escape lane at the requested "
+            "fixed width; keep the raw layout"
         )
     return CompressedShardedGraph(cp, sg.n)
 
@@ -728,7 +739,8 @@ def make_insert_step_compressed(mesh: Mesh, axis_names: Tuple[str, ...]):
     ) -> CompressedShardedPool:
         p = _decompress_pool_impl(cpool)
         p2 = raw_step(p, batch, batch_vals)
-        out = _compress_pool_impl(p2, n, cpool.dst.width, cpool.dst.k)
+        hi_cap = cpool.dst.hi.shape[-2] if cpool.dst.hi is not None else None
+        out = _compress_pool_impl(p2, n, cpool.dst.width, cpool.dst.k, hi_cap)
         return _or_spill(out, cpool)
 
     return step
@@ -745,7 +757,8 @@ def make_delete_step_compressed(mesh: Mesh, axis_names: Tuple[str, ...]):
     ) -> CompressedShardedPool:
         p = _decompress_pool_impl(cpool)
         p2 = raw_step(p, batch)
-        out = _compress_pool_impl(p2, n, cpool.dst.width, cpool.dst.k)
+        hi_cap = cpool.dst.hi.shape[-2] if cpool.dst.hi is not None else None
+        out = _compress_pool_impl(p2, n, cpool.dst.width, cpool.dst.k, hi_cap)
         return _or_spill(out, cpool)
 
     return step
@@ -764,4 +777,68 @@ def rebalance_compressed(
     recompress).  Only sound on non-spilled streams — a spilled pool no
     longer round-trips and must be rebuilt from its source edges."""
     p = rebalance(decompress_pool(cp), cap_per=cap_per)
-    return compress_pool(p, n, cp.dst.width, cp.dst.k)
+    hi_cap = None
+    if cp.dst.hi is not None:
+        # Capacity may have grown: re-derive the plane bound from the new
+        # row capacity, keeping at least the old plane's slack.
+        new_cap = p.data.shape[1]
+        R = (max(new_cap, 1) + cz.CHUNK - 1) // cz.CHUNK
+        hi_cap = min(R, max(cp.dst.hi.shape[-2], 1))
+    return compress_pool(p, n, cp.dst.width, cp.dst.k, hi_cap)
+
+
+# ---------------------------------------------------------------------------
+# shard auto-tuning: imbalance stats -> rebalance policy + shard-count hint
+# ---------------------------------------------------------------------------
+
+
+def imbalance_stats(p) -> dict:
+    """Shard occupancy skew summary from the counts the pool already
+    tracks (``p.n``): max/mean ratio is the load-balance figure the
+    range partition degrades toward under skewed key streams.  Accepts a
+    ShardedPool, CompressedShardedPool, or a raw counts array."""
+    counts = np.asarray(getattr(p, "n", p), dtype=np.float64).reshape(-1)
+    if counts.size == 0 or counts.sum() == 0:
+        return {"max": 0.0, "mean": 0.0, "imbalance": 1.0}
+    mean = float(counts.mean())
+    mx = float(counts.max())
+    return {"max": mx, "mean": mean, "imbalance": mx / mean if mean else 1.0}
+
+
+def recommend_n_shards(m_total: int, target_per_shard: int = 1 << 16) -> int:
+    """Shard-count hint: enough shards to keep ~``target_per_shard``
+    edges per shard, snapped to a mesh-friendly count (a multiple of the
+    device count when more than one round is needed, so every device
+    carries equal rows)."""
+    nd = max(1, jax.device_count())
+    want = max(1, -(-int(m_total) // int(target_per_shard)))
+    if want <= nd:
+        return want
+    return -(-want // nd) * nd  # round up to a device-count multiple
+
+
+def should_rebalance(
+    p, *, imbalance_threshold: float = 2.0, slack: float = 0.9
+) -> bool:
+    """Auto-rebalance trigger: any shard nears capacity (the existing
+    ``needs_rebalance`` criterion, capacity read off either layout) OR
+    the max/mean occupancy ratio exceeds ``imbalance_threshold`` — skew
+    wastes the per-shard compute budget long before capacity overflows.
+    Works on both raw and compressed pools (counts + capacity are plain
+    attributes of each)."""
+    cap = p.cap_per if hasattr(p, "cap_per") else p.data.shape[1]
+    near_cap = bool((np.asarray(p.n) >= slack * cap).any())
+    return near_cap or imbalance_stats(p)["imbalance"] > imbalance_threshold
+
+
+def maybe_rebalance(
+    p: ShardedPool, *, imbalance_threshold: float = 2.0, slack: float = 0.9
+):
+    """``should_rebalance`` + the rebalance itself for raw pools; returns
+    ``(pool, rebalanced)``.  Compressed pools go through
+    ``rebalance_compressed`` (the caller holds the static ``n``)."""
+    if not should_rebalance(
+        p, imbalance_threshold=imbalance_threshold, slack=slack
+    ):
+        return p, False
+    return rebalance(p), True

@@ -54,6 +54,11 @@ from .versioning import DELTA, Delta, Version, VersionedGraph
 MIRROR = "flat"  # aux key of the FlatGraph mirror on a Version
 SHARDED_MIRROR = "sharded"  # aux key of the ShardedGraph mirror
 
+# hi-plane slack for adaptive compressed mirrors: fraction of chunk rows
+# reserved beyond the build-time wide-chunk count, so incremental
+# recompression absorbs width drift between full rebuilds
+HI_HEADROOM = 1 / 16
+
 
 class AspenStream:
     def __init__(
@@ -140,12 +145,15 @@ class AspenStream:
             if self._compressed:
                 from . import sharded_pool as sp
 
-                return sp.compress_sharded(sg, width=2)
+                # Adaptive per-chunk widths with hi-plane headroom: the
+                # mirror keeps slack wide-chunk rows so incremental
+                # recompression absorbs width drift between rebuilds.
+                return sp.compress_sharded(sg, hi_headroom=HI_HEADROOM)
             return sg
         if self._compressed:
             from . import flat_graph as fg
 
-            return fg.compress_host(flat, width=2)
+            return fg.compress_host(flat, hi_headroom=HI_HEADROOM)
         return flat
 
     @staticmethod
@@ -276,6 +284,12 @@ class AspenStream:
                     pool, mirror.n,
                     cap_per=max(pool.cap_per, fct.grown_capacity(per + k)),
                 )
+            elif sp.should_rebalance(pool):
+                # Auto-rebalance policy: the per-batch host read of the
+                # counts doubles as the imbalance probe — rebalance when
+                # skew (max/mean occupancy) crosses the threshold, long
+                # before any shard hits capacity.
+                pool = sp.rebalance_compressed(pool, mirror.n)
             pool = self._s_insert_c(pool, batch.data, batch.vals, n=n_out)
             return sp.CompressedShardedGraph(pool, n_out)
         if weights is not None and pool.vals is None:
@@ -286,6 +300,8 @@ class AspenStream:
             pool = sp.rebalance(
                 pool, cap_per=max(cap_per, fct.grown_capacity(per + k))
             )
+        elif sp.should_rebalance(pool):
+            pool = sp.rebalance(pool)
         pool = self._s_insert(pool, batch.data, batch.vals)
         return sp.ShardedGraph(pool, n_out)
 
@@ -311,6 +327,28 @@ class AspenStream:
             return self._sharded_delete(mirror, edges)
         return self._mirror_delete(mirror, edges)
 
+    def _heal_spill(self, m, g2: G.Graph):
+        """Compressed-mirror self-heal: incremental recompression can
+        overflow the escape lane or (adaptive streams) the hi plane —
+        the step folds that into the sticky ``spill`` flag rather than
+        branching in-trace.  One host flag-read per publish catches it
+        here, and the mirror is rebuilt from the tree (which re-selects
+        widths and re-sizes the hi plane from scratch) BEFORE the spilled
+        state can be published — readers never observe a mis-decoding
+        mirror."""
+        if not self._compressed or m is None:
+            return m
+        from . import flat_graph as fg
+        from . import sharded_pool as sp
+
+        if isinstance(m, fg.CompressedPool):
+            spilled = bool(np.asarray(m.dst.spill))
+        elif isinstance(m, sp.CompressedShardedGraph):
+            spilled = bool(np.asarray(m.pool.dst.spill).any())
+        else:
+            return m
+        return self._mirror_from_tree(g2) if spilled else m
+
     def _publish(self, tree_fn, mirror_fn, delta: Optional[Delta] = None) -> Version[G.Graph]:
         """One writer transaction: update tree + mirror from the held
         version, publish both atomically as a single new version.
@@ -331,9 +369,10 @@ class AspenStream:
             aux = {} if delta is None else {DELTA: delta}
             if self._mirror_enabled:
                 m = v.aux.get(self._mirror_kind)
-                aux[self._mirror_kind] = (
+                m2 = (
                     mirror_fn(m, v.graph, g2) if m is not None else self._mirror_from_tree(g2)
                 )
+                aux[self._mirror_kind] = self._heal_spill(m2, g2)
             return g2, (aux or None)
 
         with self._wlock:
@@ -440,6 +479,30 @@ class AspenStream:
             if flat is None:
                 flat = self._flat_from_tree(v.graph)
             return sharded_graph_of_flat(flat)
+        finally:
+            self.release(v)
+
+    def shard_stats(self) -> Optional[dict]:
+        """Occupancy skew of the current sharded mirror plus the policy
+        outputs derived from it: ``imbalance`` (max/mean shard counts),
+        whether the auto-rebalance trigger would fire, and the
+        recommended shard count for the current edge total (None on
+        streams without a sharded mirror)."""
+        from . import sharded_pool as sp
+
+        v = self.acquire()
+        try:
+            m = v.aux.get(SHARDED_MIRROR) if v.aux else None
+            if m is None:
+                return None
+            pool = m.pool
+            stats = sp.imbalance_stats(pool)
+            stats["n_shards"] = pool.n_shards if hasattr(pool, "n_shards") else pool.data.shape[0]
+            stats["should_rebalance"] = sp.should_rebalance(pool)
+            stats["recommended_n_shards"] = sp.recommend_n_shards(
+                int(np.asarray(pool.n).sum())
+            )
+            return stats
         finally:
             self.release(v)
 

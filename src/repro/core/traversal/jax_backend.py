@@ -1164,17 +1164,29 @@ class CompressedAux(NamedTuple):
     w_by_dst: Optional[jax.Array] = None  # float32[capC] values dst-major
 
 
-@jax.jit
-def engine_aux_compressed(cg: CompressedPool) -> CompressedAux:
+@functools.partial(jax.jit, static_argnames=("aux_hi_cap",))
+def engine_aux_compressed(
+    cg: CompressedPool, aux_hi_cap: Optional[int] = None
+) -> CompressedAux:
     """One jit: decompress -> ``engine_aux`` -> re-compress the big int
     lanes.  The uncompressed aux is a transient of this trace; resident
     state is the compressed pytree.  Lane width / escape capacity are
-    inherited from the pool stream (static via dtypes)."""
+    inherited from the pool stream (static via dtypes/shapes): an
+    adaptive pool gets adaptive aux lanes, with hi capacity inherited
+    from the pool's plane unless ``aux_hi_cap`` overrides it (the engine
+    retries at full capacity when only the aux lanes overflow — the aux
+    permutations need not share the pool's wide-chunk profile)."""
     g = _fg.decompress(cg)
     aux = engine_aux(g)
-    width, k = cg.dst.width, cg.dst.k
-    dst_sorted_c = cz.encode_stream(aux.dst_sorted, width=width, k=k)
-    srcbd_c = cz.encode_stream(aux.src_by_dst, width=width, k=k)
+    k = cg.dst.k
+    if cg.dst.hi is not None:
+        hi_cap = cg.dst.hi.shape[-2] if aux_hi_cap is None else aux_hi_cap
+        dst_sorted_c = cz.encode_stream_adaptive(aux.dst_sorted, hi_cap=hi_cap, k=k)
+        srcbd_c = cz.encode_stream_adaptive(aux.src_by_dst, hi_cap=hi_cap, k=k)
+    else:
+        width = cg.dst.width
+        dst_sorted_c = cz.encode_stream(aux.dst_sorted, width=width, k=k)
+        srcbd_c = cz.encode_stream(aux.src_by_dst, width=width, k=k)
     w = aux.w_by_dst
     if w is not None and dst_sorted_c.length > w.shape[0]:
         w = jnp.pad(w, (0, dst_sorted_c.length - w.shape[0]))
@@ -1299,9 +1311,12 @@ def _edge_map_reduce_compressed(caux: CompressedAux, values_b, *, n, dtype):
     msg = jnp.where(valid[None, :], values_b[:, src_by_dst], 0.0).T.astype(dtype)
     s = caux.dst_sorted_c
     if caux.w_by_dst is None:
-        return kops.segment_sum_chunked(s.anchors, s.deltas, s.ovf_pos, s.ovf_add, msg, n)
+        return kops.segment_sum_chunked(
+            s.anchors, s.deltas, s.ovf_pos, s.ovf_add, msg, n, hi=s.hi, wide=s.wide
+        )
     return kops.segment_sum_weighted_chunked(
-        s.anchors, s.deltas, s.ovf_pos, s.ovf_add, caux.w_by_dst, msg, n
+        s.anchors, s.deltas, s.ovf_pos, s.ovf_add, caux.w_by_dst, msg, n,
+        hi=s.hi, wide=s.wide,
     )
 
 
@@ -1341,9 +1356,22 @@ class CompressedEngine(JaxEngine):
         # Aux spill check: engine construction already syncs (int(cg.m)
         # above), so reading three flag bytes here is free — and a
         # spilled aux stream would silently mis-decode every query.
-        if bool(np.asarray(cg.dst.spill)) or bool(
-            np.asarray(self.caux.dst_sorted_c.spill)
-        ) or bool(np.asarray(self.caux.srcbd_c.spill)):
+        pool_spilled = bool(np.asarray(cg.dst.spill))
+        aux_spilled = bool(np.asarray(self.caux.dst_sorted_c.spill)) or bool(
+            np.asarray(self.caux.srcbd_c.spill)
+        )
+        if not pool_spilled and aux_spilled and aux is None and cg.dst.hi is not None:
+            # Adaptive aux lanes inherited the pool's (exact-fit) hi
+            # capacity but need more wide chunks than the pool did —
+            # retry once at full capacity before declaring a genuine
+            # escape-lane spill.
+            R = cg.dst.deltas.shape[-2]
+            self.caux = engine_aux_compressed(cg, aux_hi_cap=R)
+            self._degrees = self.caux.degrees
+            aux_spilled = bool(np.asarray(self.caux.dst_sorted_c.spill)) or bool(
+                np.asarray(self.caux.srcbd_c.spill)
+            )
+        if pool_spilled or aux_spilled:
             raise ValueError(
                 "compressed stream spilled its escape lane; rebuild the "
                 "snapshot with a wider delta lane or keep the raw engine"

@@ -414,6 +414,96 @@ def bfs_batch_sharded(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("n", "mesh", "float_dtype"))
+def bc_batch_sharded(
+    offsets,  # int32[S, n+1] CSR into each shard's own rows
+    src_c,  # int32[S, cap]
+    dst_c,  # int32[S, cap]
+    evalid,  # bool[S, cap]
+    src_by_dst,  # int32[S, cap]
+    valid_by_dst,  # bool[S, cap]
+    dst_offsets,  # int32[S, n+1]
+    sources,  # int32[B]
+    *,
+    n: int,
+    mesh: Mesh,
+    float_dtype=jnp.float32,
+) -> jax.Array:
+    """Multi-source Brandes dependency scores over the sharded pool,
+    fully in-trace — the sharded analogue of ``jax_backend.bc_batch``.
+
+    All per-lane state (sigma, depth, dep_acc) is replicated; each round
+    every device computes its shards' partial of the (+, x) segmented
+    row-sum and ONE psum merges it, in both the forward
+    (shortest-path-count) pass over the dst-major pool and the backward
+    (dependency) pass over the src-major CSR.  The round structure — one
+    collective per BFS level instead of one per edge_map sub-step — is
+    what the generic edge_map fallback cannot express."""
+
+    def local(offsets, src_c, dst_c, evalid, sbd, vbd, doff, sources):
+        B = sources.shape[0]
+        lane = jnp.arange(B)
+        src = sources.astype(jnp.int32)
+        sigma = jnp.zeros((B, n), float_dtype).at[lane, src].set(1.0)
+        depth = jnp.full((B, n), -1, jnp.int32).at[lane, src].set(0)
+        frontier = jnp.zeros((B, n), bool).at[lane, src].set(True)
+
+        def fcond(carry):
+            return carry[0].any()
+
+        def fbody(carry):
+            f, sig, dep, d = carry
+
+            def one_row(srow, vrow, brow):
+                w = jnp.where(
+                    f[:, srow] & vrow[None, :],
+                    sig[:, srow],
+                    jnp.zeros((), float_dtype),
+                )
+                return _segsum_rows(w, brow)
+
+            contrib = jax.lax.psum(
+                jax.vmap(one_row)(sbd, vbd, doff).sum(axis=0), AXIS
+            )
+            newly = (contrib > 0) & (dep < 0)
+            sig = sig + jnp.where(newly, contrib, 0)
+            return newly, sig, jnp.where(newly, d + 1, dep), d + 1
+
+        _, sigma, depth, d_final = jax.lax.while_loop(
+            fcond, fbody, (frontier, sigma, depth, jnp.int32(0))
+        )
+
+        def bcond(carry):
+            return carry[1] >= 0
+
+        def bbody(carry):
+            dep_acc, dd = carry
+
+            def one_row(off_row, srow, drow, ev):
+                du = depth[:, srow]
+                dv = depth[:, drow]
+                ok = ev[None, :] & (du == dd) & (dv == dd + 1)
+                ratio = sigma[:, srow] / jnp.maximum(sigma[:, drow], 1e-30)
+                contrib = jnp.where(ok, ratio * (1.0 + dep_acc[:, drow]), 0)
+                return _segsum_rows(contrib, off_row)
+
+            loc = jax.vmap(one_row)(offsets, src_c, dst_c, evalid).sum(axis=0)
+            return dep_acc + jax.lax.psum(loc, AXIS), dd - 1
+
+        dep, _ = jax.lax.while_loop(
+            bcond, bbody, (jnp.zeros((B, n), float_dtype), d_final - 2)
+        )
+        return dep.at[lane, src].set(0.0)
+
+    return _shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(_SPEC2,) * 7 + (P(),),
+        out_specs=P(),
+        check_rep=False,
+    )(offsets, src_c, dst_c, evalid, src_by_dst, valid_by_dst, dst_offsets, sources)
+
+
 def _sharded_bellman_ford(
     offsets, keys, degrees, sbd, vbd, doff, vals, wbd, m,
     dist, frontier,
@@ -849,6 +939,26 @@ class ShardedEngine(TraversalEngine):
         )
         return parents[:B], depths[:B]
 
+    def bc_batch(self, sources) -> jax.Array:
+        """Multi-source Brandes dependencies, one in-trace sharded driver
+        (``algorithms.bc_multi`` dispatches here instead of running
+        generic edge_map rounds)."""
+        padded, B = JaxEngine._quantized_sources(sources)
+        dep = bc_batch_sharded(
+            self.aux.offsets,
+            self.aux.src_c,
+            self.aux.dst_c,
+            self.aux.evalid,
+            self.aux.src_by_dst,
+            self.aux.valid_by_dst,
+            self.aux.dst_offsets,
+            padded,
+            n=self._n,
+            mesh=self.mesh,
+            float_dtype=self.ops.float_dtype,
+        )
+        return dep[:B]
+
     def sssp_batch(self, sources) -> jax.Array:
         padded, B = JaxEngine._quantized_sources(sources)
         weighted = self.sg.pool.vals is not None
@@ -943,15 +1053,24 @@ class CompressedShardAux(NamedTuple):
     w_by_dst: Optional[jax.Array] = None  # float32[S, cap] dst-major
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def shard_aux_compressed(cp: CompressedShardedPool, n: int) -> CompressedShardAux:
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def shard_aux_compressed(
+    cp: CompressedShardedPool, n: int, aux_hi_cap: Optional[int] = None
+) -> CompressedShardAux:
     """One jit: decompress -> ``shard_aux`` -> re-compress the big int
     lanes (vmapped per shard row, so GSPMD keeps the encode shard-local).
-    The uncompressed aux is a transient of this trace."""
+    The uncompressed aux is a transient of this trace.  An adaptive pool
+    gets adaptive aux lanes with the pool's hi capacity, overridable via
+    ``aux_hi_cap`` (the engine retries at full capacity when only the
+    aux permutation lanes overflow the inherited plane)."""
     p = _decompress_pool_impl(cp)
     aux = shard_aux(p, n)
     width, k = cp.dst.width, cp.dst.k
-    enc = jax.vmap(lambda v: cz._encode_impl(v, width, k))
+    if cp.dst.hi is not None:
+        hc = cp.dst.hi.shape[-2] if aux_hi_cap is None else aux_hi_cap
+        enc = jax.vmap(lambda v: cz._encode_adaptive_impl(v, hc, k))
+    else:
+        enc = jax.vmap(lambda v: cz._encode_impl(v, width, k))
     return CompressedShardAux(
         dst_sorted_c=enc(aux.dst_sorted),
         srcbd_c=enc(aux.src_by_dst),
@@ -1036,6 +1155,18 @@ def bfs_batch_sharded_compressed(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("n", "mesh", "float_dtype"))
+def bc_batch_sharded_compressed(
+    cp, caux, sources, *, n, mesh, float_dtype=jnp.float32
+):
+    p, aux = _inflate_sharded(cp, caux, n)
+    return bc_batch_sharded(
+        aux.offsets, aux.src_c, aux.dst_c, aux.evalid,
+        aux.src_by_dst, aux.valid_by_dst, aux.dst_offsets, sources,
+        n=n, mesh=mesh, float_dtype=float_dtype,
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("n", "ids_budget", "edge_budget", "mesh", "weighted", "float_dtype"),
@@ -1080,19 +1211,22 @@ def sssp_batch_sharded_from_compressed(
 
 
 def _reduce_partial_compressed(
-    anch, dl, pos, add, mv, bounds, wbd, values_b, n_pad, dtype
+    anch, dl, pos, add, hi, wide, mv, bounds, wbd, values_b, n_pad, dtype
 ):
     """Per-device partial of the (+, x) reduce with the src gather lane
     decoded INSIDE the shard-local function — the sharded half of the
     fused-decode contract (the sharded reduce is a segmented row-sum, not
     the Pallas kernel, so 'inside the kernel' here means inside the
     shard_map body where the operand never exists uncompressed outside
-    this trace)."""
+    this trace).  ``hi``/``wide`` are the adaptive-width leaves (None on
+    fixed-width streams); the per-row decode handles the width select."""
     no_spill = jnp.zeros((), bool)
 
-    def one(anch_r, dl_r, pos_r, add_r, mv_r, brow, wrow):
+    def one(anch_r, dl_r, pos_r, add_r, hi_r, wide_r, mv_r, brow, wrow):
         srow = cz.decode_rows(
-            cz.ChunkedStream(anch_r, dl_r, pos_r, add_r, no_spill)
+            cz.ChunkedStream(
+                anch_r, dl_r, pos_r, add_r, no_spill, hi=hi_r, wide=wide_r
+            )
         ).reshape(-1)
         vrow = jnp.arange(srow.shape[0]) < mv_r
         msg = jnp.where(vrow[None, :], values_b[:, srow], 0.0).astype(dtype)
@@ -1100,12 +1234,24 @@ def _reduce_partial_compressed(
             msg = msg * wrow[None, :].astype(dtype)
         return _segsum_rows(msg, brow)
 
-    if wbd is None:
-        parts = jax.vmap(lambda a, d, p, v, c, b: one(a, d, p, v, c, b, None))(
-            anch, dl, pos, add, mv, bounds
-        )
+    def vone(a, d, p, v, h, wd, c, b, w=None):
+        return one(a, d, p, v, h, wd, c, b, w)
+
+    if hi is None:
+        fone = lambda a, d, p, v, c, b, w=None: one(a, d, p, v, None, None, c, b, w)
+        if wbd is None:
+            parts = jax.vmap(lambda a, d, p, v, c, b: fone(a, d, p, v, c, b))(
+                anch, dl, pos, add, mv, bounds
+            )
+        else:
+            parts = jax.vmap(fone)(anch, dl, pos, add, mv, bounds, wbd)
     else:
-        parts = jax.vmap(one)(anch, dl, pos, add, mv, bounds, wbd)
+        if wbd is None:
+            parts = jax.vmap(
+                lambda a, d, p, v, h, wd, c, b: vone(a, d, p, v, h, wd, c, b)
+            )(anch, dl, pos, add, hi, wide, mv, bounds)
+        else:
+            parts = jax.vmap(vone)(anch, dl, pos, add, hi, wide, mv, bounds, wbd)
     partial = parts.sum(axis=0)  # (B, n)
     padded = jnp.pad(partial, ((0, 0), (0, n_pad - partial.shape[1])))
     return jax.lax.psum_scatter(padded, AXIS, scatter_dimension=1, tiled=True)
@@ -1125,24 +1271,43 @@ def _sharded_reduce_batch_compressed(
     dtype,
 ):
     n_pad = _round_up(max(n, 1), mesh.shape[AXIS])
-    stream = (srcbd_c.anchors, srcbd_c.deltas, srcbd_c.ovf_pos, srcbd_c.ovf_add)
+    adaptive = srcbd_c.hi is not None
+    if adaptive:
+        # hi is (S, H, CHUNK): shard axis leads, rest replicated per row
+        stream = (
+            srcbd_c.anchors, srcbd_c.deltas, srcbd_c.ovf_pos, srcbd_c.ovf_add,
+            srcbd_c.hi, srcbd_c.wide,
+        )
+        stream_specs = (_SPEC2,) * 4 + (P(AXIS, None, None), _SPEC2)
+    else:
+        stream = (srcbd_c.anchors, srcbd_c.deltas, srcbd_c.ovf_pos, srcbd_c.ovf_add)
+        stream_specs = (_SPEC2,) * 4
+    ns = len(stream)
+
+    def local(*args):
+        s, rest = args[:ns], args[ns:]
+        hi_l, wide_l = (s[4], s[5]) if adaptive else (None, None)
+        if weighted:
+            c, b, w, x = rest
+        else:
+            (c, b, x), w = rest, None
+        return _reduce_partial_compressed(
+            s[0], s[1], s[2], s[3], hi_l, wide_l, c, b, w, x, n_pad, dtype
+        )
+
     if weighted:
         out = _shard_map(
-            lambda a, d, p, v, c, b, w, x: _reduce_partial_compressed(
-                a, d, p, v, c, b, w, x, n_pad, dtype
-            ),
+            local,
             mesh=mesh,
-            in_specs=(_SPEC2,) * 4 + (P(AXIS), _SPEC2, _SPEC2, P()),
+            in_specs=stream_specs + (P(AXIS), _SPEC2, _SPEC2, P()),
             out_specs=P(None, AXIS),
             check_rep=False,
         )(*stream, m_valid, dst_offsets, w_by_dst, values_b)
     else:
         out = _shard_map(
-            lambda a, d, p, v, c, b, x: _reduce_partial_compressed(
-                a, d, p, v, c, b, None, x, n_pad, dtype
-            ),
+            local,
             mesh=mesh,
-            in_specs=(_SPEC2,) * 4 + (P(AXIS), _SPEC2, P()),
+            in_specs=stream_specs + (P(AXIS), _SPEC2, P()),
             out_specs=P(None, AXIS),
             check_rep=False,
         )(*stream, m_valid, dst_offsets, values_b)
@@ -1197,9 +1362,23 @@ class CompressedShardedEngine(ShardedEngine):
         # Spill check: construction already syncs (graph_num_edges), so
         # reading the flag rows here is free — a spilled stream would
         # silently mis-decode every query.
-        if bool(np.asarray(csg.pool.dst.spill).any()) or bool(
+        pool_spilled = bool(np.asarray(csg.pool.dst.spill).any())
+        aux_spilled = bool(
             np.asarray(self.caux.dst_sorted_c.spill).any()
-        ) or bool(np.asarray(self.caux.srcbd_c.spill).any()):
+        ) or bool(np.asarray(self.caux.srcbd_c.spill).any())
+        if (
+            not pool_spilled and aux_spilled and aux is None
+            and csg.pool.dst.hi is not None
+        ):
+            # Adaptive aux lanes inherited the pool's (exact-fit) hi
+            # capacity but need more wide chunks; retry once at full
+            # capacity before declaring a genuine escape-lane spill.
+            R = csg.pool.dst.deltas.shape[-2]
+            self.caux = shard_aux_compressed(csg.pool, csg.n, R)
+            aux_spilled = bool(
+                np.asarray(self.caux.dst_sorted_c.spill).any()
+            ) or bool(np.asarray(self.caux.srcbd_c.spill).any())
+        if pool_spilled or aux_spilled:
             raise ValueError(
                 "compressed sharded stream spilled its escape lane; "
                 "rebuild with a wider delta lane or keep the raw engine"
@@ -1276,6 +1455,14 @@ class CompressedShardedEngine(ShardedEngine):
             mesh=self.mesh,
         )
         return parents[:B], depths[:B]
+
+    def bc_batch(self, sources) -> jax.Array:
+        padded, B = JaxEngine._quantized_sources(sources)
+        dep = bc_batch_sharded_compressed(
+            self.csg.pool, self.caux, padded,
+            n=self._n, mesh=self.mesh, float_dtype=self.ops.float_dtype,
+        )
+        return dep[:B]
 
     def sssp_batch(self, sources) -> jax.Array:
         padded, B = JaxEngine._quantized_sources(sources)

@@ -125,6 +125,87 @@ def delta_decode_chunked(
     )
 
 
+def _decode_chunked_adaptive_kernel(
+    anchors_ref, deltas_ref, hi_ref, wide_ref, pos_ref, add_ref, out_ref, carry_ref
+):
+    """Adaptive-width variant of ``_decode_chunked_kernel``: the per-chunk
+    width select happens per element before the scan-carry cumsum —
+
+      delta = wide ? hi * 256 + (lane & 0xFF) : lane
+
+    with ``hi`` the pre-gathered hi-byte plane (ops.py resolves the
+    compacted plane's cumsum(wide)-1 row index in-trace; block specs
+    cannot express that data-dependent gather) and ``wide`` a (R, 1)
+    int32 tag riding every column block of its row.  Escape corrections
+    are unchanged."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        carry_ref[...] = anchors_ref[...]  # (R, 1) absolute anchors
+
+    lane = deltas_ref[...].astype(jnp.int32)  # (R, C) int8 lane
+    hi = hi_ref[...].astype(jnp.int32)
+    wide = wide_ref[...]  # (R, 1) int32
+    d = jnp.where(wide > 0, hi * 256 + (lane & 0xFF), lane)
+    c = jnp.cumsum(d, axis=1)
+    out = carry_ref[...] + c
+    R, C = d.shape
+    cols = j * C + jax.lax.broadcasted_iota(jnp.int32, (R, C), 1)
+    for k in range(pos_ref.shape[1]):  # static K, unrolled
+        out = out + jnp.where(cols >= pos_ref[:, k : k + 1], add_ref[:, k : k + 1], 0)
+    out_ref[...] = out
+    carry_ref[...] = carry_ref[...] + c[:, -1:]
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "col_block", "interpret"))
+def delta_decode_chunked_adaptive(
+    anchors: jax.Array,  # int32 (n_chunks,)
+    deltas: jax.Array,  # int8 (n_chunks, chunk_len) lane; col 0 MUST be 0
+    hi_g: jax.Array,  # int8 (n_chunks, chunk_len) pre-gathered hi bytes
+    wide: jax.Array,  # int32 (n_chunks,) nonzero = wide chunk
+    ovf_pos: jax.Array,  # int32 (n_chunks, K)
+    ovf_add: jax.Array,  # int32 (n_chunks, K)
+    row_block: int | None = None,
+    col_block: int = DEFAULT_COL_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode adaptive-width chunks (ChunkedStream rows with width tags):
+    branch-free per-chunk int8/int16 select inside the grid, then the
+    same scan-carry cumsum + escape corrections as
+    ``delta_decode_chunked``.  Shapes must be block multiples (ops.py
+    pads)."""
+    if row_block is None:
+        row_block = _row_block_for(deltas.dtype)
+    n_chunks, max_len = deltas.shape
+    K = ovf_pos.shape[1]
+    assert n_chunks % row_block == 0 and max_len % col_block == 0
+    grid = (n_chunks // row_block, max_len // col_block)
+    return pl.pallas_call(
+        _decode_chunked_adaptive_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((row_block, col_block), lambda i, j: (i, j)),
+            pl.BlockSpec((row_block, col_block), lambda i, j: (i, j)),
+            pl.BlockSpec((row_block, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((row_block, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((row_block, K), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block, col_block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, max_len), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((row_block, 1), jnp.int32)],
+        interpret=interpret,
+    )(
+        anchors.reshape(-1, 1).astype(jnp.int32),
+        deltas,
+        hi_g,
+        wide.reshape(-1, 1).astype(jnp.int32),
+        ovf_pos.astype(jnp.int32),
+        ovf_add.astype(jnp.int32),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("row_block", "col_block", "interpret"))
 def delta_decode_padded(
     anchors: jax.Array,  # int32 (n_chunks,)

@@ -13,12 +13,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import csr_spmm, delta_decode, flash_decode, segment_reduce
+from . import autotune, csr_spmm, delta_decode, flash_decode, segment_reduce
 
 
 def _interpret() -> bool:
     """Pallas interpret mode unless running on real TPU hardware."""
     return jax.default_backend() != "tpu"
+
+
+def _gather_hi(deltas: jax.Array, hi: jax.Array | None, wide: jax.Array | None):
+    """Resolve the compacted hi-byte plane to a per-chunk-aligned plane.
+
+    Adaptive streams store hi bytes only for wide chunks (compacted to
+    ``hi[cumsum(wide) - 1]``); Pallas block specs cannot express that
+    data-dependent gather, so the wrapper materialises the aligned
+    ``(R, C)`` plane as an XLA temporary before the kernel launch — the
+    resident operand stays the compacted plane.  Narrow rows gather
+    zeros, so the kernel's width select is safe without masking."""
+    if hi is None:
+        return jnp.zeros_like(deltas, dtype=jnp.int8)
+    H = hi.shape[-2]
+    if H == 0:
+        return jnp.zeros_like(deltas, dtype=jnp.int8)
+    idx = jnp.clip(jnp.cumsum(wide.astype(jnp.int32)) - 1, 0, H - 1)
+    return jnp.where(wide[:, None], hi[idx], jnp.int8(0))
 
 
 def _pad_to(x: np.ndarray | jax.Array, mult: int, axis: int, value=0):
@@ -64,22 +82,33 @@ def decode_chunked_stream(
     deltas: jax.Array,
     ovf_pos: jax.Array,
     ovf_add: jax.Array,
+    hi: jax.Array | None = None,
+    wide: jax.Array | None = None,
 ) -> jax.Array:
     """Decode escape-lane chunks (core/compressed.ChunkedStream arrays)
     via the Pallas kernel; pads chunk rows to the dtype-aware row block.
 
     Kernels take the raw arrays, not the ChunkedStream NamedTuple, so
     this package never imports from ``repro.core`` (no cycle); engine
-    callers unpack the stream.  Row padding uses anchor 0 / empty escape
-    slots (pos = chunk_len), which decode to benign zeros and are sliced
-    off."""
+    callers unpack the stream.  Pass ``hi``/``wide`` for adaptive-width
+    streams; the compacted hi plane is pre-gathered in-trace
+    (``_gather_hi``) and the width select runs inside the kernel.  Row
+    padding uses anchor 0 / empty escape slots (pos = chunk_len), which
+    decode to benign zeros and are sliced off."""
     n, L = deltas.shape
     rb = delta_decode._row_block_for(deltas.dtype)
     a = _pad_to(anchors, rb, 0)
     d = _pad_to(deltas, rb, 0)
     p = _pad_to(ovf_pos, rb, 0, value=L)
     v = _pad_to(ovf_add, rb, 0)
-    out = delta_decode.delta_decode_chunked(a, d, p, v, interpret=_interpret())
+    if hi is not None:
+        hg = _pad_to(_gather_hi(deltas, hi, wide), rb, 0)
+        wp = _pad_to(wide.astype(jnp.int32), rb, 0)
+        out = delta_decode.delta_decode_chunked_adaptive(
+            a, d, hg, wp, p, v, interpret=_interpret()
+        )
+    else:
+        out = delta_decode.delta_decode_chunked(a, d, p, v, interpret=_interpret())
     return out[:n]
 
 
@@ -118,56 +147,153 @@ def decode_pool(packed, total_len: int | None = None) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def segment_sum(dst: jax.Array, msg: jax.Array, n_out: int) -> jax.Array:
-    """Sorted segment-sum; pads edges with OOB dst and n_out to tile."""
+def _sweep_segment_sum(E: int, n_out: int, weighted: bool):
+    """sweep_fn factory: synthetic sorted segment-sum of the real shape.
+
+    The thunk passes explicit block params, so candidate timings bypass
+    the autotune consult (no recursion) and each candidate compiles its
+    own specialization."""
+    kernel = "segment_sum_weighted" if weighted else "segment_sum"
+
+    def make(params):
+        dst = jnp.sort(
+            jax.random.randint(
+                jax.random.PRNGKey(0), (max(E, 1),), 0, max(n_out, 1), dtype=jnp.int32
+            )
+        )
+        msg = jnp.ones((max(E, 1), 8), jnp.float32)
+        w = jnp.ones((max(E, 1),), jnp.float32)
+
+        def thunk():
+            if weighted:
+                return segment_sum_weighted(dst, w, msg, n_out, **params)
+            return segment_sum(dst, msg, n_out, **params)
+
+        return thunk
+
+    return kernel, make
+
+
+def segment_sum(
+    dst: jax.Array,
+    msg: jax.Array,
+    n_out: int,
+    edge_block: int | None = None,
+    dst_block: int | None = None,
+) -> jax.Array:
+    """Sorted segment-sum; pads edges with OOB dst and n_out to tile.
+
+    Block shapes default to the autotuned winner for this (backend,
+    shape-bucket) — consult happens at Python trace time since blocks
+    are static kernel arguments."""
     E = dst.shape[0]
-    n_pad = n_out + (-n_out) % segment_reduce.DST_BLOCK
-    d = _pad_to(dst, segment_reduce.EDGE_BLOCK, 0, value=n_pad)
-    m = _pad_to(msg, segment_reduce.EDGE_BLOCK, 0)
+    if edge_block is None or dst_block is None:
+        kernel, make = _sweep_segment_sum(E, n_out, weighted=False)
+        tuned = autotune.get_params("segment_sum", {"E": E, "n": n_out}, sweep_fn=make)
+        edge_block = edge_block or tuned["edge_block"]
+        dst_block = dst_block or tuned["dst_block"]
+    n_pad = n_out + (-n_out) % dst_block
+    d = _pad_to(dst, edge_block, 0, value=n_pad)
+    m = _pad_to(msg, edge_block, 0)
     # one extra dst block swallows padding edges
-    n_with_pad = n_pad + segment_reduce.DST_BLOCK
+    n_with_pad = n_pad + dst_block
     out = segment_reduce.segment_sum_sorted(
-        d, m, n_with_pad, interpret=_interpret()
+        d, m, n_with_pad, edge_block=edge_block, dst_block=dst_block,
+        interpret=_interpret(),
     )
     return out[:n_out]
 
 
 def segment_sum_weighted(
-    dst: jax.Array, w: jax.Array, msg: jax.Array, n_out: int
+    dst: jax.Array,
+    w: jax.Array,
+    msg: jax.Array,
+    n_out: int,
+    edge_block: int | None = None,
+    dst_block: int | None = None,
 ) -> jax.Array:
     """Weighted sorted segment-sum (out[d] = sum w[e] * msg[e]); same
     padding contract as ``segment_sum`` (weight pads are 0, so padding
     edges contribute nothing even before the OOB dst drop)."""
-    n_pad = n_out + (-n_out) % segment_reduce.DST_BLOCK
-    d = _pad_to(dst, segment_reduce.EDGE_BLOCK, 0, value=n_pad)
-    wp = _pad_to(w, segment_reduce.EDGE_BLOCK, 0)
-    m = _pad_to(msg, segment_reduce.EDGE_BLOCK, 0)
-    n_with_pad = n_pad + segment_reduce.DST_BLOCK
+    E = dst.shape[0]
+    if edge_block is None or dst_block is None:
+        _, make = _sweep_segment_sum(E, n_out, weighted=True)
+        tuned = autotune.get_params(
+            "segment_sum_weighted", {"E": E, "n": n_out}, sweep_fn=make
+        )
+        edge_block = edge_block or tuned["edge_block"]
+        dst_block = dst_block or tuned["dst_block"]
+    n_pad = n_out + (-n_out) % dst_block
+    d = _pad_to(dst, edge_block, 0, value=n_pad)
+    wp = _pad_to(w, edge_block, 0)
+    m = _pad_to(msg, edge_block, 0)
+    n_with_pad = n_pad + dst_block
     out = segment_reduce.segment_sum_weighted_sorted(
-        d, wp, m, n_with_pad, interpret=_interpret()
+        d, wp, m, n_with_pad, edge_block=edge_block, dst_block=dst_block,
+        interpret=_interpret(),
     )
     return out[:n_out]
 
 
-def _pad_chunked_dst(anchors, deltas, ovf_pos, ovf_add, msg, w, n_out):
+def _pad_chunked_dst(
+    anchors, deltas, ovf_pos, ovf_add, msg, w, n_out,
+    hi=None, wide=None, edge_block=None, dst_block=None,
+):
     """Shared padding for the chunked segment sums.
 
     Pads chunk rows to whole edge blocks; padding chunks carry anchor
     ``n_pad`` with zero deltas and empty escape slots, so every padded
     slot decodes to the same OOB dst that the raw path pads with — the
-    extra DST_BLOCK swallows them identically."""
+    extra DST_BLOCK swallows them identically.  Adaptive streams
+    additionally carry the pre-gathered hi plane and the wide tag; pad
+    rows are narrow (wide=0, hi=0), decoding identically to fixed pads."""
+    edge_block = edge_block or segment_reduce.EDGE_BLOCK
+    dst_block = dst_block or segment_reduce.DST_BLOCK
     R, C = deltas.shape
-    rpb = segment_reduce.EDGE_BLOCK // C
-    n_pad = n_out + (-n_out) % segment_reduce.DST_BLOCK
+    rpb = edge_block // C
+    n_pad = n_out + (-n_out) % dst_block
     a = _pad_to(anchors, rpb, 0, value=n_pad)
     d = _pad_to(deltas, rpb, 0)
     p = _pad_to(ovf_pos, rpb, 0, value=C)
     v = _pad_to(ovf_add, rpb, 0)
-    m = _pad_to(msg, segment_reduce.EDGE_BLOCK, 0)
-    wp = None if w is None else _pad_to(w, segment_reduce.EDGE_BLOCK, 0)
+    m = _pad_to(msg, edge_block, 0)
+    wp = None if w is None else _pad_to(w, edge_block, 0)
+    if hi is not None:
+        hg = _pad_to(_gather_hi(deltas, hi, wide), rpb, 0)
+        wd = _pad_to(wide.astype(jnp.int32), rpb, 0)
+    else:
+        hg = wd = None
     assert m.shape[0] == a.shape[0] * C, "msg rows must cover the padded stream"
-    n_with_pad = n_pad + segment_reduce.DST_BLOCK
-    return a, d, p, v, m, wp, n_with_pad
+    n_with_pad = n_pad + dst_block
+    return a, d, p, v, m, wp, hg, wd, n_with_pad
+
+
+def _sweep_segment_sum_chunked(R: int, C: int, n_out: int, weighted: bool, adaptive: bool):
+    """sweep_fn factory for the chunked reduces (synthetic stream of the
+    real chunk geometry; explicit block params bypass the consult)."""
+
+    def make(params):
+        anch = jnp.arange(max(R, 1), dtype=jnp.int32) % max(n_out, 1)
+        lane = jnp.zeros((max(R, 1), C), jnp.int8)
+        pos = jnp.full((max(R, 1), 8), C, jnp.int32)
+        add = jnp.zeros((max(R, 1), 8), jnp.int32)
+        msg = jnp.ones((max(R, 1) * C, 8), jnp.float32)
+        w = jnp.ones((max(R, 1) * C,), jnp.float32)
+        hi = jnp.zeros((1, C), jnp.int8) if adaptive else None
+        wd = jnp.zeros((max(R, 1),), bool) if adaptive else None
+
+        def thunk():
+            if weighted:
+                return segment_sum_weighted_chunked(
+                    anch, lane, pos, add, w, msg, n_out, hi=hi, wide=wd, **params
+                )
+            return segment_sum_chunked(
+                anch, lane, pos, add, msg, n_out, hi=hi, wide=wd, **params
+            )
+
+        return thunk
+
+    return make
 
 
 def segment_sum_chunked(
@@ -177,17 +303,38 @@ def segment_sum_chunked(
     ovf_add: jax.Array,
     msg: jax.Array,
     n_out: int,
+    hi: jax.Array | None = None,
+    wide: jax.Array | None = None,
+    edge_block: int | None = None,
+    dst_block: int | None = None,
 ) -> jax.Array:
     """``segment_sum`` with a chunk-compressed dst operand; the delta
     decode fuses into the reduce kernel.  msg row ``r*CHUNK + c`` pairs
     with chunk ``r`` column ``c``; msg rows past the valid prefix must be
-    zero (the compressed aux masks them)."""
-    a, d, p, v, m, _, n_with_pad = _pad_chunked_dst(
-        anchors, deltas, ovf_pos, ovf_add, msg, None, n_out
+    zero (the compressed aux masks them).  Pass ``hi``/``wide`` for
+    adaptive-width streams (branch-free width select inside the grid)."""
+    R, C = deltas.shape
+    if edge_block is None or dst_block is None:
+        make = _sweep_segment_sum_chunked(R, C, n_out, False, hi is not None)
+        tuned = autotune.get_params(
+            "segment_sum_chunked", {"R": R, "n": n_out}, sweep_fn=make
+        )
+        edge_block = edge_block or tuned["edge_block"]
+        dst_block = dst_block or tuned["dst_block"]
+    a, d, p, v, m, _, hg, wd, n_with_pad = _pad_chunked_dst(
+        anchors, deltas, ovf_pos, ovf_add, msg, None, n_out,
+        hi=hi, wide=wide, edge_block=edge_block, dst_block=dst_block,
     )
-    out = segment_reduce.segment_sum_sorted_chunked(
-        a, d, p, v, m, n_with_pad, interpret=_interpret()
-    )
+    if hg is not None:
+        out = segment_reduce.segment_sum_sorted_chunked_adaptive(
+            a, d, hg, wd, p, v, m, n_with_pad,
+            edge_block=edge_block, dst_block=dst_block, interpret=_interpret(),
+        )
+    else:
+        out = segment_reduce.segment_sum_sorted_chunked(
+            a, d, p, v, m, n_with_pad,
+            edge_block=edge_block, dst_block=dst_block, interpret=_interpret(),
+        )
     return out[:n_out]
 
 
@@ -199,15 +346,35 @@ def segment_sum_weighted_chunked(
     w: jax.Array,
     msg: jax.Array,
     n_out: int,
+    hi: jax.Array | None = None,
+    wide: jax.Array | None = None,
+    edge_block: int | None = None,
+    dst_block: int | None = None,
 ) -> jax.Array:
     """Weighted chunked segment-sum; same contract as ``segment_sum_chunked``
     (weight pads are 0)."""
-    a, d, p, v, m, wp, n_with_pad = _pad_chunked_dst(
-        anchors, deltas, ovf_pos, ovf_add, msg, w, n_out
+    R, C = deltas.shape
+    if edge_block is None or dst_block is None:
+        make = _sweep_segment_sum_chunked(R, C, n_out, True, hi is not None)
+        tuned = autotune.get_params(
+            "segment_sum_weighted_chunked", {"R": R, "n": n_out}, sweep_fn=make
+        )
+        edge_block = edge_block or tuned["edge_block"]
+        dst_block = dst_block or tuned["dst_block"]
+    a, d, p, v, m, wp, hg, wd, n_with_pad = _pad_chunked_dst(
+        anchors, deltas, ovf_pos, ovf_add, msg, w, n_out,
+        hi=hi, wide=wide, edge_block=edge_block, dst_block=dst_block,
     )
-    out = segment_reduce.segment_sum_weighted_chunked(
-        a, d, p, v, wp, m, n_with_pad, interpret=_interpret()
-    )
+    if hg is not None:
+        out = segment_reduce.segment_sum_weighted_chunked_adaptive(
+            a, d, hg, wd, p, v, wp, m, n_with_pad,
+            edge_block=edge_block, dst_block=dst_block, interpret=_interpret(),
+        )
+    else:
+        out = segment_reduce.segment_sum_weighted_chunked(
+            a, d, p, v, wp, m, n_with_pad,
+            edge_block=edge_block, dst_block=dst_block, interpret=_interpret(),
+        )
     return out[:n_out]
 
 
@@ -244,7 +411,34 @@ def spmm(tile_mask, a_tiles, x):
     return csr_spmm.block_spmm(tile_mask, a_tiles, xp, interpret=_interpret())
 
 
-def spmm_from_edges(n: int, src, dst, x, vals=None):
-    mask, tiles, n_pad = csr_spmm.tiles_from_edges(n, src, dst, vals)
+def _sweep_spmm(n: int, m: int):
+    """sweep_fn factory for the block-dense SpMM tiles."""
+
+    def make(params):
+        rng = np.random.default_rng(0)
+        src = rng.integers(0, max(n, 1), size=max(m, 1))
+        dst = rng.integers(0, max(n, 1), size=max(m, 1))
+        x = jnp.ones((n, 8), jnp.float32)
+
+        def thunk():
+            return spmm_from_edges(n, src, dst, x, **params)
+
+        return thunk
+
+    return make
+
+
+def spmm_from_edges(
+    n: int, src, dst, x, vals=None,
+    row_tile: int | None = None, col_tile: int | None = None,
+):
+    if row_tile is None or col_tile is None:
+        m = int(np.asarray(src).shape[0])
+        tuned = autotune.get_params("spmm", {"n": n, "m": m}, sweep_fn=_sweep_spmm(n, m))
+        row_tile = row_tile or tuned["row_tile"]
+        col_tile = col_tile or tuned["col_tile"]
+    mask, tiles, n_pad = csr_spmm.tiles_from_edges(
+        n, src, dst, vals, row_tile=row_tile, col_tile=col_tile
+    )
     out = spmm(mask, tiles, x)
     return out[:n]

@@ -312,6 +312,193 @@ def segment_sum_weighted_chunked(
 
 
 # ---------------------------------------------------------------------------
+# adaptive-width chunks: per-chunk int8/int16 width tag (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# The adaptive stream stores ONE int8 lane plus a compacted hi-byte plane
+# holding only the wide chunks' rows.  The compaction index
+# (cumsum(wide) - 1) is a data-dependent gather, which Pallas block specs
+# cannot express — so the ops.py wrapper pre-gathers the hi plane to a
+# per-chunk transient ``hi_g[r] = wide[r] ? hi[cumsum-1] : 0`` IN-TRACE
+# (an XLA temporary that never lives in the resident pool) and the kernel
+# receives aligned (rpb, CHUNK) blocks of it next to the lane.  HBM
+# traffic for the resident operand stays ~1 byte/slot + the wide rows;
+# the width select is a branch-free per-element where() in the prologue:
+#
+#   delta = wide ? hi * 256 + (lane & 0xFF) : lane
+#
+# after which decode is the identical cumsum + escape corrections.
+
+
+def _decode_dst_tile_adaptive(anch, lane, hi, wide, pos, add):
+    """Adaptive variant of ``_decode_dst_tile``: branch-free width select
+    between the int8 lane and the (pre-gathered) hi-byte plane, then the
+    same cumsum + escape-step corrections.  ``wide`` is (rows, 1) int32
+    (nonzero = wide chunk)."""
+    lane32 = lane.astype(jnp.int32)
+    d = jnp.where(wide > 0, hi.astype(jnp.int32) * 256 + (lane32 & 0xFF), lane32)
+    rows, C = d.shape
+    dec = anch + jnp.cumsum(d, axis=1)  # anch is (rows, 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (rows, C), 1)
+    for k in range(pos.shape[1]):  # static K, unrolled
+        dec = dec + jnp.where(cols >= pos[:, k : k + 1], add[:, k : k + 1], 0)
+    return dec.reshape(1, rows * C)
+
+
+def _segsum_chunked_adaptive_kernel(
+    anch_ref, del_ref, hi_ref, wide_ref, pos_ref, add_ref, msg_ref, out_ref
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dst = _decode_dst_tile_adaptive(
+        anch_ref[...], del_ref[...], hi_ref[...], wide_ref[...],
+        pos_ref[...], add_ref[...],
+    )
+    d0 = i * out_ref.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (out_ref.shape[0], dst.shape[1]), 0)
+    onehot = (dst - d0 == rows).astype(msg_ref.dtype)
+    out_ref[...] += jax.lax.dot(
+        onehot, msg_ref[...], precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _segsum_chunked_adaptive_weighted_kernel(
+    anch_ref, del_ref, hi_ref, wide_ref, pos_ref, add_ref, w_ref, msg_ref, out_ref
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dst = _decode_dst_tile_adaptive(
+        anch_ref[...], del_ref[...], hi_ref[...], wide_ref[...],
+        pos_ref[...], add_ref[...],
+    )
+    w = w_ref[...]
+    d0 = i * out_ref.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (out_ref.shape[0], dst.shape[1]), 0)
+    onehot_w = jnp.where(dst - d0 == rows, w, 0.0).astype(msg_ref.dtype)
+    out_ref[...] += jax.lax.dot(
+        onehot_w, msg_ref[...], precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _chunked_specs_adaptive(chunk_len: int, K: int, edge_block: int, D: int):
+    rpb = edge_block // chunk_len
+    return rpb, [
+        pl.BlockSpec((rpb, 1), lambda i, j: (j, 0)),  # anchors
+        pl.BlockSpec((rpb, chunk_len), lambda i, j: (j, 0)),  # int8 lane
+        pl.BlockSpec((rpb, chunk_len), lambda i, j: (j, 0)),  # gathered hi
+        pl.BlockSpec((rpb, 1), lambda i, j: (j, 0)),  # wide tags
+        pl.BlockSpec((rpb, K), lambda i, j: (j, 0)),  # ovf_pos
+        pl.BlockSpec((rpb, K), lambda i, j: (j, 0)),  # ovf_add
+    ]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_out", "edge_block", "dst_block", "interpret")
+)
+def segment_sum_sorted_chunked_adaptive(
+    anchors: jax.Array,  # int32 (R,)
+    deltas: jax.Array,  # int8 (R, CHUNK) lane (low bytes on wide chunks)
+    hi_g: jax.Array,  # int8 (R, CHUNK) pre-gathered hi plane (0 on narrow)
+    wide: jax.Array,  # int32 (R, 1) per-chunk width tag
+    ovf_pos: jax.Array,  # int32 (R, K)
+    ovf_add: jax.Array,  # int32 (R, K)
+    msg: jax.Array,  # (R * CHUNK, D)
+    n_out: int,
+    edge_block: int = EDGE_BLOCK,
+    dst_block: int = DST_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """``segment_sum_sorted_chunked`` over the adaptive-width layout; the
+    per-chunk width select + delta decode fuse into the reduce kernel."""
+    R, chunk_len = deltas.shape
+    E, D = msg.shape
+    K = ovf_pos.shape[1]
+    assert E == R * chunk_len
+    assert edge_block % chunk_len == 0 and E % edge_block == 0
+    assert n_out % dst_block == 0
+    grid = (n_out // dst_block, E // edge_block)
+    rpb, chunk_specs = _chunked_specs_adaptive(chunk_len, K, edge_block, D)
+    return pl.pallas_call(
+        _segsum_chunked_adaptive_kernel,
+        grid=grid,
+        in_specs=chunk_specs + [pl.BlockSpec((edge_block, D), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((dst_block, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_out, D), jnp.float32),
+        interpret=interpret,
+    )(
+        anchors.reshape(-1, 1).astype(jnp.int32),
+        deltas,
+        hi_g,
+        wide.reshape(-1, 1).astype(jnp.int32),
+        ovf_pos.astype(jnp.int32),
+        ovf_add.astype(jnp.int32),
+        msg,
+    ).astype(msg.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_out", "edge_block", "dst_block", "interpret")
+)
+def segment_sum_weighted_chunked_adaptive(
+    anchors: jax.Array,
+    deltas: jax.Array,
+    hi_g: jax.Array,
+    wide: jax.Array,
+    ovf_pos: jax.Array,
+    ovf_add: jax.Array,
+    w: jax.Array,  # float (R * CHUNK,); pad 0
+    msg: jax.Array,
+    n_out: int,
+    edge_block: int = EDGE_BLOCK,
+    dst_block: int = DST_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Weighted adaptive chunked segment-sum (weights fold into the
+    one-hot as in every other variant)."""
+    R, chunk_len = deltas.shape
+    E, D = msg.shape
+    K = ovf_pos.shape[1]
+    assert E == R * chunk_len
+    assert edge_block % chunk_len == 0 and E % edge_block == 0
+    assert n_out % dst_block == 0
+    grid = (n_out // dst_block, E // edge_block)
+    rpb, chunk_specs = _chunked_specs_adaptive(chunk_len, K, edge_block, D)
+    return pl.pallas_call(
+        _segsum_chunked_adaptive_weighted_kernel,
+        grid=grid,
+        in_specs=chunk_specs
+        + [
+            pl.BlockSpec((1, edge_block), lambda i, j: (0, j)),
+            pl.BlockSpec((edge_block, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((dst_block, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_out, D), jnp.float32),
+        interpret=interpret,
+    )(
+        anchors.reshape(-1, 1).astype(jnp.int32),
+        deltas,
+        hi_g,
+        wide.reshape(-1, 1).astype(jnp.int32),
+        ovf_pos.astype(jnp.int32),
+        ovf_add.astype(jnp.int32),
+        w.reshape(1, -1).astype(msg.dtype),
+        msg,
+    ).astype(msg.dtype)
+
+
+# ---------------------------------------------------------------------------
 # fixed-fanout aggregation (sampled GNN regime: GraphSAGE minibatch)
 # ---------------------------------------------------------------------------
 

@@ -331,6 +331,111 @@ def test_stream_weighted_inserts_compressed():
     )
 
 
+# ---------------------------------------------------------------------------
+# (5) adaptive per-chunk widths (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_codec_roundtrip_mixed_widths():
+    """Chunks with int8-sized deltas stay narrow, chunks with int16-sized
+    deltas go wide (hi plane), escapes still handle the >int16 outliers —
+    and the decode is exact through all three regimes."""
+    rng = np.random.default_rng(7)
+    R = 6
+    deltas = rng.integers(0, 100, R * cz.CHUNK)  # narrow by default
+    deltas[2 * cz.CHUNK : 3 * cz.CHUNK] = rng.integers(200, 30_000, cz.CHUNK)
+    deltas[4 * cz.CHUNK : 5 * cz.CHUNK] = rng.integers(200, 30_000, cz.CHUNK)
+    cols = rng.choice(np.arange(1, cz.CHUNK), 4, replace=False)
+    deltas[cols] = rng.integers(40_000, 1 << 20, 4)  # escapes in chunk 0
+    vals = np.cumsum(deltas).astype(np.int32)
+    c = cz.encode_stream_adaptive(jnp.asarray(vals), hi_cap=R)
+    assert not bool(c.spill)
+    assert c.adaptive
+    wide = np.asarray(c.wide)
+    assert wide[2] and wide[4] and not wide[0]
+    np.testing.assert_array_equal(
+        np.asarray(cz.decode_stream(c, length=vals.size)), vals
+    )
+
+
+def test_adaptive_narrow_graph_has_empty_hi_plane():
+    """An all-narrow graph pays zero hi-plane bytes: compress_host slices
+    the plane to the exact wide-row count (here 0)."""
+    edges = np.stack([np.repeat(np.arange(32), 8), np.tile(np.arange(8), 32)], 1)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    g = fg.from_edges(64, edges)
+    cg = fg.compress_host(g)
+    assert cg.dst.hi is not None and cg.dst.hi.shape[-2] == 0
+    np.testing.assert_array_equal(
+        np.asarray(fg.decompress(cg).keys), np.asarray(g.keys)
+    )
+
+
+@pytest.mark.parametrize("seed,log_n,m", [(11, 8, 2000), (23, 9, 4000), (5, 10, 9000)])
+def test_adaptive_bytes_ideal_is_exact_on_rmat(seed, log_n, m):
+    """Satellite (c): the resident byte count of the adaptive pool equals
+    ``chunk_stats.bytes_ideal`` EXACTLY on random RMAT streams, and never
+    exceeds the fixed int16-wide layout."""
+    n = 1 << log_n
+    edges = symmetrize(rmat_edges(log_n, m, seed=seed))
+    g = fg.from_edges(n, edges)
+    cg = fg.compress_host(g)
+    stats = fg.chunk_stats(g)
+    resident = cz.stream_nbytes(cg.dst)
+    assert resident == stats["bytes_ideal"]
+    cg2 = fg.compress_host(g, width=2)
+    assert resident <= cz.stream_nbytes(cg2.dst)
+    # and the layout change is still semantics-free
+    np.testing.assert_array_equal(
+        np.asarray(fg.decompress(cg).keys), np.asarray(g.keys)
+    )
+
+
+def test_adaptive_sharded_bytes_not_worse_than_fixed(rmat_graph):
+    n, edges = rmat_graph
+    sg = sp.graph_from_edges(n, edges, n_shards=N_SHARDS)
+    ca = sp.compress_sharded(sg)
+    c2 = sp.compress_sharded(sg, width=2)
+    assert ca.pool.dst.adaptive
+    assert cz.stream_nbytes(ca.pool.dst) <= cz.stream_nbytes(c2.pool.dst)
+    np.testing.assert_array_equal(
+        np.asarray(sp.decompress_sharded(ca).pool.data), np.asarray(sg.pool.data)
+    )
+
+
+def test_adaptive_insert_delete_keeps_widths(rmat_graph):
+    """The decompress->merge->recompress step re-selects widths under the
+    inherited hi capacity; the result decodes exactly after both an
+    insert and a delete batch."""
+    n, edges = rmat_graph
+    half = len(edges) // 2
+    want = fg.from_edges(n, edges)
+    cap = want.edge_capacity
+    g = fg.from_edges(n, edges[:half], edge_capacity=cap)
+    # hi_headroom=1.0 -> full hi capacity: any chunk may turn wide later
+    cg = fg.compress_host(g, hi_headroom=1.0)
+    cg2 = fg.insert_edges_compressed(cg, fg.batch_from_edges(edges[half:]), cap)
+    assert not bool(cg2.dst.spill)
+    assert cg2.dst.hi.shape[-2] == cg.dst.hi.shape[-2]  # capacity inherited
+    np.testing.assert_array_equal(
+        fg.to_edge_array(fg.decompress(cg2)), fg.to_edge_array(want)
+    )
+    cg3 = fg.delete_edges_compressed(cg2, fg.batch_from_edges(edges[:100]), cap)
+    want2 = fg.delete_edges_host(want, edges[:100])
+    np.testing.assert_array_equal(
+        fg.to_edge_array(fg.decompress(cg3)), fg.to_edge_array(want2)
+    )
+
+
+def test_bc_parity_compressed(flat_engines, sources):
+    raw, comp = flat_engines
+    np.testing.assert_allclose(
+        np.asarray(talg.bc_multi(raw, sources[:4])),
+        np.asarray(talg.bc_multi(comp, sources[:4])),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
 def test_stream_compressed_requires_mirror():
     with pytest.raises(ValueError, match="mirror"):
         AspenStream(G.build_graph(8, np.array([[0, 1], [1, 0]])), mirror=False,

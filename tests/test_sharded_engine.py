@@ -147,6 +147,27 @@ def test_bc_parity(rmat_graph, engines):
     assert np.allclose(talg.bc(eng_np, src), talg.bc(eng_sh, src), atol=1e-4)
 
 
+def test_bc_batch_sharded_parity(engines, sources):
+    """bc_multi routes through the in-trace ``bc_batch_sharded`` driver
+    (one psum per BFS level instead of per-source generic rounds); f32
+    sum order differs across shards, so tolerance not bit-equality."""
+    eng_np, eng_sh = engines
+    assert hasattr(eng_sh, "bc_batch")
+    got = np.asarray(talg.bc_multi(eng_sh, sources[:6]))
+    want = np.asarray(talg.bc_multi(eng_np, sources[:6]))
+    assert np.allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_bc_batch_sharded_compressed_parity(rmat_graph, sources):
+    n, edges = rmat_graph
+    sg = sp.graph_from_edges(n, edges, n_shards=N_SHARDS)
+    eng_raw = make_engine(sg)
+    eng_cmp = make_engine(sp.compress_sharded(sg))
+    got = np.asarray(talg.bc_multi(eng_cmp, sources[:6]))
+    want = np.asarray(talg.bc_multi(eng_raw, sources[:6]))
+    assert np.allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
 def test_weighted_pagerank_parity(weighted_engines):
     eng_np, eng_sh = weighted_engines
     assert np.allclose(

@@ -84,6 +84,80 @@ def test_needs_rebalance_trigger():
 
 
 # ---------------------------------------------------------------------------
+# shard auto-tuning policy (ISSUE 8: imbalance stats -> rebalance trigger)
+# ---------------------------------------------------------------------------
+
+
+def test_imbalance_stats():
+    assert sp.imbalance_stats(np.array([100, 100, 100, 100]))["imbalance"] == 1.0
+    s = sp.imbalance_stats(np.array([300, 100, 100, 100]))
+    assert s["max"] == 300 and s["mean"] == 150 and s["imbalance"] == 2.0
+    # degenerate inputs never divide by zero
+    assert sp.imbalance_stats(np.zeros(4, np.int64))["imbalance"] == 1.0
+    assert sp.imbalance_stats(np.array([], np.int64))["imbalance"] == 1.0
+
+
+def _skewed_pool(rng, n_shards=4, cap_per=8192):
+    """Even pool + an insert batch aimed entirely at shard 0's key range
+    (range sharding keeps them there -> genuine occupancy skew)."""
+    even = np.unique(rng.integers(0, 1 << 20, 1000))
+    p = sp.from_array(even, n_shards=n_shards, cap_per=cap_per)
+    extra = np.unique(rng.integers(0, int(np.asarray(p.lo)[1]), 4000))
+    step = sp.make_insert_step(sp.pool_mesh(n_shards), ("shard",))
+    pad = int(2 ** np.ceil(np.log2(extra.size + 1)))
+    batch = np.full(pad, sp.SENT, np.int64)
+    batch[: extra.size] = extra
+    with sp.pool_mesh(n_shards):
+        p2 = step(p, jnp.asarray(batch))
+    return p, p2, np.union1d(even, extra)
+
+
+def test_should_rebalance_on_skew_and_capacity():
+    rng = np.random.default_rng(4)
+    p, p2, _ = _skewed_pool(rng)
+    assert not sp.should_rebalance(p)
+    assert sp.imbalance_stats(p2)["imbalance"] > 2.0
+    assert sp.should_rebalance(p2)  # skew fires long before capacity
+    # near-capacity fires even when perfectly balanced
+    v = np.arange(100, dtype=np.int64)
+    p3 = sp.from_array(v, n_shards=4, cap_per=26)
+    assert sp.imbalance_stats(p3)["imbalance"] <= 2.0
+    assert sp.should_rebalance(p3)
+
+
+def test_should_rebalance_compressed_pool():
+    rng = np.random.default_rng(5)
+    v = np.unique(rng.integers(0, 1 << 18, 1500))
+    sg = sp.ShardedGraph(sp.from_array(v, n_shards=4), 1 << 18)
+    csg = sp.compress_sharded(sg)
+    # reads capacity off the compressed layout (cap_per property)
+    assert sp.should_rebalance(csg.pool) == sp.should_rebalance(sg.pool)
+
+
+def test_maybe_rebalance_roundtrip():
+    rng = np.random.default_rng(6)
+    p, p2, all_keys = _skewed_pool(rng)
+    same, done = sp.maybe_rebalance(p)
+    assert not done and same is p  # balanced pool untouched
+    r, done = sp.maybe_rebalance(p2)
+    assert done
+    np.testing.assert_array_equal(sp.to_array(r), all_keys)  # contents preserved
+    assert sp.imbalance_stats(r)["imbalance"] <= 1.5  # and skew repaired
+
+
+def test_recommend_n_shards():
+    nd = jax.device_count()
+    assert sp.recommend_n_shards(0) == 1
+    assert sp.recommend_n_shards(1 << 16) == 1
+    want = sp.recommend_n_shards(10 * (1 << 16))
+    assert want >= 10
+    assert want <= nd or want % nd == 0  # mesh-friendly when multi-round
+    # scales with the per-shard target
+    w = sp.recommend_n_shards(1 << 20, target_per_shard=1 << 10)
+    assert w >= 1024 and (w <= nd or w % nd == 0)
+
+
+# ---------------------------------------------------------------------------
 # boundary invariants (ISSUE 5 satellites)
 # ---------------------------------------------------------------------------
 
