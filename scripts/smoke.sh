@@ -73,3 +73,65 @@ assert np.allclose(
 ), "compressed PageRank diverges"
 print(f"parity OK (bfs/pagerank/cc x 3 backends + adaptive compressed, n={n}, m={edges.shape[0]}) in {time.time() - t0:.1f}s")
 EOF
+
+echo "== graph-query service probe (live writer + 100 mixed queries) =="
+python - <<'EOF'
+import threading
+import time
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.streaming import AspenStream
+from repro.data.rmat import rmat_edges, symmetrize
+from repro.serve.graph import GraphQueryService
+
+t0 = time.time()
+n = 1 << 9
+edges = symmetrize(rmat_edges(9, 4000, seed=3))
+stream = AspenStream(G.build_graph(n, edges))
+svc = GraphQueryService(stream, backend="jax", max_batch=8,
+                        default_deadline_s=1.0, work_conserving=True)
+svc.start()
+svc.warmup(kinds=("bfs", "sssp"))
+
+# a live writer races 100 mixed queries from two tenants
+stop = threading.Event()
+def writer():
+    rng = np.random.default_rng(4)
+    while not stop.is_set():
+        for _ in range(10):
+            svc.enqueue_update(int(rng.integers(n)), int(rng.integers(n)), block=False)
+        time.sleep(0.05)
+wt = threading.Thread(target=writer)
+wt.start()
+
+rng = np.random.default_rng(5)
+with svc.session(tenant="alice") as sess:
+    pinned = sess.query("bfs", source=3).result(timeout=30)
+    tickets = []
+    for i in range(100):
+        kind = "bfs" if i % 2 else "sssp"
+        tenant = "alice" if i % 3 else "bob"
+        tickets.append(svc.submit(kind, source=int(rng.integers(n)), tenant=tenant))
+    results = [t.result(timeout=60) for t in tickets]
+    # the pinned session still answers from its open-time version
+    assert np.array_equal(sess.query("bfs", source=3).result(timeout=30), pinned), \
+        "session answer drifted across publishes"
+stop.set()
+wt.join()
+svc.flush_updates()
+st = svc.stats()
+svc.stop()
+
+assert len(results) == 100 and all(r.shape == (n,) for r in results), "lost answers"
+assert st["publishes"] >= 1, "writer never published"
+assert sum(v["completed"] for v in st["tenants"].values()) >= 101, st["tenants"]
+assert st["admission"]["backlog"] == 0 and st["admission"]["in_flight"] == 0
+assert all(l["retraces"] == 0 for k, l in st["lanes"].items() if k in ("bfs", "sssp")), \
+    "serving retraced after warmup"
+assert st["sessions_open"] == 0 and stream.vg.live_versions() == 1, "leaked version refs"
+print(f"service OK (100 queries, {st['publishes']} publishes, "
+      f"mean batch {sum(l['flushed_requests'] for l in st['lanes'].values()) / max(sum(l['flushed_batches'] for l in st['lanes'].values()), 1):.1f}) "
+      f"in {time.time() - t0:.1f}s")
+EOF

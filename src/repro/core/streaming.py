@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from typing import Callable, List, NamedTuple, Optional, Tuple
 
 import numpy as np
@@ -58,6 +59,129 @@ SHARDED_MIRROR = "sharded"  # aux key of the ShardedGraph mirror
 # reserved beyond the build-time wide-chunk count, so incremental
 # recompression absorbs width drift between full rebuilds
 HI_HEADROOM = 1 / 16
+
+
+class UpdateQueue:
+    """Bounded thread-safe queue of pending edge updates feeding a
+    writer loop — the backpressure surface of the serving layer
+    (DESIGN.md §13).
+
+    One entry per directed-or-symmetric *update request*: ``(src, dst,
+    delete, weight)``.  Producers ``put`` (blocking while full unless
+    ``block=False``, which rejects instead — the caller's admission
+    decision); the single writer drains with ``drain_updates`` below.
+    ``stats()`` exposes queue depth, high-water mark, and the
+    accepted / drained / rejected totals, so a service can report how
+    hard its writer is backpressuring producers.  ``maxsize=None``
+    makes the queue unbounded (the replay use in ``run_concurrent``)."""
+
+    def __init__(self, maxsize: Optional[int] = 65536):
+        self.maxsize = maxsize
+        self._q: deque = deque()
+        self._cond = threading.Condition()
+        self._high_water = 0
+        self._enqueued = 0
+        self._drained = 0
+        self._rejected = 0
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._q)
+
+    def put(
+        self,
+        src: int,
+        dst: int,
+        *,
+        delete: bool = False,
+        weight: Optional[float] = None,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> bool:
+        """Enqueue one update; returns False (and counts a rejection)
+        instead of enqueueing when the queue stays full — on
+        ``block=False`` immediately, else after ``timeout``."""
+        with self._cond:
+            if self.maxsize is not None:
+                if not block and len(self._q) >= self.maxsize:
+                    self._rejected += 1
+                    return False
+                if not self._cond.wait_for(
+                    lambda: len(self._q) < self.maxsize, timeout=timeout
+                ):
+                    self._rejected += 1
+                    return False
+            self._q.append((int(src), int(dst), bool(delete), weight))
+            self._enqueued += 1
+            self._high_water = max(self._high_water, len(self._q))
+            self._cond.notify_all()
+            return True
+
+    def pop_batch(self, k: int) -> list:
+        """Dequeue up to ``k`` pending updates (possibly empty; never
+        blocks) in FIFO order."""
+        with self._cond:
+            out = []
+            while self._q and len(out) < k:
+                out.append(self._q.popleft())
+            if out:
+                self._drained += len(out)
+                self._cond.notify_all()  # wake producers blocked on full
+            return out
+
+    def wait_nonempty(self, timeout: Optional[float] = None) -> bool:
+        """Park until at least one update is pending (the writer loop's
+        idle wait); True when woken non-empty."""
+        with self._cond:
+            return self._cond.wait_for(lambda: len(self._q) > 0, timeout=timeout)
+
+    def stats(self) -> dict:
+        with self._cond:
+            return {
+                "depth": len(self._q),
+                "maxsize": self.maxsize,
+                "high_water": self._high_water,
+                "enqueued": self._enqueued,
+                "drained": self._drained,
+                "rejected": self._rejected,
+            }
+
+
+def drain_updates(
+    queue: UpdateQueue,
+    stream: "AspenStream",
+    max_batch: int,
+    symmetric: bool = True,
+) -> int:
+    """Drain up to ``max_batch`` pending updates from ``queue`` and
+    apply them to ``stream`` as (at most) one ``insert_edges`` plus one
+    ``delete_edges`` publish; returns how many updates were applied
+    (0 = queue empty; never blocks).
+
+    This is THE writer-loop body — ``run_concurrent``'s updater thread
+    and ``GraphQueryService``'s writer thread both call it, so update
+    batching semantics (inserts applied before deletes within a drain,
+    symmetrization forwarded to both calls, the weight lane riding
+    inserts with unit fill for weight-less rows in a mixed batch) live
+    in exactly one place and cannot drift between the bench harness and
+    the serving path."""
+    rows = queue.pop_batch(max_batch)
+    if not rows:
+        return 0
+    ins = [(s, d, w) for s, d, dl, w in rows if not dl]
+    dels = [(s, d) for s, d, dl, w in rows if dl]
+    if ins:
+        edges = np.asarray([(s, d) for s, d, _ in ins], dtype=np.int64)
+        if any(w is not None for _, _, w in ins):
+            weights = np.asarray(
+                [1.0 if w is None else float(w) for _, _, w in ins], np.float64
+            )
+        else:
+            weights = None
+        stream.insert_edges(edges, symmetric=symmetric, weights=weights)
+    if dels:
+        stream.delete_edges(np.asarray(dels, dtype=np.int64), symmetric=symmetric)
+    return len(rows)
 
 
 class AspenStream:
@@ -121,6 +245,36 @@ class AspenStream:
         aux = {kind: self._mirror_from_tree(g0)} if kind else None
         self.vg: VersionedGraph[G.Graph] = VersionedGraph(g0, aux=aux)
         self._wlock = threading.Lock()  # serializes writers (incl. mirror merge)
+        self._publish_listeners: List[Callable[[Version[G.Graph]], None]] = []
+        self._listener_lock = threading.Lock()
+
+    # -- publish notification ----------------------------------------------
+    def on_publish(self, fn: Callable[[Version[G.Graph]], None]) -> Callable[[], None]:
+        """Register a non-blocking publish listener: ``fn(version)`` is
+        called on the WRITER thread after each version becomes current
+        (outside the write lock, so listeners can acquire/query).  The
+        contract is fire-and-forget: listeners must be fast — set an
+        event, bump a counter — never compute; exceptions are swallowed
+        so a broken listener cannot take down the writer.  Returns an
+        unsubscribe callable (idempotent)."""
+        with self._listener_lock:
+            self._publish_listeners.append(fn)
+
+        def unsubscribe() -> None:
+            with self._listener_lock:
+                if fn in self._publish_listeners:
+                    self._publish_listeners.remove(fn)
+
+        return unsubscribe
+
+    def _notify_publish(self, v: Version[G.Graph]) -> None:
+        with self._listener_lock:
+            listeners = list(self._publish_listeners)
+        for fn in listeners:
+            try:
+                fn(v)
+            except Exception:  # noqa: BLE001 — listener bugs never block the writer
+                pass
 
     # -- mirror maintenance -------------------------------------------------
     @staticmethod
@@ -376,7 +530,9 @@ class AspenStream:
             return g2, (aux or None)
 
         with self._wlock:
-            return self.vg.update_with_aux(txn)
+            v = self.vg.update_with_aux(txn)
+        self._notify_publish(v)
+        return v
 
     # -- update API (paper Appendix 10.4) ---------------------------------
     def insert_edges(
@@ -578,15 +734,31 @@ class AspenStream:
         ONCE: the engine sees the unique sources and the result rows fan
         back out to every caller's lane (Zipfian query mixes repeat hot
         sources constantly, so the dedup is free qps).
+
+        An EMPTY request set — ``sources`` None/empty, or a pagerank
+        ``resets`` with zero rows — returns ``[]`` without touching an
+        engine: a serving lane whose pending set collapsed to nothing
+        (dedup, cancellation) must flush as a no-op, not an error.
         """
         from .traversal import algorithms as talg
 
+        if kind not in ("bfs", "distances", "bc", "sssp", "pagerank"):
+            raise ValueError(f"unknown query kind {kind!r}")
+        if kind == "pagerank":
+            resets = kw.get("resets")
+            if resets is not None and np.asarray(resets).shape[0] == 0:
+                return []
+            if backend is None:
+                backend = self._default_backend()
+            return talg.pagerank_multi(self.engine(backend), **kw)
+        if sources is None:
+            return []
+        sources = np.asarray(sources, dtype=np.int64).reshape(-1)
+        if sources.size == 0:
+            return []
         if backend is None:
             backend = self._default_backend()
         eng = self.engine(backend)
-        if kind == "pagerank":
-            return talg.pagerank_multi(eng, **kw)
-        sources = np.asarray(sources, dtype=np.int64).reshape(-1)
         uniq, inv = np.unique(sources, return_inverse=True)
         if kind == "bfs":
             return talg.bfs_multi(eng, uniq, **kw)[0][inv]
@@ -842,21 +1014,22 @@ def run_concurrent(
     n_directed = [0]
     per_update = 2 if symmetric else 1
 
+    # the writer loop is the SAME code path the serving layer runs
+    # (``drain_updates`` over an ``UpdateQueue``), so batching semantics
+    # measured here are the semantics a GraphQueryService writer has
+    pending = UpdateQueue(maxsize=None)
+    for row in updates:
+        pending.put(int(row[0]), int(row[1]), delete=bool(row[2]), block=False)
+
     def updater():
-        i = 0
-        while not stop.is_set() and i < updates.shape[0]:
-            batch = updates[i : i + batch_size]
-            ins = batch[batch[:, 2] == 0][:, :2]
-            dels = batch[batch[:, 2] == 1][:, :2]
+        while not stop.is_set():
             t0 = time.perf_counter()
-            if ins.size:
-                stream.insert_edges(ins, symmetric=symmetric)
-            if dels.size:
-                stream.delete_edges(dels, symmetric=symmetric)
+            k = drain_updates(pending, stream, batch_size, symmetric=symmetric)
+            if k == 0:
+                break
             upd_lat.append(time.perf_counter() - t0)
-            n_upd[0] += batch.shape[0]
-            n_directed[0] += batch.shape[0] * per_update
-            i += batch_size
+            n_upd[0] += k
+            n_directed[0] += k * per_update
 
     q_lat: List[float] = []
     staleness: List[int] = []

@@ -21,6 +21,7 @@ from . import algorithms
 from .base import (
     DENSE_THRESHOLD_DENOM,
     HOST_SYNCS,
+    TRACES,
     ArrayOps,
     Counter,
     TraversalEngine,
@@ -57,6 +58,7 @@ __all__ = [
     "flat_graph_of",
     "FLAT_REBUILDS",
     "HOST_SYNCS",
+    "TRACES",
 ]
 
 

@@ -149,6 +149,14 @@ class Counter:
 # tests spy on this to pin that contract.
 HOST_SYNCS = Counter()
 
+# Counts jit TRACES of the in-trace batched drivers (bfs/bc/sssp, flat
+# and sharded): the bump sits inside the jitted function body, which
+# Python executes only while jax traces — a cache hit never runs it.
+# The serving layer pins its steady-state contract on this: after
+# warmup (one flush per (kind, pow2 batch size) at a fixed pool
+# capacity) serving MUST NOT retrace, i.e. this count must not grow.
+TRACES = Counter()
+
 
 class ArrayOps:
     """Functional array helpers shared by F/C callbacks.

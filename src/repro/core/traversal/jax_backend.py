@@ -75,7 +75,7 @@ from repro.kernels import ops as kops
 from .. import compressed as cz
 from .. import flat_graph as _fg
 from ..flat_graph import CompressedPool, FlatGraph, unpack
-from .base import DENSE_THRESHOLD_DENOM, HOST_SYNCS, ArrayOps, TraversalEngine
+from .base import DENSE_THRESHOLD_DENOM, HOST_SYNCS, TRACES, ArrayOps, TraversalEngine
 
 
 class JaxOps(ArrayOps):
@@ -455,6 +455,7 @@ def bfs_batch(
     (parent(v) = max u with depth(u) = depth(v) - 1 and u->v — exactly
     the per-round max-contention rule of ``_bfs_relax``), instead of a
     cap-sized scatter per round."""
+    TRACES.bump()  # trace-time only: a jit cache hit never runs this body
     n = g.offsets.shape[0] - 1
     cap = g.keys.shape[0]
     B = sources.shape[0]
@@ -552,6 +553,7 @@ def bc_batch(
     scatter-free too.  Lanes with shallower BFS trees see empty
     frontiers on the extra rounds (no-ops), which keeps both loops as
     single ``lax.while_loop``s over the whole batch."""
+    TRACES.bump()  # trace-time only: a jit cache hit never runs this body
     n = g.offsets.shape[0] - 1
     B = sources.shape[0]
     lane = jnp.arange(B)
@@ -697,6 +699,7 @@ def sssp_batch(
     weights (hop distances), so ``sssp_batch`` never changes what an
     unweighted stream compiles for BFS/BC/PageRank.
     """
+    TRACES.bump()  # trace-time only: a jit cache hit never runs this body
     n = g.offsets.shape[0] - 1
     B = sources.shape[0]
     lane = jnp.arange(B)
@@ -737,6 +740,7 @@ def sssp_batch_from(
     clean reached set as ``frontier0``, and the same in-trace loop
     relaxes only what the update batch can have changed.  ``unit=True``
     runs the hop metric (incremental BFS) on a weighted pool."""
+    TRACES.bump()  # trace-time only: a jit cache hit never runs this body
     return _bellman_ford(
         g,
         aux,

@@ -1,0 +1,11 @@
+"""Serving layer.
+
+``repro.serve.decode`` — batched prefill + decode for the transformer
+models (the original continuous-batching exemplar).
+
+``repro.serve.graph`` — the SLO-aware multi-tenant graph-query service
+over a live ``AspenStream`` (DESIGN.md §13): per-kind query lanes with
+deadline-based flush, weighted-fair tenant admission, and
+snapshot-pinned sessions exposing the paper's strict-serializability
+guarantee as an API.
+"""

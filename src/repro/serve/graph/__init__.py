@@ -1,0 +1,21 @@
+"""Multi-tenant graph-query serving over a live ``AspenStream``.
+
+Public surface:
+
+  ``GraphQueryService`` — the server: writer thread (batched update
+      publishing), weighted-fair admission, deadline-driven per-kind
+      query lanes, pow2-padded batched dispatch, ``stats()``.
+  ``Session``      — snapshot-pinned handle: strictly-serializable
+      multi-query reads against one version.
+  ``QueryTicket``  — the per-request future ``submit()`` returns.
+  ``QueueFull``    — backpressure signal on a saturated tenant backlog.
+
+See DESIGN.md §13 for the admission / flush / pinning contracts, and
+``examples/serve_graph.py`` for a walkthrough.
+"""
+from .admission import QueueFull
+from .request import KINDS, QueryTicket
+from .service import GraphQueryService
+from .sessions import Session
+
+__all__ = ["GraphQueryService", "Session", "QueryTicket", "QueueFull", "KINDS"]

@@ -1,0 +1,179 @@
+"""Query lanes: coalescing admitted requests into batched dispatches.
+
+A *lane* is one homogeneous pending set — requests that can legally
+ride a single ``query_batch``-style dispatch.  The lane key is
+
+    (kind, pin, params_key, backend)
+
+where ``pin`` is None for freshest-version lanes (served against the
+stream's current version at flush time) or the owning ``Session`` (all
+of whose queries must hit its pinned version).  Mixed kinds never
+batch; mixed parameters (e.g. two dampings) never batch; pinned and
+freshest traffic never batch.
+
+Flush policy (DESIGN.md §13) — a lane flushes when EITHER
+  * it holds ``max_batch`` requests (full flush), or
+  * the oldest request's deadline budget is half spent:
+    now >= t_submit + 0.5 * (deadline - t_submit).
+The half-budget rule leaves the other half for the dispatch itself, so
+coalescing opportunistically trades latency headroom for batch size but
+never spends headroom it doesn't have.
+
+Execution pads each dispatch to the next power of two so the jitted
+drivers see O(log max_batch) distinct shapes per (kind, engine
+signature): after one warmup ladder, steady-state serving replays
+compiled code only (``traversal.TRACES`` pins this in tests).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .metrics import LaneMetrics
+from .request import QueryTicket
+
+# how much of a request's deadline budget may be spent waiting in a
+# lane before the flush is forced
+FLUSH_BUDGET_FRACTION = 0.5
+
+
+def next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+def engine_signature(engine) -> Optional[Tuple]:
+    """The trace-relevant identity of an engine: everything that, if it
+    changes, legitimately forces the jitted drivers to recompile —
+    vertex count, pool capacity (array shapes), weightedness.  Returns
+    None for engines with no jit path (numpy), which never trace."""
+    g = getattr(engine, "g", None)
+    if g is not None and hasattr(g, "edge_capacity"):  # JaxEngine / FlatGraph
+        return ("jax", engine.n, int(g.edge_capacity), engine.weighted)
+    sg = getattr(engine, "sg", None)
+    if sg is not None:  # ShardedEngine / ShardedGraph
+        return ("sharded", engine.n, tuple(sg.pool.data.shape), engine.weighted)
+    return None
+
+
+class Lane:
+    """One coalescing point: the pending tickets for a single
+    (kind, pin, params, backend) combination, plus the per-KIND metrics
+    they report into (lanes of one kind share a ``LaneMetrics``)."""
+
+    __slots__ = ("kind", "pin", "pkey", "backend", "pending", "metrics")
+
+    def __init__(self, kind: str, pin, pkey, backend: str, metrics: LaneMetrics):
+        self.kind = kind
+        self.pin = pin
+        self.pkey = pkey
+        self.backend = backend
+        self.pending: List[QueryTicket] = []
+        self.metrics = metrics
+
+    def add(self, ticket: QueryTicket) -> None:
+        self.pending.append(ticket)
+        self.metrics.queued += 1
+
+    def flush_at(self) -> float:
+        """The instant the half-budget rule forces a flush (+inf when
+        empty).  Oldest ticket governs: tickets behind it only ever
+        flush earlier than their own budget demands."""
+        if not self.pending:
+            return float("inf")
+        t = self.pending[0]
+        return t.t_submit + FLUSH_BUDGET_FRACTION * (t.deadline - t.t_submit)
+
+    def due(self, now: float, max_batch: int) -> bool:
+        if not self.pending:
+            return False
+        return len(self.pending) >= max_batch or now >= self.flush_at()
+
+    def take(self, max_batch: int) -> List[QueryTicket]:
+        batch, self.pending = self.pending[:max_batch], self.pending[max_batch:]
+        return batch
+
+
+# ---------------------------------------------------------------------------
+# batch execution (runs on the service's executor, engine already pinned)
+# ---------------------------------------------------------------------------
+
+
+def trace_key(kind: str, engine, batch_pow2: int, pkey) -> Optional[Tuple]:
+    sig = engine_signature(engine)
+    if sig is None:
+        return None
+    # cc is a whole-graph computation: batch size is not a trace axis
+    b = 1 if kind == "cc" else batch_pow2
+    return (kind, sig, b, pkey)
+
+
+def dispatch_pow2(kind: str, tickets: List[QueryTicket]) -> int:
+    """The padded batch size this flush will actually trace at."""
+    if kind == "cc":
+        return 1
+    if kind == "pagerank":
+        srcs = {t.source for t in tickets}
+        return next_pow2(len(srcs))
+    uniq = len({t.source for t in tickets})
+    return next_pow2(uniq)
+
+
+def execute_batch(engine, kind: str, tickets: List[QueryTicket], params: dict) -> None:
+    """Serve one flushed batch against an already-acquired engine,
+    completing every ticket (the caller fails them all if this raises).
+
+    bfs / sssp dedup identical sources and fan the unique rows back out
+    (the engines' own ``_quantized_sources`` pads the unique set to a
+    power of two, so the trace ladder is O(log max_batch)).  pagerank
+    builds one personalization row per distinct source (one-hot; None =
+    the global uniform row) and pads the row count to a power of two
+    itself, since ``pagerank_multi`` takes ``resets`` verbatim.  cc runs
+    the global computation once and every rider shares the labels."""
+    from repro.core.traversal import algorithms as talg
+
+    now = time.perf_counter()
+    for t in tickets:
+        t.t_flush = now
+        t.batch_size = len(tickets)
+
+    if kind == "cc":
+        labels = np.asarray(talg.connected_components(engine, **params), np.int64)
+        for t in tickets:
+            t._complete(labels)
+        return
+
+    if kind == "pagerank":
+        order: List[Optional[int]] = []
+        row_of = {}
+        for t in tickets:
+            if t.source not in row_of:
+                row_of[t.source] = len(order)
+                order.append(t.source)
+        n = engine.n
+        b = len(order)
+        resets = np.zeros((next_pow2(b), n), dtype=np.float64)
+        for i, s in enumerate(order):
+            if s is None:
+                resets[i, :] = 1.0 / n
+            else:
+                resets[i, s] = 1.0
+        # padding rows replay row 0 (a real row: no degenerate all-zero
+        # reset reaches the driver)
+        resets[b:, :] = resets[0, :]
+        scores = np.asarray(talg.pagerank_multi(engine, resets=resets, **params))
+        for t in tickets:
+            t._complete(scores[row_of[t.source]])
+        return
+
+    sources = np.asarray([t.source for t in tickets], dtype=np.int64)
+    uniq, inv = np.unique(sources, return_inverse=True)
+    if kind == "bfs":
+        rows = np.asarray(talg.bfs_multi(engine, uniq, **params)[0], np.int64)
+    elif kind == "sssp":
+        rows = np.asarray(talg.sssp_multi(engine, uniq, **params), np.float64)
+    else:  # pragma: no cover - guarded by QueryTicket validation
+        raise ValueError(f"unknown lane kind {kind!r}")
+    for t, i in zip(tickets, inv):
+        t._complete(rows[i])

@@ -1,0 +1,99 @@
+"""Service observability: per-lane and per-tenant counters.
+
+All counters are plain ints mutated under the service's dispatch lock
+(one writer at a time), snapshotted into dicts by ``service.stats()``.
+The retrace accounting rides two spies:
+
+  * ``LaneMetrics.trace_keys`` — the set of (engine-signature, pow2
+    batch size) shapes this lane has dispatched.  A flush whose key is
+    already in the set compiles nothing new; a NEW key after
+    ``mark_warm()`` counts as a retrace (the steady-state contract:
+    zero after warmup).
+  * ``traversal.TRACES`` — the trace-time counter inside the jitted
+    drivers themselves, the ground truth the service-level key
+    accounting is validated against in tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Set, Tuple
+
+
+class LaneMetrics:
+    """Counters for one query kind (aggregated across pinned/freshest
+    lane instances of that kind)."""
+
+    __slots__ = (
+        "queued", "flushed_batches", "flushed_requests", "batch_hist",
+        "deadline_misses", "errors", "trace_keys", "retraces",
+        "deadline_flushes", "full_flushes", "idle_flushes",
+    )
+
+    def __init__(self):
+        self.queued = 0              # requests ever placed in a lane
+        self.flushed_batches = 0     # lane flushes executed
+        self.flushed_requests = 0    # requests those flushes served
+        self.batch_hist: Dict[int, int] = {}  # flush size -> count
+        self.deadline_misses = 0     # tickets completed past their SLO
+        self.errors = 0              # tickets failed by an executor error
+        self.trace_keys: Set[Tuple] = set()  # shapes ever dispatched
+        self.retraces = 0            # NEW shapes seen after mark_warm()
+        self.deadline_flushes = 0    # flushes forced by the half-budget rule
+        self.full_flushes = 0        # flushes forced by a full lane
+        self.idle_flushes = 0        # work-conserving flushes (idle executor)
+
+    def record_flush(self, size: int, *, reason: str) -> None:
+        self.flushed_batches += 1
+        self.flushed_requests += size
+        self.batch_hist[size] = self.batch_hist.get(size, 0) + 1
+        if reason == "deadline":
+            self.deadline_flushes += 1
+        elif reason == "idle":
+            self.idle_flushes += 1
+        else:
+            self.full_flushes += 1
+
+    def record_trace_key(self, key: Tuple, warm: bool) -> bool:
+        """Note a dispatched shape; returns True (and counts a retrace
+        when past warmup) if the shape was new."""
+        if key in self.trace_keys:
+            return False
+        self.trace_keys.add(key)
+        if warm:
+            self.retraces += 1
+        return True
+
+    def snapshot(self) -> dict:
+        return {
+            "queued": self.queued,
+            "flushed_batches": self.flushed_batches,
+            "flushed_requests": self.flushed_requests,
+            "batch_size_hist": dict(sorted(self.batch_hist.items())),
+            "deadline_misses": self.deadline_misses,
+            "deadline_flushes": self.deadline_flushes,
+            "full_flushes": self.full_flushes,
+            "idle_flushes": self.idle_flushes,
+            "errors": self.errors,
+            "trace_keys": len(self.trace_keys),
+            "retraces": self.retraces,
+        }
+
+
+class TenantMetrics:
+    __slots__ = ("submitted", "admitted", "completed", "rejected")
+
+    def __init__(self):
+        self.submitted = 0
+        self.admitted = 0
+        self.completed = 0
+        self.rejected = 0
+
+    def snapshot(self, *, weight: float, in_flight: int, backlog: int) -> dict:
+        return {
+            "weight": weight,
+            "submitted": self.submitted,
+            "admitted": self.admitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "in_flight": in_flight,
+            "backlog": backlog,
+        }

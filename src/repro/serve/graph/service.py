@@ -1,0 +1,477 @@
+"""GraphQueryService: continuous graph updates + SLO-aware batched reads.
+
+The service runs the paper's single-writer / many-reader regime as a
+long-lived server over one ``AspenStream``:
+
+  * a dedicated WRITER thread drains the bounded update queue in
+    batches through ``core.streaming.drain_updates`` — the same loop
+    body ``run_concurrent`` uses — publishing each batch atomically as
+    one new version;
+  * a DISPATCHER thread admits client requests (weighted-fair across
+    tenants, in-flight caps) into per-(kind, pin, params) lanes and
+    flushes due lanes as power-of-two batched dispatches;
+  * an executor pool runs the flushes: freshest-version lanes acquire
+    the CURRENT version at flush time (reads never block the writer,
+    writer never blocks reads — the paper's snapshot guarantee), while
+    session lanes run against their ``Session``'s pinned version.
+
+Flush timing is deadline-driven (lanes.FLUSH_BUDGET_FRACTION): a lane
+goes out when full, or when its oldest request has spent half its SLO
+budget waiting — so light load degrades to latency-optimal batch size
+1 and heavy load coalesces toward ``max_batch`` without ever blowing
+deadlines on purpose.  Batches are padded to powers of two, so after
+``warmup()`` steady-state serving replays compiled traces only
+(``stats()["lanes"][kind]["retraces"]`` == 0, cross-checked against
+``traversal.TRACES`` in tests).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.streaming import AspenStream, UpdateQueue, drain_updates
+from repro.core.traversal import TRACES
+
+from . import lanes as L
+from .admission import AdmissionQueue, QueueFull
+from .metrics import LaneMetrics
+from .request import KINDS, QueryTicket, params_key
+from .sessions import Session
+
+__all__ = ["GraphQueryService", "QueueFull"]
+
+
+class GraphQueryService:
+    """See module docstring.  Lifecycle::
+
+        service = GraphQueryService(stream, max_batch=64)
+        service.start()          # or: with GraphQueryService(stream) as s:
+        service.warmup()
+        t = service.submit("bfs", source=0, tenant="alice")
+        parents = t.result(timeout=5.0)
+        service.stop()
+    """
+
+    def __init__(
+        self,
+        stream: AspenStream,
+        backend: Optional[str] = None,
+        max_batch: int = 64,
+        n_workers: int = 1,
+        default_deadline_s: float = 0.25,
+        update_batch: int = 256,
+        update_queue_size: Optional[int] = 65536,
+        symmetric_updates: bool = True,
+        tenant_weights: Optional[Dict[str, float]] = None,
+        max_inflight_per_tenant: int = 256,
+        max_inflight_total: int = 1024,
+        max_backlog: int = 8192,
+        poll_interval_s: float = 0.010,
+        work_conserving: bool = False,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.stream = stream
+        self.backend = backend if backend is not None else stream._default_backend()
+        self.max_batch = int(max_batch)
+        self.default_deadline_s = float(default_deadline_s)
+        self.update_batch = int(update_batch)
+        self.symmetric_updates = symmetric_updates
+        self.updates = UpdateQueue(maxsize=update_queue_size)
+        self._poll = poll_interval_s
+        # work-conserving mode: when the executor sits idle, flush
+        # whatever is pending instead of waiting out the half-budget
+        # timer (continuous batching a la the decode server — batch
+        # size adapts to arrival rate; the deadline rule still bounds
+        # queueing when the executor is busy).  Off by default: the
+        # strict policy gives deterministic flush accounting.
+        self.work_conserving = work_conserving
+        self._active_flushes = 0
+
+        self._lock = threading.RLock()
+        self._admission = AdmissionQueue(
+            weights=tenant_weights,
+            max_inflight_per_tenant=max_inflight_per_tenant,
+            max_inflight_total=max_inflight_total,
+            max_backlog=max_backlog,
+        )
+        self._lanes: Dict[Tuple, L.Lane] = {}
+        self._kind_metrics: Dict[str, LaneMetrics] = {k: LaneMetrics() for k in KINDS}
+        self._sessions: set = set()
+        self._warm = False
+        self._publishes = 0
+        self._unsubscribe = None
+
+        self._running = False
+        self._draining = False
+        self._writer_busy = False
+        self._stop_writer = threading.Event()
+        self._stop_dispatcher = threading.Event()
+        self._wake = threading.Event()
+        self._idle = threading.Condition(self._lock)
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._writer: Optional[threading.Thread] = None
+        self._dispatcher: Optional[threading.Thread] = None
+        self._n_workers = int(n_workers)
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "GraphQueryService":
+        with self._lock:
+            if self._running:
+                return self
+            self._running = True
+            self._draining = False
+        self._stop_writer.clear()
+        self._stop_dispatcher.clear()
+        self._unsubscribe = self.stream.on_publish(self._on_publish)
+        self._executor = ThreadPoolExecutor(
+            max_workers=self._n_workers, thread_name_prefix="graph-serve"
+        )
+        self._writer = threading.Thread(
+            target=self._writer_loop, name="graph-serve-writer", daemon=True
+        )
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="graph-serve-dispatch", daemon=True
+        )
+        self._writer.start()
+        self._dispatcher.start()
+        return self
+
+    def stop(self, timeout: float = 30.0) -> None:
+        """Graceful shutdown: stop accepting work, flush every queued
+        ticket to completion, stop the writer after its current batch
+        (leftover update-queue depth stays visible in ``stats()``),
+        join the threads.  Idempotent."""
+        with self._lock:
+            if not self._running:
+                return
+            self._running = False     # submissions now rejected
+            self._draining = True     # dispatcher flushes all lanes eagerly
+        self._wake.set()
+        deadline = time.perf_counter() + timeout
+        with self._lock:
+            self._idle.wait_for(
+                self._drained_locked, timeout=max(0.0, deadline - time.perf_counter())
+            )
+        self._stop_dispatcher.set()
+        self._stop_writer.set()
+        self._wake.set()
+        if self._dispatcher is not None:
+            self._dispatcher.join(timeout=5.0)
+        if self._writer is not None:
+            self._writer.join(timeout=5.0)
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+        if self._unsubscribe is not None:
+            self._unsubscribe()
+            self._unsubscribe = None
+
+    def __enter__(self) -> "GraphQueryService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _drained_locked(self) -> bool:
+        return (
+            self._admission.backlog_depth() == 0
+            and self._admission.in_flight_total == 0
+        )
+
+    # -- update side ---------------------------------------------------------
+    def enqueue_update(
+        self,
+        src: int,
+        dst: int,
+        delete: bool = False,
+        weight: Optional[float] = None,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> bool:
+        """Queue one edge mutation for the writer thread (the bounded
+        queue is the backpressure surface: ``block=False`` on a full
+        queue rejects and returns False)."""
+        ok = self.updates.put(
+            src, dst, delete=delete, weight=weight, block=block, timeout=timeout
+        )
+        return ok
+
+    def insert_edges(self, edges: np.ndarray, block: bool = True) -> int:
+        n = 0
+        for s, d in np.asarray(edges, dtype=np.int64).reshape(-1, 2):
+            n += bool(self.enqueue_update(int(s), int(d), block=block))
+        return n
+
+    def delete_edges(self, edges: np.ndarray, block: bool = True) -> int:
+        n = 0
+        for s, d in np.asarray(edges, dtype=np.int64).reshape(-1, 2):
+            n += bool(self.enqueue_update(int(s), int(d), delete=True, block=block))
+        return n
+
+    def _writer_loop(self) -> None:
+        while not self._stop_writer.is_set():
+            # the busy flag must go up BEFORE the drain pops (a popped-
+            # but-unpublished batch is invisible in queue depth, and the
+            # first apply can sit in a jit compile for a while) — it is
+            # what makes flush_updates a real publish barrier
+            self._writer_busy = True
+            k = drain_updates(
+                self.updates, self.stream, self.update_batch,
+                symmetric=self.symmetric_updates,
+            )
+            self._writer_busy = False
+            if k == 0:
+                self.updates.wait_nonempty(timeout=0.005)
+
+    def _on_publish(self, v) -> None:
+        with self._lock:
+            self._publishes += 1
+
+    def flush_updates(self, timeout: float = 30.0) -> None:
+        """Block until every update queued so far has been PUBLISHED
+        (writer catch-up barrier for tests / benchmarks).  Queue depth
+        alone is not enough — the writer pops a batch before applying
+        it — so this also waits out the busy flag the writer raises
+        around each drain."""
+        deadline = time.perf_counter() + timeout
+        while len(self.updates) > 0 or self._writer_busy:
+            if time.perf_counter() > deadline:
+                raise TimeoutError(
+                    f"writer did not drain {len(self.updates)} updates in {timeout}s"
+                )
+            time.sleep(0.001)
+
+    # -- query side ----------------------------------------------------------
+    def submit(
+        self,
+        kind: str,
+        source: Optional[int] = None,
+        tenant: str = "default",
+        deadline_s: Optional[float] = None,
+        session: Optional[Session] = None,
+        **params: Any,
+    ) -> QueryTicket:
+        """Submit one query; returns the ticket to block on.  Raises
+        ``QueueFull`` when the tenant's backlog is at capacity (the
+        client-visible backpressure signal)."""
+        budget = self.default_deadline_s if deadline_s is None else float(deadline_s)
+        ticket = QueryTicket(
+            tenant, kind, source, params,
+            deadline=time.perf_counter() + budget,
+            session=session,
+        )
+        with self._lock:
+            if not self._running:
+                raise RuntimeError("service is not running")
+            self._admission.submit(ticket)
+        self._wake.set()
+        return ticket
+
+    def query(self, kind: str, source: Optional[int] = None, timeout: float = 30.0,
+              **kw) -> np.ndarray:
+        """Blocking convenience: submit + wait."""
+        return self.submit(kind, source=source, **kw).result(timeout=timeout)
+
+    def session(self, tenant: str = "default") -> Session:
+        """Open a snapshot-pinned session (see ``sessions.Session``)."""
+        with self._lock:
+            if not self._running:
+                raise RuntimeError("service is not running")
+            s = Session(self, tenant)
+            self._sessions.add(s)
+        return s
+
+    def _forget_session(self, s: Session) -> None:
+        with self._lock:
+            self._sessions.discard(s)
+
+    # -- dispatcher ----------------------------------------------------------
+    def _lane_for(self, ticket: QueryTicket) -> L.Lane:
+        key = (ticket.kind, ticket.session, ticket.pkey, self.backend)
+        lane = self._lanes.get(key)
+        if lane is None:
+            lane = L.Lane(
+                ticket.kind, ticket.session, ticket.pkey, self.backend,
+                self._kind_metrics[ticket.kind],
+            )
+            self._lanes[key] = lane
+        return lane
+
+    def _dispatch_loop(self) -> None:
+        while not self._stop_dispatcher.is_set():
+            batches: List[Tuple[L.Lane, List[QueryTicket]]] = []
+            with self._lock:
+                for t in self._admission.admit():
+                    self._lane_for(t).add(t)
+                now = time.perf_counter()
+                next_due = float("inf")
+                for key in list(self._lanes):
+                    lane = self._lanes[key]
+                    if not lane.pending:
+                        del self._lanes[key]
+                        continue
+                    if self._draining or lane.due(now, self.max_batch):
+                        reason = (
+                            "full"
+                            if len(lane.pending) >= self.max_batch
+                            else "deadline"
+                        )
+                        batch = lane.take(self.max_batch)
+                        lane.metrics.record_flush(len(batch), reason=reason)
+                        batches.append((lane, batch))
+                        if lane.pending:
+                            next_due = min(next_due, lane.flush_at())
+                    else:
+                        next_due = min(next_due, lane.flush_at())
+                if self.work_conserving and not self._draining:
+                    # fill free executor slots with the oldest waiting
+                    # lanes: batch size adapts to arrival rate instead
+                    # of stalling on the half-budget timer
+                    while self._active_flushes + len(batches) < self._n_workers:
+                        waiting = [l for l in self._lanes.values() if l.pending]
+                        if not waiting:
+                            break
+                        lane = min(waiting, key=lambda l: l.pending[0].t_submit)
+                        batch = lane.take(self.max_batch)
+                        lane.metrics.record_flush(len(batch), reason="idle")
+                        batches.append((lane, batch))
+                self._active_flushes += len(batches)
+            for lane, batch in batches:
+                self._executor.submit(self._run_flush, lane, batch)
+            if batches:
+                continue  # more work may be admissible right away
+            wait = self._poll
+            if next_due != float("inf"):
+                wait = min(wait, max(0.0, next_due - time.perf_counter()))
+            self._wake.wait(timeout=max(wait, 0.0005))
+            self._wake.clear()
+
+    def _run_flush(self, lane: L.Lane, batch: List[QueryTicket]) -> None:
+        """Executor job: pin an engine (freshest or session version),
+        note the trace key, execute, then settle accounting."""
+        params = dict(batch[0].params)
+        v = None
+        error: Optional[BaseException] = None
+        try:
+            if lane.pin is not None:
+                eng = self.stream._engine_for(lane.pin.version, self.backend)
+            else:
+                v = self.stream.acquire()
+                eng = self.stream._engine_for(v, self.backend)
+            key = L.trace_key(
+                lane.kind, eng, L.dispatch_pow2(lane.kind, batch), lane.pkey
+            )
+            if key is not None:
+                with self._lock:
+                    lane.metrics.record_trace_key(key, warm=self._warm)
+            L.execute_batch(eng, lane.kind, batch, params)
+        except BaseException as exc:  # noqa: BLE001 - fail the tickets, not the service
+            error = exc
+            for t in batch:
+                if not t.done():
+                    t._fail(exc)
+        finally:
+            if v is not None:
+                self.stream.release(v)
+            with self._lock:
+                self._active_flushes -= 1
+                for t in batch:
+                    self._admission.complete(t)
+                    if error is None and t.deadline_missed:
+                        lane.metrics.deadline_misses += 1
+                if error is not None:
+                    lane.metrics.errors += len(batch)
+                self._idle.notify_all()
+            for t in batch:
+                if t.session is not None:
+                    t.session._query_done(t)
+            self._wake.set()
+
+    def wait_idle(self, timeout: float = 30.0) -> None:
+        """Block until no queued or in-flight queries remain."""
+        deadline = time.perf_counter() + timeout
+        with self._lock:
+            if not self._idle.wait_for(
+                self._drained_locked, timeout=max(0.0, deadline - time.perf_counter())
+            ):
+                raise TimeoutError("service did not go idle in time")
+
+    # -- warmup & observability ---------------------------------------------
+    def warmup(self, kinds=KINDS, **params: Any) -> None:
+        """Pre-compile the power-of-two trace ladder: one synthetic
+        dispatch per (kind, pow2 size <= max_batch) against the current
+        version, then flip warm — from here on any NEW trace key counts
+        as a retrace in ``stats()``.  Covers the default-params lanes
+        (``params`` here must match what clients will send)."""
+        pkey = params_key(params)
+        sizes: List[int] = []
+        b = 1
+        while b < self.max_batch:
+            sizes.append(b)
+            b <<= 1
+        sizes.append(L.next_pow2(self.max_batch))
+        v = self.stream.acquire()
+        try:
+            eng = self.stream._engine_for(v, self.backend)
+            n = eng.n
+            for kind in kinds:
+                ladder = [1] if kind == "cc" else sizes
+                for size in ladder:
+                    srcs = [i % max(n, 1) for i in range(size)]
+                    tickets = [
+                        QueryTicket(
+                            "_warmup", kind,
+                            None if kind == "cc" else srcs[i],
+                            params, deadline=time.perf_counter() + 60.0,
+                        )
+                        for i in range(size)
+                    ]
+                    L.execute_batch(eng, kind, tickets, dict(params))
+                    key = L.trace_key(
+                        kind, eng, L.dispatch_pow2(kind, tickets), pkey
+                    )
+                    if key is not None:
+                        with self._lock:
+                            self._kind_metrics[kind].record_trace_key(
+                                key, warm=False
+                            )
+        finally:
+            self.stream.release(v)
+        self.mark_warm()
+
+    def mark_warm(self) -> None:
+        """Flip the steady-state flag: every trace key first seen after
+        this counts as a retrace."""
+        with self._lock:
+            self._warm = True
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "running": self._running,
+                "warm": self._warm,
+                "backend": self.backend,
+                "max_batch": self.max_batch,
+                "publishes": self._publishes,
+                "version_stamp": self.stream.vg.current_stamp,
+                "live_versions": self.stream.vg.live_versions(),
+                "sessions_open": len(self._sessions),
+                "lanes": {
+                    k: m.snapshot() for k, m in self._kind_metrics.items()
+                },
+                "tenants": self._admission.snapshot(),
+                "admission": {
+                    "backlog": self._admission.backlog_depth(),
+                    "in_flight": self._admission.in_flight_total,
+                    "max_inflight_total": self._admission.max_inflight_total,
+                    "active_flushes": self._active_flushes,
+                    "work_conserving": self.work_conserving,
+                },
+                "updates": self.updates.stats(),
+                "jit_traces": TRACES.count,
+            }
