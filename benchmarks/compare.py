@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m benchmarks.compare \
         --baseline BENCH_BYTES.json --current rows.json \
-        [--threshold 0.25] [--warn-only] [--units ms,us,s,B/edge]
+        [--threshold 0.25] [--warn-only] [--units ms,us,s,B/edge] \
+        [--benefit-units hit%]
 
 ``--baseline`` is a trajectory file (``benchmarks.trajectory``; the LAST
 run record is the baseline) or a plain ``benchmarks.run --json`` row
@@ -10,10 +11,13 @@ list.  ``--current`` is either form too.  Rows are matched by exact
 name; a row regresses when its value grows more than ``--threshold``
 (default 25%) over baseline, counted only for cost-like units (time and
 bytes — bigger is worse; dimensionless "x" ratio rows are reported but
-never gate, their targets live in the bench notes).  Exit 1 on any
-regression unless ``--warn-only``; missing/new rows are reported but
-never gate (bench row names carry graph sizes and may legitimately
-shift when a generator changes).
+never gate, their targets live in the bench notes).  ``--benefit-units``
+names units that gate in the OPPOSITE direction — bigger is better, a
+DROP past the threshold regresses (e.g. the serve bench's deterministic
+replay hit-rate, unit ``hit%``).  Exit 1 on any regression unless
+``--warn-only``; missing/new rows are reported but never gate (bench
+row names carry graph sizes and may legitimately shift when a generator
+changes).
 """
 from __future__ import annotations
 
@@ -22,6 +26,8 @@ import json
 import sys
 
 COST_UNITS = ("s", "ms", "us", "ns", "B/edge", "B", "MB")
+# units where bigger is BETTER: a drop past the threshold regresses
+BENEFIT_UNITS = ("hit%",)
 
 
 def load_rows(path: str) -> dict:
@@ -41,6 +47,7 @@ def compare(
     current: dict,
     threshold: float = 0.25,
     units: tuple = COST_UNITS,
+    benefit_units: tuple = (),
 ) -> tuple[list, list, list]:
     """(regressions, improvements, informational) row comparisons."""
     regressions, improvements, info = [], [], []
@@ -51,11 +58,17 @@ def compare(
             continue
         bv, cv = float(base["value"]), float(cur["value"])
         unit = cur.get("unit", "")
-        if unit not in units or bv <= 0:
+        if (unit not in units and unit not in benefit_units) or bv <= 0:
             info.append((name, bv, cv, f"not gated ({unit or 'no unit'})"))
             continue
         rel = (cv - bv) / bv
-        if rel > threshold:
+        if unit in benefit_units:
+            # bigger is better: gate the drop
+            if rel < -threshold:
+                regressions.append((name, bv, cv, f"{rel:.0%} ({unit}, benefit)"))
+            elif rel > threshold:
+                improvements.append((name, bv, cv, f"+{rel:.0%} ({unit}, benefit)"))
+        elif rel > threshold:
             regressions.append((name, bv, cv, f"+{rel:.0%} ({unit})"))
         elif rel < -threshold:
             improvements.append((name, bv, cv, f"{rel:.0%} ({unit})"))
@@ -79,6 +92,12 @@ def main() -> None:
         default=",".join(COST_UNITS),
         help="comma-separated units that gate (bigger value = worse)",
     )
+    ap.add_argument(
+        "--benefit-units",
+        default="",
+        help="comma-separated units that gate the other way "
+             "(bigger value = better; a drop past the threshold fails)",
+    )
     args = ap.parse_args()
 
     baseline = load_rows(args.baseline)
@@ -86,8 +105,10 @@ def main() -> None:
     if not baseline:
         print(f"no baseline rows in {args.baseline}; nothing to gate")
         return
+    benefit = tuple(u for u in args.benefit_units.split(",") if u)
     regs, imps, info = compare(
-        baseline, current, args.threshold, tuple(args.units.split(","))
+        baseline, current, args.threshold, tuple(args.units.split(",")),
+        benefit,
     )
 
     def show(tag, items):
@@ -99,8 +120,9 @@ def main() -> None:
     show("REGRESSION", regs)
     show("improved  ", imps)
     show("info      ", info)
+    gated_units = set(args.units.split(",")) | set(benefit)
     n_gated = sum(
-        1 for r in current.values() if r.get("unit", "") in args.units.split(",")
+        1 for r in current.values() if r.get("unit", "") in gated_units
     )
     print(
         f"# {len(regs)} regression(s), {len(imps)} improvement(s) over "

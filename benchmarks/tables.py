@@ -1063,7 +1063,14 @@ def bench_serve(quick: bool = False) -> List[Row]:
     Also reports the deadline-miss rate (the CI hard gate: compare.py
     fails a >25%-point regression via ``--units pct``), achieved batch
     size, writer update throughput under query load, and the
-    post-warmup retrace count (must be 0)."""
+    post-warmup retrace count (must be 0).
+
+    The third config layers the version-keyed result cache + delta
+    carry-forward (DESIGN.md §14) on the batch=B service (claim: >= 2x
+    the cache-off qps under the same Zipf load, p99 no worse), and a
+    single-threaded DETERMINISTIC Zipf replay measures the cache hit
+    rate reproducibly — the ``hit%`` row compare.py hard-gates via
+    ``--benefit-units`` (a drop regresses)."""
     import threading as _threading
 
     from repro.core import graph as G
@@ -1078,7 +1085,7 @@ def bench_serve(quick: bool = False) -> List[Row]:
     n_clients = 24 if quick else 48
     deadline_s = 2.0
 
-    def run_config(max_batch: int):
+    def run_config(max_batch: int, cache: bool = False):
         stream = AspenStream(G.build_graph(n, edges))
         svc = GraphQueryService(
             stream,
@@ -1087,11 +1094,15 @@ def bench_serve(quick: bool = False) -> List[Row]:
             default_deadline_s=deadline_s,
             work_conserving=True,
             max_inflight_total=max(4 * n_clients, 64),
+            result_cache=cache,
+            fastpath=cache,
         )
         svc.start()
         svc.warmup(kinds=("bfs", "sssp"))
         stop = _threading.Event()
         lats: List[List[float]] = [[] for _ in range(n_clients)]
+        cached_lats: List[List[float]] = [[] for _ in range(n_clients)]
+        cold_lats: List[List[float]] = [[] for _ in range(n_clients)]
         misses = [0] * n_clients
 
         def client(idx: int) -> None:
@@ -1112,6 +1123,7 @@ def bench_serve(quick: bool = False) -> List[Row]:
                 except Exception:
                     continue
                 lats[idx].append(t.latency_s)
+                (cached_lats if t.cached else cold_lats)[idx].append(t.latency_s)
                 misses[idx] += bool(t.deadline_missed)
 
         def feeder() -> None:
@@ -1140,23 +1152,64 @@ def bench_serve(quick: bool = False) -> List[Row]:
         st = svc.stats()
         svc.stop()
         all_lats = np.asarray([x for l in lats for x in l], np.float64)
+        warm = np.asarray([x for l in cached_lats for x in l], np.float64)
+        cold = np.asarray([x for l in cold_lats for x in l], np.float64)
         total = max(len(all_lats), 1)
         lanes = st["lanes"]
         flushed_b = sum(l["flushed_batches"] for l in lanes.values())
         flushed_r = sum(l["flushed_requests"] for l in lanes.values())
+        cache_st = st.get("cache") or {}
         return {
             "qps": len(all_lats) / elapsed,
             "p50_ms": float(np.percentile(all_lats, 50)) * 1e3 if len(all_lats) else 0.0,
             "p99_ms": float(np.percentile(all_lats, 99)) * 1e3 if len(all_lats) else 0.0,
+            "warm_p50_ms": float(np.percentile(warm, 50)) * 1e3 if len(warm) else 0.0,
+            "cold_p50_ms": float(np.percentile(cold, 50)) * 1e3 if len(cold) else 0.0,
             "miss_pct": 100.0 * sum(misses) / total,
             "mean_batch": flushed_r / max(flushed_b, 1),
             "retraces": sum(l["retraces"] for l in lanes.values()),
             "updates_per_s": st["updates"]["drained"] / elapsed,
             "publishes": st["publishes"],
+            "hit_rate_pct": 100.0 * cache_st.get("hit_rate", 0.0),
+        }
+
+    def run_replay():
+        # deterministic single-threaded Zipf replay: fixed seed,
+        # sequential queries, synchronous publish + promotion barriers —
+        # the hit-rate it reports is bit-reproducible run to run, so CI
+        # can hard-gate it (benefit unit: a DROP fails)
+        stream = AspenStream(G.build_graph(n, edges))
+        svc = GraphQueryService(
+            stream, backend="jax", max_batch=8,
+            default_deadline_s=deadline_s, fastpath=True,
+        )
+        svc.start()
+        svc.warmup(kinds=("bfs", "sssp"))
+        rng = np.random.default_rng(1234)
+        n_q = 400 if quick else 1500
+        t0 = time.perf_counter()
+        for i in range(n_q):
+            kind = "bfs" if rng.random() < 0.8 else "sssp"
+            src = int(min(rng.zipf(2.0) - 1, n - 1))
+            svc.query(kind, source=src, timeout=30)
+            if i % 100 == 99:
+                svc.insert_edges(
+                    np.array([[int(rng.integers(n)), int(rng.integers(n))]])
+                )
+                svc.flush_updates()
+                svc.flush_promotions()
+        elapsed = time.perf_counter() - t0
+        st = svc.stats()
+        svc.stop()
+        return {
+            "hit_rate_pct": 100.0 * st["cache"]["hit_rate"],
+            "qps": n_q / elapsed,
         }
 
     r1 = run_config(1)
     rb = run_config(16 if quick else 64)
+    rc = run_config(16 if quick else 64, cache=True)
+    rp = run_replay()
     B = 16 if quick else 64
     return [
         ("SERVE/qps/batch=1", r1["qps"], "queries/s",
@@ -1180,6 +1233,27 @@ def bench_serve(quick: bool = False) -> List[Row]:
          "update throughput under full query load"),
         (f"SERVE/publishes/batch={B}", float(rb["publishes"]), "count",
          "versions published during the window"),
+        ("SERVE/qps/cached", rc["qps"], "queries/s",
+         f"batch={B} + result cache + carry-forward, same load"),
+        ("SERVE/speedup/cache", rc["qps"] / max(rb["qps"], 1e-9), "x",
+         "claim: >= 2x over the cache-off run"),
+        ("SERVE/p50_ms/cached", rc["p50_ms"], "ms", ""),
+        ("SERVE/p99_ms/cached", rc["p99_ms"], "ms",
+         "tail no worse than cache-off: misses ride the same lanes"),
+        ("SERVE/warm_p50_ms/cached", rc["warm_p50_ms"], "ms",
+         "cache-hit latency (no lane, no executor hop)"),
+        ("SERVE/cold_p50_ms/cached", rc["cold_p50_ms"], "ms",
+         "miss latency (full admission + lane + dispatch path)"),
+        ("SERVE/hit_rate_pct/cached", rc["hit_rate_pct"], "pct",
+         "closed-loop hit rate under the live writer"),
+        ("SERVE/deadline_miss_pct/cached", rc["miss_pct"], "pct",
+         "CI hard gate: fail if this regresses > 25 points"),
+        ("SERVE/retraces/cached", float(rc["retraces"]), "count",
+         "must stay 0 after warmup (shrunk batches stay on the ladder)"),
+        ("SERVE/replay_hit_rate", rp["hit_rate_pct"], "hit%",
+         "deterministic Zipf replay; CI benefit gate: a >25% drop fails"),
+        ("SERVE/replay_qps", rp["qps"], "queries/s",
+         "single-threaded replay throughput (fastpath + cache)"),
     ]
 
 

@@ -694,11 +694,12 @@ class AspenStream:
         """``engine`` for an ALREADY-ACQUIRED version (the caller holds
         the reference): subscriptions pin their engine to the version
         they hold, never the racy current one."""
-        from .traversal import make_engine
+        from .traversal import ENGINE_BUILDS, make_engine
 
         key = ("engine", backend)
         eng = v.cache.get(key)
         if eng is None:
+            ENGINE_BUILDS.bump()
             if backend == "jax" and MIRROR in v.aux:
                 eng = make_engine(v.aux[MIRROR])
             elif backend == "sharded" and SHARDED_MIRROR in v.aux:
@@ -740,25 +741,35 @@ class AspenStream:
         engine: a serving lane whose pending set collapsed to nothing
         (dedup, cancellation) must flush as a no-op, not an error.
         """
-        from .traversal import algorithms as talg
-
         if kind not in ("bfs", "distances", "bc", "sssp", "pagerank"):
             raise ValueError(f"unknown query kind {kind!r}")
-        if kind == "pagerank":
-            resets = kw.get("resets")
-            if resets is not None and np.asarray(resets).shape[0] == 0:
-                return []
-            if backend is None:
-                backend = self._default_backend()
-            return talg.pagerank_multi(self.engine(backend), **kw)
-        if sources is None:
-            return []
-        sources = np.asarray(sources, dtype=np.int64).reshape(-1)
-        if sources.size == 0:
+        if self._empty_request(kind, sources, kw):
             return []
         if backend is None:
             backend = self._default_backend()
-        eng = self.engine(backend)
+        return self._serve_kind(self.engine(backend), kind, sources, kw)
+
+    @staticmethod
+    def _empty_request(kind: str, sources, kw) -> bool:
+        """The no-op-flush check, applied BEFORE any engine is fetched
+        (an empty request must not pay an acquire or a build)."""
+        if kind == "pagerank":
+            resets = kw.get("resets")
+            return resets is not None and np.asarray(resets).shape[0] == 0
+        if sources is None:
+            return True
+        return np.asarray(sources, dtype=np.int64).reshape(-1).size == 0
+
+    @staticmethod
+    def _serve_kind(eng, kind: str, sources, kw):
+        """One kind's dispatch against an already-fetched engine: the
+        shared tail of ``query_batch`` / ``query_multi`` (source dedup +
+        fan-out; pagerank takes its ``resets`` rows verbatim)."""
+        from .traversal import algorithms as talg
+
+        if kind == "pagerank":
+            return talg.pagerank_multi(eng, **kw)
+        sources = np.asarray(sources, dtype=np.int64).reshape(-1)
         uniq, inv = np.unique(sources, return_inverse=True)
         if kind == "bfs":
             return talg.bfs_multi(eng, uniq, **kw)[0][inv]
@@ -769,6 +780,42 @@ class AspenStream:
         if kind == "sssp":
             return talg.sssp_multi(eng, uniq, **kw)[inv]
         raise ValueError(f"unknown query kind {kind!r}")
+
+    def query_multi(self, requests, backend: Optional[str] = None):
+        """Serve a MIXED-kind batch against one version: a list of
+        ``query_batch``-style request dicts (``{"kind": ..., "sources":
+        ..., **kwargs}``) answered in order against a single acquired
+        version and a single engine fetch.
+
+        ``query_batch`` called K times pays K acquire/engine lookups
+        and — worse — may straddle a publish, answering later requests
+        on a newer graph.  ``query_multi`` hoists the per-version work:
+        ONE acquire, ONE ``_engine_for`` (the engine-cache aux lookup
+        happens once; ``traversal.ENGINE_BUILDS`` pins single
+        construction in tests), and every answer reflects the same
+        snapshot.  Empty requests return ``[]`` in place, and a batch of
+        only-empty requests never fetches an engine at all."""
+        if backend is None:
+            backend = self._default_backend()
+        out = []
+        v = self.acquire()
+        try:
+            eng = None
+            for req in requests:
+                req = dict(req)
+                kind = req.pop("kind", "bfs")
+                sources = req.pop("sources", None)
+                if kind not in ("bfs", "distances", "bc", "sssp", "pagerank"):
+                    raise ValueError(f"unknown query kind {kind!r}")
+                if self._empty_request(kind, sources, req):
+                    out.append([])
+                    continue
+                if eng is None:
+                    eng = self._engine_for(v, backend)
+                out.append(self._serve_kind(eng, kind, sources, req))
+        finally:
+            self.release(v)
+        return out
 
     def subscribe(
         self,

@@ -57,6 +57,7 @@ __all__ = [
     "make_engine",
     "flat_graph_of",
     "FLAT_REBUILDS",
+    "ENGINE_BUILDS",
     "HOST_SYNCS",
     "TRACES",
 ]
@@ -66,6 +67,11 @@ __all__ = [
 # resident mirror exists to avoid).  Tests spy on ``count`` to assert
 # the mirror's engine path never falls back to a rebuild.
 FLAT_REBUILDS = Counter()
+
+# Counts engine constructions in the version-pinned engine cache
+# (``AspenStream._engine_for``).  Tests spy on ``count`` to assert a
+# mixed-kind batch against one version builds its engine exactly once.
+ENGINE_BUILDS = Counter()
 
 
 def __getattr__(name):

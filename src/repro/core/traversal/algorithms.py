@@ -250,6 +250,9 @@ def pagerank_multi(
     resets=None,
     iters: int = 10,
     damping: float = 0.85,
+    init: Optional[np.ndarray] = None,
+    tol: Optional[float] = None,
+    max_iters: int = 200,
 ) -> np.ndarray:
     """B PageRank queries against one snapshot: float[B, n].
 
@@ -261,7 +264,16 @@ def pagerank_multi(
     ``edge_map_reduce_batch`` (on jax: one Pallas segment-sum whose
     feature dim carries the lanes; weighted graphs dispatch the
     weighted kernel and normalize by weighted out-degree, like
-    ``pagerank``)."""
+    ``pagerank``).
+
+    ``init`` / ``tol`` / ``max_iters`` mirror ``pagerank``'s fixed-point
+    contract batch-wide: ``init`` (B, n) warm-starts every lane (columns
+    pad with 1/n / truncate on vertex-count changes; each lane's fixed
+    point is unique for damping < 1, so any init converges to the same
+    scores), and ``tol`` switches from fixed ``iters`` to iterating
+    until EVERY lane's L1 change drops below ``tol`` (one host sync per
+    round), up to ``max_iters`` — the contract the result cache's
+    carry-forward warm start relies on."""
     xp = engine.ops.xp
     fdt = engine.ops.float_dtype
     n = engine.n
@@ -271,13 +283,27 @@ def pagerank_multi(
         resets = xp.full((1, n), 1.0 / n, dtype=fdt)
     else:
         resets = xp.asarray(resets, dtype=fdt)
-    pr = resets
+    if init is None:
+        pr = resets
+    else:
+        init = np.asarray(init, dtype=np.float64).reshape(len(resets), -1)
+        if init.shape[1] < n:  # vertex growth since the init was computed
+            pad = np.full((init.shape[0], n - init.shape[1]), 1.0 / n)
+            init = np.concatenate([init, pad], axis=1)
+        pr = xp.asarray(init[:, :n], dtype=fdt)
     denom = xp.where(dangling, 1.0, wdeg)[None, :]
-    for _ in range(iters):
+    rounds = max_iters if tol is not None else iters
+    for _ in range(rounds):
         w = xp.where(dangling[None, :], 0.0, pr / denom)
         contrib = engine.edge_map_reduce_batch(w).astype(fdt)
         dang = xp.where(dangling[None, :], pr, 0.0).sum(axis=1, keepdims=True)
-        pr = (1.0 - damping) * resets + damping * (contrib + dang * resets)
+        nxt = (1.0 - damping) * resets + damping * (contrib + dang * resets)
+        if tol is not None:
+            PAGERANK_ROUNDS.bump()
+            if float(xp.abs(nxt - pr).sum(axis=1).max()) < tol:
+                pr = nxt
+                break
+        pr = nxt
     return engine.to_host(pr)
 
 

@@ -217,16 +217,23 @@ class VersionedGraph(Generic[G]):
         ``v_new``'s, or None when it cannot be derived — any hop already
         collected, or any hop published without a delta record (vertex
         ops, raw writes).  None is the full-recompute signal; an
-        incremental consumer holding ``v_old`` (subscriptions do) always
-        finds the one-hop chain intact because the hop's delta lives on
-        ``v_new`` itself."""
-        if v_new.stamp < v_old.stamp:
+        incremental consumer holding ``v_old`` (subscriptions and the
+        result cache's carry-forward do) always finds the one-hop chain
+        intact because the hop's delta lives on ``v_new`` itself."""
+        return self.delta_between_stamps(v_old.stamp, v_new.stamp)
+
+    def delta_between_stamps(self, old_stamp: int, new_stamp: int) -> Optional[Delta]:
+        """``delta_between`` by stamp: the same chain walk for callers
+        that hold stamps rather than version objects (version-holding
+        callers get the same liveness guarantee through the stamps —
+        only the delta records between the two are consulted)."""
+        if new_stamp < old_stamp:
             return None
-        if v_new.stamp == v_old.stamp:
+        if new_stamp == old_stamp:
             return Delta()
         with self._lock:
             parts: List[Delta] = []
-            for s in range(v_old.stamp + 1, v_new.stamp + 1):
+            for s in range(old_stamp + 1, new_stamp + 1):
                 v = self._versions.get(s)
                 if v is None:
                     return None  # hop collected: chain broken

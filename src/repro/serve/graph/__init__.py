@@ -9,13 +9,21 @@ Public surface:
       multi-query reads against one version.
   ``QueryTicket``  — the per-request future ``submit()`` returns.
   ``QueueFull``    — backpressure signal on a saturated tenant backlog.
+  ``ResultCache``  — version-keyed, delta-aware cross-request result
+      cache (on by default inside the service; exposed for tests and
+      standalone use).
 
-See DESIGN.md §13 for the admission / flush / pinning contracts, and
+See DESIGN.md §13 for the admission / flush / pinning contracts,
+DESIGN.md §14 for the result-cache key / carry-forward contracts, and
 ``examples/serve_graph.py`` for a walkthrough.
 """
 from .admission import QueueFull
 from .request import KINDS, QueryTicket
+from .result_cache import ResultCache
 from .service import GraphQueryService
 from .sessions import Session
 
-__all__ = ["GraphQueryService", "Session", "QueryTicket", "QueueFull", "KINDS"]
+__all__ = [
+    "GraphQueryService", "Session", "QueryTicket", "QueueFull", "KINDS",
+    "ResultCache",
+]

@@ -120,7 +120,39 @@ def dispatch_pow2(kind: str, tickets: List[QueryTicket]) -> int:
     return next_pow2(uniq)
 
 
-def execute_batch(engine, kind: str, tickets: List[QueryTicket], params: dict) -> None:
+def serve_cached(
+    cache, version, kind: str, tickets: List[QueryTicket]
+) -> List[QueryTicket]:
+    """Flush-time cache consult: complete every ticket whose answer is
+    already cached on the batch's serving version and return the
+    remaining misses.  This is the lane dedup generalized across TIME —
+    a source computed by an earlier flush on the same version shrinks
+    this dispatch exactly like a duplicate inside it would.  Cached
+    tickets report ``batch_size == 0`` (they rode no dispatch)."""
+    if cache is None or version is None:
+        return tickets
+    now = time.perf_counter()
+    misses: List[QueryTicket] = []
+    for t in tickets:
+        ent = cache.get(version, kind, t.pkey, None if kind == "cc" else t.source)
+        if ent is None:
+            misses.append(t)
+            continue
+        t.t_flush = now
+        t.batch_size = 0
+        t.cached = True
+        t._complete(ent.value)
+    return misses
+
+
+def execute_batch(
+    engine,
+    kind: str,
+    tickets: List[QueryTicket],
+    params: dict,
+    cache=None,
+    version=None,
+) -> None:
     """Serve one flushed batch against an already-acquired engine,
     completing every ticket (the caller fails them all if this raises).
 
@@ -130,16 +162,25 @@ def execute_batch(engine, kind: str, tickets: List[QueryTicket], params: dict) -
     builds one personalization row per distinct source (one-hot; None =
     the global uniform row) and pads the row count to a power of two
     itself, since ``pagerank_multi`` takes ``resets`` verbatim.  cc runs
-    the global computation once and every rider shares the labels."""
+    the global computation once and every rider shares the labels.
+
+    With ``cache``/``version`` set, every unique answer is also recorded
+    on the serving version (the fill side of ``serve_cached``; bfs
+    stashes its depths rows too — the warm state the carry-forward
+    ``incremental_bfs`` needs, computed for free by ``bfs_multi``)."""
     from repro.core.traversal import algorithms as talg
 
     now = time.perf_counter()
     for t in tickets:
         t.t_flush = now
         t.batch_size = len(tickets)
+    fill = cache is not None and version is not None
+    pkey = tickets[0].pkey
 
     if kind == "cc":
         labels = np.asarray(talg.connected_components(engine, **params), np.int64)
+        if fill:
+            cache.put(version, kind, pkey, None, labels)
         for t in tickets:
             t._complete(labels)
         return
@@ -163,6 +204,9 @@ def execute_batch(engine, kind: str, tickets: List[QueryTicket], params: dict) -
         # reset reaches the driver)
         resets[b:, :] = resets[0, :]
         scores = np.asarray(talg.pagerank_multi(engine, resets=resets, **params))
+        if fill:
+            for s, i in row_of.items():
+                cache.put(version, kind, pkey, s, scores[i])
         for t in tickets:
             t._complete(scores[row_of[t.source]])
         return
@@ -170,9 +214,17 @@ def execute_batch(engine, kind: str, tickets: List[QueryTicket], params: dict) -
     sources = np.asarray([t.source for t in tickets], dtype=np.int64)
     uniq, inv = np.unique(sources, return_inverse=True)
     if kind == "bfs":
-        rows = np.asarray(talg.bfs_multi(engine, uniq, **params)[0], np.int64)
+        rows, depths = talg.bfs_multi(engine, uniq, **params)
+        rows = np.asarray(rows, np.int64)
+        depths = np.asarray(depths, np.int64)
+        if fill:
+            for i, s in enumerate(uniq):
+                cache.put(version, kind, pkey, int(s), rows[i], state=depths[i])
     elif kind == "sssp":
         rows = np.asarray(talg.sssp_multi(engine, uniq, **params), np.float64)
+        if fill:
+            for i, s in enumerate(uniq):
+                cache.put(version, kind, pkey, int(s), rows[i])
     else:  # pragma: no cover - guarded by QueryTicket validation
         raise ValueError(f"unknown lane kind {kind!r}")
     for t, i in zip(tickets, inv):

@@ -26,6 +26,7 @@ class LaneMetrics:
         "queued", "flushed_batches", "flushed_requests", "batch_hist",
         "deadline_misses", "errors", "trace_keys", "retraces",
         "deadline_flushes", "full_flushes", "idle_flushes",
+        "cache_hits", "fastpath_hits", "fastpath_syncs", "capture_hits",
     )
 
     def __init__(self):
@@ -40,6 +41,10 @@ class LaneMetrics:
         self.deadline_flushes = 0    # flushes forced by the half-budget rule
         self.full_flushes = 0        # flushes forced by a full lane
         self.idle_flushes = 0        # work-conserving flushes (idle executor)
+        self.cache_hits = 0          # tickets served from the result cache
+        self.fastpath_hits = 0       # ...of which at submit time (no lane hop)
+        self.fastpath_syncs = 0      # singleton misses served on the caller
+        self.capture_hits = 0        # ...hits landed by riding a promotion
 
     def record_flush(self, size: int, *, reason: str) -> None:
         self.flushed_batches += 1
@@ -75,17 +80,29 @@ class LaneMetrics:
             "errors": self.errors,
             "trace_keys": len(self.trace_keys),
             "retraces": self.retraces,
+            "cache_hits": self.cache_hits,
+            "fastpath_hits": self.fastpath_hits,
+            "fastpath_syncs": self.fastpath_syncs,
+            "capture_hits": self.capture_hits,
         }
 
 
 class TenantMetrics:
-    __slots__ = ("submitted", "admitted", "completed", "rejected")
+    """``cached`` counts exact-hit requests served without admission:
+    those still bump submitted/admitted/completed together (keeping the
+    per-tenant accounting identity ``submitted == admitted + rejected +
+    backlog`` and ``admitted == completed + in_flight`` snapshot-exact)
+    but never advance the tenant's WFQ pass — admission meters MISSES,
+    so fairness is arbitrated over real engine work only."""
+
+    __slots__ = ("submitted", "admitted", "completed", "rejected", "cached")
 
     def __init__(self):
         self.submitted = 0
         self.admitted = 0
         self.completed = 0
         self.rejected = 0
+        self.cached = 0
 
     def snapshot(self, *, weight: float, in_flight: int, backlog: int) -> dict:
         return {
@@ -94,6 +111,7 @@ class TenantMetrics:
             "admitted": self.admitted,
             "completed": self.completed,
             "rejected": self.rejected,
+            "cached": self.cached,
             "in_flight": in_flight,
             "backlog": backlog,
         }

@@ -45,7 +45,7 @@ class QueryTicket:
     __slots__ = (
         "tenant", "kind", "source", "params", "pkey", "session",
         "deadline", "t_submit", "t_flush", "t_done", "batch_size",
-        "_event", "_result", "_error",
+        "cached", "fastpath", "_event", "_result", "_error",
     )
 
     def __init__(
@@ -72,6 +72,8 @@ class QueryTicket:
         self.t_flush: Optional[float] = None
         self.t_done: Optional[float] = None
         self.batch_size: Optional[int] = None
+        self.cached = False    # served from the result cache (batch_size 0)
+        self.fastpath = False  # served at submit time, no lane/executor hop
         self._event = threading.Event()
         self._result = None
         self._error: Optional[BaseException] = None

@@ -23,6 +23,20 @@ deadlines on purpose.  Batches are padded to powers of two, so after
 ``warmup()`` steady-state serving replays compiled traces only
 (``stats()["lanes"][kind]["retraces"]`` == 0, cross-checked against
 ``traversal.TRACES`` in tests).
+
+Cross-request result cache (DESIGN.md §14): queries on an unchanged
+version are pure functions of (version, kind, params, source), so the
+service keeps a version-keyed ``ResultCache`` between the dispatcher
+and the engines.  Exact hits are served AT SUBMIT TIME without touching
+admission (misses still meter WFQ fairness — cache luck must not starve
+anyone's real work), lanes consult the cache at flush time to shrink
+the dispatched batch, and a PROMOTION thread carries hot entries across
+publishes through the delta-aware incremental paths (the ``on_publish``
+listener itself only sets an event — the writer never computes).  The
+opt-in ``fastpath`` mode additionally serves singleton misses
+synchronously on the caller thread when the executor is idle (batch=1
+without the lane/ticket/executor hop); like ``work_conserving`` it is
+off by default to keep flush accounting deterministic.
 """
 from __future__ import annotations
 
@@ -40,6 +54,7 @@ from . import lanes as L
 from .admission import AdmissionQueue, QueueFull
 from .metrics import LaneMetrics
 from .request import KINDS, QueryTicket, params_key
+from .result_cache import PROMOTE_BATCH, ResultCache
 from .sessions import Session
 
 __all__ = ["GraphQueryService", "QueueFull"]
@@ -72,6 +87,11 @@ class GraphQueryService:
         max_backlog: int = 8192,
         poll_interval_s: float = 0.010,
         work_conserving: bool = False,
+        result_cache: bool = True,
+        cache_capacity: int = 512,
+        carry_forward: bool = True,
+        carry_limit: int = 32,
+        fastpath: bool = False,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -91,6 +111,12 @@ class GraphQueryService:
         # strict policy gives deterministic flush accounting.
         self.work_conserving = work_conserving
         self._active_flushes = 0
+        # cross-request result cache + delta carry-forward (DESIGN.md §14)
+        self._cache = ResultCache(cache_capacity) if result_cache else None
+        self._carry = bool(carry_forward) and result_cache
+        self._carry_limit = int(carry_limit)
+        self._fastpath = bool(fastpath)
+        self._anchor = None  # the promotion thread's held previous version
 
         self._lock = threading.RLock()
         self._admission = AdmissionQueue(
@@ -116,6 +142,14 @@ class GraphQueryService:
         self._executor: Optional[ThreadPoolExecutor] = None
         self._writer: Optional[threading.Thread] = None
         self._dispatcher: Optional[threading.Thread] = None
+        self._promoter: Optional[threading.Thread] = None
+        self._stop_promoter = threading.Event()
+        self._promote_wake = threading.Event()
+        self._promoting = False
+        # capture waiters: post-publish misses whose key the in-flight
+        # promotion pass is about to re-derive park here briefly
+        # instead of re-entering the dispatch path (leaf lock)
+        self._promo_cv = threading.Condition(threading.Lock())
         self._n_workers = int(n_workers)
 
     # -- lifecycle -----------------------------------------------------------
@@ -139,6 +173,17 @@ class GraphQueryService:
         )
         self._writer.start()
         self._dispatcher.start()
+        if self._cache is not None and self._carry:
+            # the anchor is the version whose cached answers the next
+            # carry-forward reads from; the promotion thread rotates it
+            # publish by publish (never the writer's callback)
+            self._anchor = self.stream.acquire()
+            self._stop_promoter.clear()
+            self._promote_wake.clear()
+            self._promoter = threading.Thread(
+                target=self._promote_loop, name="graph-serve-promote", daemon=True
+            )
+            self._promoter.start()
         return self
 
     def stop(self, timeout: float = 30.0) -> None:
@@ -164,6 +209,16 @@ class GraphQueryService:
             self._dispatcher.join(timeout=5.0)
         if self._writer is not None:
             self._writer.join(timeout=5.0)
+        self._stop_promoter.set()
+        self._promote_wake.set()
+        if self._promoter is not None:
+            self._promoter.join(timeout=5.0)
+            self._promoter = None
+        if self._anchor is not None:
+            self.stream.release(self._anchor)
+            self._anchor = None
+        with self._promo_cv:  # capture waiters must not sit out the cap
+            self._promo_cv.notify_all()
         if self._executor is not None:
             self._executor.shutdown(wait=True)
             self._executor = None
@@ -229,8 +284,12 @@ class GraphQueryService:
                 self.updates.wait_nonempty(timeout=0.005)
 
     def _on_publish(self, v) -> None:
+        # runs on the WRITER thread: the on_publish contract forbids
+        # compute here, so carry-forward work only gets SIGNALLED
         with self._lock:
             self._publishes += 1
+        if self._carry:
+            self._promote_wake.set()
 
     def flush_updates(self, timeout: float = 30.0) -> None:
         """Block until every update queued so far has been PUBLISHED
@@ -246,6 +305,69 @@ class GraphQueryService:
                 )
             time.sleep(0.001)
 
+    # -- carry-forward promotion ---------------------------------------------
+    def _promote_loop(self) -> None:
+        """Promotion thread: after each publish, carry hot cache
+        entries from the held anchor version onto the current one
+        through the incremental paths, then rotate the anchor.  At most
+        one superseded version stays alive per rotation, so
+        ``live_versions`` stays bounded under a continuous writer."""
+        while not self._stop_promoter.is_set():
+            self._promote_wake.wait(timeout=0.05)
+            self._promote_wake.clear()
+            if self._stop_promoter.is_set():
+                break
+            self._promote_once()
+
+    def _promote_once(self) -> None:
+        anchor = self._anchor
+        if anchor is None or self._cache is None:
+            return
+        cur = self.stream.acquire()
+        if cur.stamp == anchor.stamp:
+            self.stream.release(cur)
+            return
+        self._promoting = True
+        try:
+            self._cache.carry_forward(
+                self.stream, anchor, cur, self.backend, limit=self._carry_limit
+            )
+        except Exception:
+            pass  # a failed round degrades hot entries to cold misses
+        finally:
+            self._anchor = cur
+            self.stream.release(anchor)
+            self._promoting = False
+            # release the capture waiters first (their retry lookup is
+            # the cheapest path to completion), then wake the
+            # dispatcher so miss tickets that raced into lanes get
+            # rescued by the flush-time consult instead of waiting out
+            # the flush policy
+            with self._promo_cv:
+                self._promo_cv.notify_all()
+            self._wake.set()
+
+    def flush_promotions(self, timeout: float = 30.0) -> None:
+        """Block until carry-forward has caught up with the writer's
+        current version — the cache-side sibling of ``flush_updates``
+        (promotion barrier for tests / deterministic replays).  No-op
+        when the cache or carry-forward is off."""
+        if self._cache is None or not self._carry:
+            return
+        deadline = time.perf_counter() + timeout
+        while True:
+            anchor = self._anchor
+            if (
+                anchor is not None
+                and anchor.stamp >= self.stream.vg.current_stamp
+                and not self._promoting
+            ):
+                return
+            if time.perf_counter() > deadline:
+                raise TimeoutError("carry-forward did not catch up in time")
+            self._promote_wake.set()
+            time.sleep(0.001)
+
     # -- query side ----------------------------------------------------------
     def submit(
         self,
@@ -258,19 +380,218 @@ class GraphQueryService:
     ) -> QueryTicket:
         """Submit one query; returns the ticket to block on.  Raises
         ``QueueFull`` when the tenant's backlog is at capacity (the
-        client-visible backpressure signal)."""
+        client-visible backpressure signal).
+
+        An exact result-cache hit (same version, kind, params, source)
+        completes the ticket right here — no admission, no lane, no
+        executor hop (``ticket.cached`` / ``ticket.fastpath``, batch
+        size 0).  Misses are metered through admission as before; with
+        ``fastpath=True`` a singleton miss on a fully idle service is
+        additionally served synchronously on the calling thread."""
         budget = self.default_deadline_s if deadline_s is None else float(deadline_s)
         ticket = QueryTicket(
             tenant, kind, source, params,
             deadline=time.perf_counter() + budget,
             session=session,
         )
+        hit_value = None
+        sync = False
+        capture = 0
         with self._lock:
             if not self._running:
                 raise RuntimeError("service is not running")
-            self._admission.submit(ticket)
+            if self._cache is not None:
+                ent = self._cache_lookup_locked(ticket, session)
+                if ent is not None:
+                    self._meter_hit_locked(ticket)
+                    hit_value = ent.value
+                elif session is None and self._carry:
+                    # post-publish blind window: if the key this miss
+                    # wants is hot on the promotion anchor, the pass in
+                    # flight is about to re-derive it — park on the
+                    # pass instead of recomputing through dispatch
+                    anchor = self._anchor
+                    cur_stamp = self.stream.vg.current_stamp
+                    if anchor is not None and (
+                        anchor.stamp < cur_stamp or self._promoting
+                    ):
+                        skey = (
+                            None if ticket.kind == "cc" else ticket.source
+                        )
+                        prev = self._cache.peek(
+                            anchor, ticket.kind, ticket.pkey, skey
+                        )
+                        if prev is not None and prev.hits > 0:
+                            capture = cur_stamp
+            if hit_value is None and not capture:
+                sync = self._admit_locked(ticket)
+        if hit_value is not None:
+            self._finish_hit(ticket, hit_value, session)
+            return ticket
+        if capture:
+            return self._capture_wait(ticket, session, capture)
+        if sync:
+            self._run_sync(ticket)
+            return ticket
         self._wake.set()
         return ticket
+
+    def _meter_hit_locked(self, ticket: QueryTicket) -> None:
+        # meter the tenant ledger (the TenantMetrics identity
+        # invariants stay snapshot-exact) but never its WFQ pass:
+        # admission arbitrates real engine work only
+        tm = self._admission.tenant(ticket.tenant).metrics
+        tm.submitted += 1
+        tm.admitted += 1
+        tm.completed += 1
+        tm.cached += 1
+        m = self._kind_metrics[ticket.kind]
+        m.cache_hits += 1
+        m.fastpath_hits += 1
+
+    def _admit_locked(self, ticket: QueryTicket) -> bool:
+        """Meter the miss through admission; True when the fastpath
+        claimed it for synchronous execution on the caller thread."""
+        self._admission.submit(ticket)
+        if (
+            self._fastpath
+            and self._admission.in_flight_total == 0
+            and self._active_flushes == 0
+            and self._admission.backlog_depth() == 1
+        ):
+            # idle service, our ticket is the whole backlog: admit it
+            # (vpass advances — it IS real work) and run it on this
+            # thread, skipping the executor hop
+            if self._admission.admit(max_n=1):
+                return True
+        return False
+
+    @staticmethod
+    def _finish_hit(ticket: QueryTicket, value, session) -> None:
+        ticket.t_flush = time.perf_counter()
+        ticket.batch_size = 0
+        ticket.cached = True
+        ticket.fastpath = True
+        ticket._complete(value)
+        if session is not None:
+            session._query_done(ticket)
+
+    # longest a captured miss parks on an in-flight promotion pass
+    # before giving up and dispatching normally — the common wait is
+    # one batched incremental dispatch, a few ms
+    CAPTURE_WAIT_S = 0.1
+
+    def _capture_wait(
+        self, ticket: QueryTicket, session, stamp: int
+    ) -> QueryTicket:
+        """Park a post-publish miss until the in-flight carry-forward
+        pass lands, then retry the lookup.  Without this, every publish
+        turns the whole hot set cold at once and every closed-loop
+        client recomputes its hot key through the full dispatch path —
+        duplicating the promotion work and convoying the executor; with
+        it, the storm rides ONE batched promotion."""
+        end = min(time.perf_counter() + self.CAPTURE_WAIT_S, ticket.deadline)
+        with self._promo_cv:
+            while True:
+                a = self._anchor
+                if a is None or (a.stamp >= stamp and not self._promoting):
+                    break
+                left = end - time.perf_counter()
+                if left <= 0:
+                    break
+                self._promo_cv.wait(left)
+        hit_value = None
+        sync = False
+        with self._lock:
+            if not self._running:
+                raise RuntimeError("service is not running")
+            ent = (
+                None if self._cache is None
+                else self._cache_lookup_locked(ticket, session)
+            )
+            if ent is not None:
+                self._meter_hit_locked(ticket)
+                self._kind_metrics[ticket.kind].capture_hits += 1
+                hit_value = ent.value
+            else:
+                sync = self._admit_locked(ticket)
+        if hit_value is not None:
+            self._finish_hit(ticket, hit_value, session)
+            return ticket
+        if sync:
+            self._run_sync(ticket)
+            return ticket
+        self._wake.set()
+        return ticket
+
+    def _cache_lookup_locked(self, ticket: QueryTicket, session):
+        """Exact-hit lookup against the version this ticket would be
+        served on: the session's pinned version, or the stream's current
+        one — so a pinned session can never see a newer version's cached
+        answer, and a freshest read never a stale one."""
+        skey = None if ticket.kind == "cc" else ticket.source
+        if session is not None:
+            return self._cache.get(session.version, ticket.kind, ticket.pkey, skey)
+        a = self._anchor
+        if a is not None and a is self.stream.vg._current:
+            # the promotion anchor IS the current version and the
+            # service already holds a ref: skip the acquire/release
+            # round trip through the version-graph lock (the hot hit
+            # path runs per request; a publish racing past the
+            # identity check linearizes the same way it would racing
+            # past an acquire)
+            return self._cache.get(a, ticket.kind, ticket.pkey, skey)
+        v = self.stream.acquire()
+        try:
+            return self._cache.get(v, ticket.kind, ticket.pkey, skey)
+        finally:
+            self.stream.release(v)
+
+    def _run_sync(self, ticket: QueryTicket) -> None:
+        """Opt-in batch=1 fast path: the executor is idle and nothing
+        else is queued, so serve the singleton miss on the CALLER
+        thread.  The ticket went through admission normally; only the
+        lane wait and the executor handoff are skipped."""
+        session = ticket.session
+        m = self._kind_metrics[ticket.kind]
+        v = None
+        error: Optional[BaseException] = None
+        try:
+            if session is not None:
+                ver = session.version
+            else:
+                v = self.stream.acquire()
+                ver = v
+            eng = self.stream._engine_for(ver, self.backend)
+            key = L.trace_key(
+                ticket.kind, eng, L.dispatch_pow2(ticket.kind, [ticket]),
+                ticket.pkey,
+            )
+            with self._lock:
+                m.fastpath_syncs += 1
+                if key is not None:
+                    m.record_trace_key(key, warm=self._warm)
+            ticket.fastpath = True
+            L.execute_batch(
+                eng, ticket.kind, [ticket], dict(ticket.params),
+                cache=self._cache, version=ver,
+            )
+        except BaseException as exc:  # noqa: BLE001 - surfaces at result()
+            error = exc
+            if not ticket.done():
+                ticket._fail(exc)
+        finally:
+            if v is not None:
+                self.stream.release(v)
+            with self._lock:
+                self._admission.complete(ticket)
+                if error is None and ticket.deadline_missed:
+                    m.deadline_misses += 1
+                if error is not None:
+                    m.errors += 1
+                self._idle.notify_all()
+            if session is not None:
+                session._query_done(ticket)
 
     def query(self, kind: str, source: Optional[int] = None, timeout: float = 30.0,
               **kw) -> np.ndarray:
@@ -352,24 +673,34 @@ class GraphQueryService:
             self._wake.clear()
 
     def _run_flush(self, lane: L.Lane, batch: List[QueryTicket]) -> None:
-        """Executor job: pin an engine (freshest or session version),
-        note the trace key, execute, then settle accounting."""
+        """Executor job: pin the serving version (freshest or session),
+        consult the result cache (flush-time dedup across time: hits
+        drop out of the dispatch), note the trace key for the SHRUNK
+        batch, execute, then settle accounting."""
         params = dict(batch[0].params)
         v = None
+        n_cached = 0
         error: Optional[BaseException] = None
         try:
             if lane.pin is not None:
-                eng = self.stream._engine_for(lane.pin.version, self.backend)
+                ver = lane.pin.version
             else:
                 v = self.stream.acquire()
-                eng = self.stream._engine_for(v, self.backend)
-            key = L.trace_key(
-                lane.kind, eng, L.dispatch_pow2(lane.kind, batch), lane.pkey
-            )
-            if key is not None:
-                with self._lock:
-                    lane.metrics.record_trace_key(key, warm=self._warm)
-            L.execute_batch(eng, lane.kind, batch, params)
+                ver = v
+            live = L.serve_cached(self._cache, ver, lane.kind, batch)
+            n_cached = len(batch) - len(live)
+            if live:
+                eng = self.stream._engine_for(ver, self.backend)
+                key = L.trace_key(
+                    lane.kind, eng, L.dispatch_pow2(lane.kind, live), lane.pkey
+                )
+                if key is not None:
+                    with self._lock:
+                        lane.metrics.record_trace_key(key, warm=self._warm)
+                L.execute_batch(
+                    eng, lane.kind, live, params,
+                    cache=self._cache, version=ver,
+                )
         except BaseException as exc:  # noqa: BLE001 - fail the tickets, not the service
             error = exc
             for t in batch:
@@ -380,6 +711,7 @@ class GraphQueryService:
                 self.stream.release(v)
             with self._lock:
                 self._active_flushes -= 1
+                lane.metrics.cache_hits += n_cached
                 for t in batch:
                     self._admission.complete(t)
                     if error is None and t.deadline_missed:
@@ -440,9 +772,49 @@ class GraphQueryService:
                             self._kind_metrics[kind].record_trace_key(
                                 key, warm=False
                             )
+            if self._carry and n:
+                self._warm_promotion(eng, kinds)
         finally:
             self.stream.release(v)
         self.mark_warm()
+
+    def _warm_promotion(self, eng, kinds) -> None:
+        """Pre-trace the carry-forward path: promotion replays the
+        incremental drivers (warm-seeded ``sssp_batch_from``,
+        depth→parents, the dense shortest-path-tree pass) the moment
+        the first publish lands, and a compile there stalls the
+        promotion thread exactly while the hot entries sit stale on
+        the old version.  Results are discarded; a self-loop insert is
+        a no-op delta, so every call converges instantly once traced."""
+        from repro.core.traversal import algorithms as talg
+        from repro.core.versioning import Delta
+
+        d = Delta(ins=np.asarray([[0, 0]], np.int64))
+        sizes: List[int] = [1]
+        while sizes[-1] * 2 <= PROMOTE_BATCH:
+            sizes.append(sizes[-1] * 2)
+        for b in sizes:
+            srcs = [0] * b
+            if "bfs" in kinds:
+                parents, depths = talg.bfs_multi(eng, srcs)
+                talg.incremental_bfs(eng, srcs, parents, depths, d)
+            if "sssp" in kinds:
+                dist = talg.sssp_multi(eng, srcs)
+                if b == 1:  # per-lane host loop: shape is B-independent
+                    tree = talg.shortest_path_parents(eng, dist, srcs)
+                else:
+                    tree = np.repeat(tree[:1], b, axis=0)
+                talg.incremental_sssp(eng, srcs, dist, tree, d)
+        if "cc" in kinds:
+            labels = talg.connected_components(eng)
+            talg.incremental_connected_components(eng, labels, d)
+        if "pagerank" in kinds:
+            reset = np.full((1, eng.n), 1.0 / max(eng.n, 1))
+            pr = talg.pagerank_multi(eng, resets=reset)
+            # the tol path is the only promotion variant with its own
+            # trace (fixed-iters promotion recomputes on the ladder)
+            talg.pagerank_multi(eng, resets=reset, init=pr,
+                                tol=1e-6, max_iters=4)
 
     def mark_warm(self) -> None:
         """Flip the steady-state flag: every trace key first seen after
@@ -473,5 +845,14 @@ class GraphQueryService:
                     "work_conserving": self.work_conserving,
                 },
                 "updates": self.updates.stats(),
+                "cache": None if self._cache is None else dict(
+                    self._cache.snapshot(),
+                    carry_forward=self._carry,
+                    carry_limit=self._carry_limit,
+                    fastpath=self._fastpath,
+                    anchor_stamp=(
+                        None if self._anchor is None else self._anchor.stamp
+                    ),
+                ),
                 "jit_traces": TRACES.count,
             }

@@ -8,9 +8,16 @@ lanes and served against that exact version no matter how many
 publishes land in between — so a multi-query read (e.g. bfs then sssp
 then pagerank over "the same graph") is strictly serializable at the
 open instant.  ``close()`` waits for in-flight session queries and
-releases the reference, letting the version (and its cached engines)
-be reclaimed; the ref-leak tests pin that 1k open/close cycles under a
-live writer leave zero extra live versions.
+releases the reference, letting the version (and its cached engines
+and cached RESULTS — the result cache stores payloads on the version
+itself) be reclaimed; the ref-leak tests pin that 1k open/close cycles
+under a live writer leave zero extra live versions.
+
+The result cache composes with pinning for free: cached answers live
+on ``Version.cache``, and ``service.submit`` looks them up against the
+session's OWN pinned version — so a session hit can only ever return a
+result computed on its snapshot, never a newer version's (pinned by
+test), while repeated identical session queries hit without a dispatch.
 """
 from __future__ import annotations
 

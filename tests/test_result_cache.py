@@ -1,0 +1,611 @@
+"""Result cache + batch=1 fast path (DESIGN.md §14).
+
+Pins the PR's contracts:
+
+  (1) the cache is VERSION-keyed: payloads live on ``Version.cache`` and
+      die with the version (weakref-verified); capacity eviction deletes
+      from the owning live version; a new version never sees an old
+      version's entry;
+  (2) submit-time exact hits bypass admission entirely — the tenant
+      ledger identities stay snapshot-exact (``cached`` counted, WFQ
+      pass NOT advanced: admission meters misses only);
+  (3) a pinned ``Session`` can never be served a newer version's cached
+      result, while repeated identical session queries hit its own;
+  (4) delta carry-forward promotes hot entries across a publish through
+      the exact incremental paths (bfs / sssp / cc; tol-pagerank
+      warm-starts; fixed-iter pagerank recomputes) and falls back to a
+      full recompute on a broken delta chain — never a wrong answer;
+  (5) lifecycle under a live writer: publishes leave ``live_versions``
+      bounded (anchor rotation), early versions and their payloads are
+      collected, and the Zipf replay still hits;
+  (6) end-to-end answers with the cache ON are bit-identical to the
+      cache-OFF run, across a publish, on numpy / jax (and sharded
+      under an 8-device mesh);
+  (7) ``stats()`` is one consistent snapshot under the lock even while
+      a reader hammers it against live traffic;
+  (8) ``query_multi`` serves a mixed-kind batch off ONE version with
+      ONE engine build (``ENGINE_BUILDS`` spy), answers matching
+      ``query_batch``;
+  (9) the opt-in ``fastpath`` serves an idle singleton miss on the
+      caller thread, fully metered.
+ (10) promotion capture: a post-publish miss on an anchor-hot key
+      parks on the in-flight carry-forward pass and lands as a hit
+      (``capture_hits``) instead of recomputing through dispatch.
+"""
+import gc
+import threading
+import weakref
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.streaming import AspenStream
+from repro.core.traversal import ENGINE_BUILDS
+from repro.core.traversal import algorithms as talg
+from repro.data.rmat import rmat_edges, symmetrize
+from repro.serve.graph import GraphQueryService, ResultCache
+from repro.serve.graph.request import params_key
+
+N = 256
+NP = 32  # path-graph vertex count
+
+
+@pytest.fixture(scope="module")
+def rmat_edge_list():
+    return symmetrize(rmat_edges(8, 2000, seed=11))
+
+
+def path_edges(n):
+    e = np.array([[i, i + 1] for i in range(n - 1)], dtype=np.int64)
+    return np.concatenate([e, e[:, ::-1]])
+
+
+def make_stream(edges, n=N, **kw):
+    return AspenStream(G.build_graph(n, edges), **kw)
+
+
+def make_service(edges, n=N, **kw):
+    kw.setdefault("backend", "numpy")
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("default_deadline_s", 0.25)
+    stream = make_stream(edges, n=n)
+    return stream, GraphQueryService(stream, **kw)
+
+
+# ---------------------------------------------------------------------------
+# (1) version keying, eviction, payload lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_cache_version_keyed_get_put():
+    stream = make_stream(path_edges(NP), n=NP)
+    cache = ResultCache(capacity=8)
+    v1 = stream.acquire()
+    val = np.arange(NP)
+    cache.put(v1, "bfs", (), 3, val)
+    ent = cache.get(v1, "bfs", (), 3)
+    assert ent is not None and ent.value is val and ent.hits == 1
+    # different source / params / kind miss
+    assert cache.get(v1, "bfs", (), 4) is None
+    assert cache.get(v1, "bfs", params_key({"x": 1}), 3) is None
+    assert cache.get(v1, "sssp", (), 3) is None
+    # a NEW version never sees the old version's entry
+    stream.insert_edges(np.array([[0, 5]]))
+    v2 = stream.acquire()
+    assert cache.get(v2, "bfs", (), 3) is None
+    snap = cache.snapshot()
+    assert snap["fills"] == 1 and snap["hits"] == 1 and snap["misses"] == 4
+    stream.release(v2)
+    stream.release(v1)
+
+
+def test_cache_capacity_eviction_deletes_from_live_version():
+    stream = make_stream(path_edges(NP), n=NP)
+    cache = ResultCache(capacity=4)
+    v1 = stream.acquire()
+    for s in range(6):
+        cache.put(v1, "bfs", (), s, np.arange(NP) + s)
+    assert cache.snapshot()["entries"] == 4
+    assert cache.evictions == 2
+    # the two oldest are gone from the version's payload dict too
+    assert cache.get(v1, "bfs", (), 0) is None
+    assert cache.get(v1, "bfs", (), 1) is None
+    assert cache.get(v1, "bfs", (), 5) is not None
+    stream.release(v1)
+
+
+def test_cache_payload_dies_with_version():
+    stream = make_stream(path_edges(NP), n=NP)
+    cache = ResultCache()
+    v1 = stream.acquire()
+    cache.put(v1, "bfs", (), 1, np.zeros(NP))
+    ref = weakref.ref(v1)
+    stream.release(v1)
+    del v1
+    stream.insert_edges(np.array([[0, 9]]))  # supersede: refcount 0 -> GC
+    gc.collect()
+    assert ref() is None  # version AND its resident payload collected
+    # the stale index slot is pruned (not counted as an eviction) once
+    # capacity pressure walks past it
+    small = ResultCache(capacity=1)
+    v = stream.acquire()
+    sref = weakref.ref(v)
+    small.put(v, "bfs", (), 0, np.zeros(NP))
+    stream.release(v)
+    del v
+    stream.insert_edges(np.array([[0, 11]]))
+    gc.collect()
+    assert sref() is None
+    v2 = stream.acquire()
+    small.put(v2, "bfs", (), 1, np.ones(NP))
+    small.put(v2, "bfs", (), 2, np.ones(NP))
+    assert small.evictions == 1  # only the live-owner eviction counted
+    stream.release(v2)
+
+
+# ---------------------------------------------------------------------------
+# (2) submit-time hits: metering without admission
+# ---------------------------------------------------------------------------
+
+
+def test_submit_hit_bypasses_admission_but_meters_ledger(rmat_edge_list):
+    stream, svc = make_service(rmat_edge_list)
+    with svc:
+        first = svc.query("bfs", source=3, tenant="a", timeout=30)
+        vpass_after_miss = svc._admission.tenant("a").vpass
+        t2 = svc.submit("bfs", source=3, tenant="a")
+        assert t2.cached and t2.fastpath and t2.batch_size == 0
+        assert np.array_equal(t2.result(timeout=5), first)
+        # the hit advanced the ledger but NOT the WFQ pass
+        assert svc._admission.tenant("a").vpass == vpass_after_miss
+        st = svc.stats()
+        ta = st["tenants"]["a"]
+        assert ta["cached"] == 1
+        assert ta["submitted"] == ta["completed"] == 2
+        assert ta["submitted"] == ta["admitted"] + ta["rejected"] + ta["backlog"]
+        assert st["lanes"]["bfs"]["cache_hits"] >= 1
+        assert st["lanes"]["bfs"]["fastpath_hits"] == 1
+        assert st["cache"]["hits"] >= 1 and st["cache"]["fills"] >= 1
+
+
+def test_cc_and_pagerank_hit_on_repeat(rmat_edge_list):
+    stream, svc = make_service(rmat_edge_list)
+    with svc:
+        cc1 = svc.query("cc", timeout=30)
+        pr1 = svc.query("pagerank", timeout=30)
+        t_cc = svc.submit("cc")
+        t_pr = svc.submit("pagerank")
+        assert t_cc.cached and t_pr.cached
+        assert np.array_equal(t_cc.result(timeout=5), cc1)
+        assert np.array_equal(t_pr.result(timeout=5), pr1)
+
+
+# ---------------------------------------------------------------------------
+# (3) pinned sessions never see a newer version's cached result
+# ---------------------------------------------------------------------------
+
+
+def test_pinned_session_never_served_newer_cached_result():
+    stream, svc = make_service(path_edges(NP), n=NP)
+    with svc:
+        with svc.session(tenant="t") as sess:
+            first = sess.query("bfs", source=0).result(timeout=30)
+            # publish a shortcut and warm the NEW version's cache
+            svc.insert_edges(np.array([[0, 20]]))
+            svc.flush_updates()
+            svc.flush_promotions()
+            fresh = svc.query("bfs", source=0, timeout=30)
+            assert not np.array_equal(fresh, first)  # graph really changed
+            # the session repeat hits its OWN version's entry: identical
+            # to the first answer, never the fresh one
+            tk = sess.query("bfs", source=0)
+            again = tk.result(timeout=30)
+            assert tk.cached
+            assert np.array_equal(again, first)
+            # and the freshest path never resurrects the pinned answer
+            tk2 = svc.submit("bfs", source=0)
+            assert np.array_equal(tk2.result(timeout=30), fresh)
+
+
+# ---------------------------------------------------------------------------
+# (4) carry-forward: incremental exactness + full fallback
+# ---------------------------------------------------------------------------
+
+
+def test_carry_forward_promotes_hot_entries_exactly():
+    stream = make_stream(path_edges(NP), n=NP)
+    cache = ResultCache()
+    v1 = stream.acquire()
+    eng1 = stream._engine_for(v1, "numpy")
+
+    p, d = talg.bfs_multi(eng1, [0])
+    cache.put(v1, "bfs", (), 0, np.asarray(p[0]), state=np.asarray(d[0]))
+    dist = talg.sssp_multi(eng1, [0])
+    cache.put(v1, "sssp", (), 0, np.asarray(dist[0], np.float64))
+    labels = talg.connected_components(eng1)
+    cache.put(v1, "cc", (), None, np.asarray(labels, np.int64))
+    pr_pkey = params_key({"tol": 1e-12, "max_iters": 500})
+    pr = talg.pagerank_multi(
+        eng1, resets=np.full((1, NP), 1.0 / NP), tol=1e-12, max_iters=500
+    )
+    cache.put(v1, "pagerank", pr_pkey, None, np.asarray(pr[0]))
+    # only HOT entries promote: touch all four
+    for kind, pkey, src in [("bfs", (), 0), ("sssp", (), 0),
+                            ("cc", (), None), ("pagerank", pr_pkey, None)]:
+        assert cache.get(v1, kind, pkey, src) is not None
+
+    stream.insert_edges(np.array([[0, 20]]))
+    v2 = stream.acquire()
+    assert cache.carry_forward(stream, v1, v2, "numpy") == 4
+    assert cache.promoted_incremental >= 3  # bfs, sssp, cc (insert-only)
+
+    eng2 = stream._engine_for(v2, "numpy")
+    ref_p, ref_d = talg.bfs_multi(eng2, [0])
+    ent = cache.get(v2, "bfs", (), 0)
+    assert np.array_equal(ent.value, np.asarray(ref_p[0]))
+    assert np.array_equal(ent.state, np.asarray(ref_d[0]))
+    ref_dist = talg.sssp_multi(eng2, [0])
+    assert np.array_equal(cache.get(v2, "sssp", (), 0).value,
+                          np.asarray(ref_dist[0], np.float64))
+    ref_cc = talg.connected_components(eng2)
+    assert np.array_equal(cache.get(v2, "cc", (), None).value,
+                          np.asarray(ref_cc, np.int64))
+    ref_pr = talg.pagerank_multi(
+        eng2, resets=np.full((1, NP), 1.0 / NP), tol=1e-12, max_iters=500
+    )
+    np.testing.assert_allclose(
+        cache.get(v2, "pagerank", pr_pkey, None).value, ref_pr[0], atol=1e-9
+    )
+    stream.release(v2)
+    stream.release(v1)
+
+
+def test_carry_forward_cold_entries_stay_behind():
+    stream = make_stream(path_edges(NP), n=NP)
+    cache = ResultCache()
+    v1 = stream.acquire()
+    cache.put(v1, "bfs", (), 0, np.arange(NP), state=np.arange(NP))
+    # never read -> not hot -> nothing to promote (and no engine work)
+    stream.insert_edges(np.array([[0, 20]]))
+    v2 = stream.acquire()
+    builds = ENGINE_BUILDS.count
+    assert cache.carry_forward(stream, v1, v2, "numpy") == 0
+    assert ENGINE_BUILDS.count == builds
+    stream.release(v2)
+    stream.release(v1)
+
+
+def test_carry_forward_full_fallback_on_broken_chain():
+    stream = make_stream(path_edges(NP), n=NP)
+    cache = ResultCache()
+    v1 = stream.acquire()
+    eng1 = stream._engine_for(v1, "numpy")
+    p, d = talg.bfs_multi(eng1, [0])
+    cache.put(v1, "bfs", (), 0, np.asarray(p[0]), state=np.asarray(d[0]))
+    assert cache.get(v1, "bfs", (), 0) is not None
+    # a vertex op publishes WITHOUT a delta record: chain broken
+    stream.insert_vertices(np.array([NP + 8]))
+    v2 = stream.acquire()
+    assert stream.vg.delta_between(v1, v2) is None
+    assert cache.carry_forward(stream, v1, v2, "numpy") == 1
+    assert cache.promoted_full == 1 and cache.promoted_incremental == 0
+    eng2 = stream._engine_for(v2, "numpy")
+    ref_p, _ = talg.bfs_multi(eng2, [0])
+    assert np.array_equal(cache.get(v2, "bfs", (), 0).value,
+                          np.asarray(ref_p[0]))
+    stream.release(v2)
+    stream.release(v1)
+
+
+def test_carry_forward_drops_unknown_params():
+    stream = make_stream(path_edges(NP), n=NP)
+    cache = ResultCache()
+    v1 = stream.acquire()
+    pkey = params_key({"mystery": 1})
+    cache.put(v1, "bfs", pkey, 0, np.arange(NP), state=np.arange(NP))
+    cache.get(v1, "bfs", pkey, 0)
+    stream.insert_edges(np.array([[0, 20]]))
+    v2 = stream.acquire()
+    assert cache.carry_forward(stream, v1, v2, "numpy") == 0
+    assert cache.promoted_dropped == 1
+    assert cache.get(v2, "bfs", pkey, 0) is None  # never promoted wrong
+    stream.release(v2)
+    stream.release(v1)
+
+
+# ---------------------------------------------------------------------------
+# (5) lifecycle under a live writer: bounded versions, no leaks, hits
+# ---------------------------------------------------------------------------
+
+
+def test_cache_lifecycle_1k_publishes_no_leaks(rmat_edge_list):
+    stream, svc = make_service(rmat_edge_list)
+    rng = np.random.default_rng(3)
+    version_refs = []
+    with svc:
+        for i in range(1000):
+            stream.insert_edges(
+                np.array([[int(rng.integers(N)), int(rng.integers(N))]])
+            )
+            if i % 10 == 0:
+                src = int(min(rng.zipf(2.0) - 1, N - 1))
+                # twice: the second is a same-version hit, marking the
+                # entry hot so carry-forward keeps it warm
+                svc.query("bfs", source=src, timeout=30)
+                svc.query("bfs", source=src, timeout=30)
+            if i % 100 == 0:
+                v = stream.acquire()
+                version_refs.append(weakref.ref(v))
+                stream.release(v)
+        svc.flush_promotions()
+        st = svc.stats()
+        assert st["live_versions"] <= 3
+        assert st["cache"]["hits"] > 0
+        assert st["cache"]["hit_rate"] > 0
+    gc.collect()
+    dead = sum(1 for r in version_refs if r() is None)
+    assert dead >= len(version_refs) - 2  # only the newest may survive
+    assert stream.vg.live_versions() == 1  # anchor released on stop
+
+
+def test_carry_forward_keeps_hot_entry_warm_across_publishes(rmat_edge_list):
+    stream, svc = make_service(rmat_edge_list)
+    with svc:
+        svc.query("bfs", source=3, timeout=30)
+        svc.query("bfs", source=3, timeout=30)  # hot
+        for _ in range(5):
+            stream.insert_edges(np.array([[7, 11]]))
+        svc.flush_promotions()
+        before = svc.stats()["cache"]["hits"]
+        t = svc.submit("bfs", source=3)
+        t.result(timeout=30)
+        assert t.cached  # promoted entry served the post-publish repeat
+        assert svc.stats()["cache"]["promoted_incremental"] >= 1
+        assert svc.stats()["cache"]["hits"] == before + 1
+
+
+# ---------------------------------------------------------------------------
+# (6) cache on == cache off, bit-identical, across a publish
+# ---------------------------------------------------------------------------
+
+REPLAY = [
+    ("bfs", 3), ("sssp", 5), ("bfs", 3), ("cc", None),
+    ("pagerank", None), ("bfs", 3), ("sssp", 5), ("pagerank", None),
+]
+
+
+def _run_replay(svc, publish_edges):
+    out = []
+    for kind, src in REPLAY:
+        out.append(np.asarray(svc.query(kind, source=src, timeout=60)))
+    svc.insert_edges(publish_edges)
+    svc.flush_updates()
+    svc.flush_promotions()
+    for kind, src in REPLAY:
+        out.append(np.asarray(svc.query(kind, source=src, timeout=60)))
+    return out
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_cached_bit_identical_to_uncached(rmat_edge_list, backend):
+    publish = np.array([[3, 200], [200, 210]])
+    got = {}
+    for cache_on in (False, True):
+        stream = make_stream(rmat_edge_list)
+        svc = GraphQueryService(
+            stream, backend=backend, max_batch=8,
+            result_cache=cache_on, fastpath=cache_on,
+        )
+        with svc:
+            got[cache_on] = _run_replay(svc, publish)
+            if cache_on:
+                assert svc.stats()["cache"]["hits"] > 0
+    for a, b in zip(got[False], got[True]):
+        assert a.dtype == b.dtype and np.array_equal(a, b)
+
+
+@pytest.mark.multidevice
+def test_cached_bit_identical_sharded(rmat_edge_list):
+    publish = np.array([[3, 200], [200, 210]])
+    got = {}
+    for cache_on in (False, True):
+        stream = AspenStream(
+            G.build_graph(N, rmat_edge_list), mirror="sharded", n_shards=8
+        )
+        svc = GraphQueryService(
+            stream, backend="sharded", max_batch=4, result_cache=cache_on
+        )
+        with svc:
+            got[cache_on] = _run_replay(svc, publish)
+    for a, b in zip(got[False], got[True]):
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# (7) stats() is one consistent snapshot
+# ---------------------------------------------------------------------------
+
+
+def test_stats_consistent_snapshot_under_hammering_reader(rmat_edge_list):
+    stream, svc = make_service(rmat_edge_list, max_batch=4)
+    bad = []
+    stop = threading.Event()
+
+    def hammer():
+        while not stop.is_set():
+            st = svc.stats()
+            for name, t in st["tenants"].items():
+                if t["submitted"] != t["admitted"] + t["rejected"] + t["backlog"]:
+                    bad.append(("ledger", name, t))
+                if t["admitted"] != t["completed"] + t["in_flight"]:
+                    bad.append(("inflight", name, t))
+            for k, m in st["lanes"].items():
+                if m["flushed_requests"] != sum(
+                    s * c for s, c in m["batch_size_hist"].items()
+                ):
+                    bad.append(("hist", k, m))
+
+    with svc:
+        th = threading.Thread(target=hammer)
+        th.start()
+        rng = np.random.default_rng(7)
+        tickets = []
+        for i in range(300):
+            src = int(rng.integers(0, 16))  # tight range: repeats -> hits
+            tickets.append(svc.submit("bfs", source=src, tenant=f"t{i % 3}"))
+        for t in tickets:
+            t.result(timeout=30)
+        svc.wait_idle()
+        stop.set()
+        th.join(timeout=10)
+        assert svc.stats()["cache"]["hits"] > 0  # the mix exercised hits
+    assert not bad, bad[:3]
+
+
+# ---------------------------------------------------------------------------
+# (8) query_multi: one version, one engine build, query_batch parity
+# ---------------------------------------------------------------------------
+
+
+def test_query_multi_single_engine_build_and_parity(rmat_edge_list):
+    stream = make_stream(rmat_edge_list)
+    resets = np.zeros((2, N))
+    resets[0, :] = 1.0 / N
+    resets[1, 7] = 1.0
+    reqs = [
+        {"kind": "bfs", "sources": [3, 9, 3]},
+        {"kind": "sssp", "sources": [5]},
+        {"kind": "bfs", "sources": []},  # empty stays a no-op in place
+        {"kind": "pagerank", "resets": resets},
+        {"kind": "distances", "sources": [2]},
+    ]
+    before = ENGINE_BUILDS.count
+    got = stream.query_multi(reqs, backend="numpy")
+    assert ENGINE_BUILDS.count == before + 1  # one build for the whole batch
+    ref_stream = make_stream(rmat_edge_list)
+    assert np.array_equal(
+        got[0], ref_stream.query_batch([3, 9, 3], kind="bfs", backend="numpy")
+    )
+    assert np.array_equal(
+        got[1], ref_stream.query_batch([5], kind="sssp", backend="numpy")
+    )
+    assert got[2] == []
+    assert np.array_equal(
+        got[3],
+        ref_stream.query_batch(kind="pagerank", backend="numpy", resets=resets),
+    )
+    assert np.array_equal(
+        got[4], ref_stream.query_batch([2], kind="distances", backend="numpy")
+    )
+    # a second mixed batch on the unchanged version: zero new builds
+    before = ENGINE_BUILDS.count
+    stream.query_multi(reqs[:2], backend="numpy")
+    assert ENGINE_BUILDS.count == before
+
+
+def test_query_multi_all_empty_never_builds(rmat_edge_list):
+    stream = make_stream(rmat_edge_list)
+    before = ENGINE_BUILDS.count
+    got = stream.query_multi(
+        [{"kind": "bfs", "sources": []},
+         {"kind": "pagerank", "resets": np.zeros((0, N))}],
+        backend="numpy",
+    )
+    assert got == [[], []]
+    assert ENGINE_BUILDS.count == before
+    with pytest.raises(ValueError):
+        stream.query_multi([{"kind": "nope", "sources": [1]}], backend="numpy")
+
+
+# ---------------------------------------------------------------------------
+# (9) opt-in sync fast path
+# ---------------------------------------------------------------------------
+
+
+def test_fastpath_serves_idle_singleton_on_caller_thread(rmat_edge_list):
+    stream, svc = make_service(rmat_edge_list, fastpath=True)
+    with svc:
+        first = svc.query("bfs", source=3, timeout=30)
+        st = svc.stats()
+        assert st["lanes"]["bfs"]["fastpath_syncs"] == 1
+        assert st["lanes"]["bfs"]["flushed_batches"] == 0  # no executor hop
+        # the sync miss was fully metered
+        t = st["tenants"]["default"]
+        assert t["submitted"] == t["admitted"] == t["completed"] == 1
+        # and it filled the cache: the repeat is a submit-time hit
+        tk = svc.submit("bfs", source=3)
+        assert tk.cached
+        assert np.array_equal(tk.result(timeout=5), first)
+    assert np.array_equal(
+        first, stream.query_batch([3], kind="bfs", backend="numpy")[0]
+    )
+
+
+def test_capture_rides_inflight_promotion(rmat_edge_list):
+    stream, svc = make_service(rmat_edge_list)
+    svc.CAPTURE_WAIT_S = 10.0
+    gate = threading.Event()      # holds the promotion pass open
+    entered = threading.Event()   # the pass is in flight
+    parked = threading.Event()    # the miss chose the capture path
+    orig_carry = svc._cache.carry_forward
+
+    def slow_carry(*a, **kw):
+        entered.set()
+        gate.wait(30.0)
+        return orig_carry(*a, **kw)
+
+    svc._cache.carry_forward = slow_carry
+    orig_wait = svc._capture_wait
+
+    def spy_wait(ticket, session, stamp):
+        parked.set()
+        return orig_wait(ticket, session, stamp)
+
+    svc._capture_wait = spy_wait
+    with svc:
+        svc.query("bfs", source=3, timeout=30)
+        svc.query("bfs", source=3, timeout=30)  # hot on the anchor
+        vpass_before = svc._admission.tenant("default").vpass
+        stream.insert_edges(np.array([[3, 40]]))  # publish -> pass wakes
+        assert entered.wait(10.0)  # promotion now held open at the gate
+        out = {}
+
+        def go():
+            t = svc.submit("bfs", source=3, deadline_s=20.0)
+            out["value"] = t.result(timeout=30)
+            out["ticket"] = t
+
+        th = threading.Thread(target=go)
+        th.start()
+        assert parked.wait(10.0)  # the miss is riding the pass, not a lane
+        gate.set()
+        th.join(timeout=30)
+        assert "value" in out
+        tk = out["ticket"]
+        assert tk.cached and tk.fastpath and tk.batch_size == 0
+        st = svc.stats()
+        assert st["lanes"]["bfs"]["capture_hits"] == 1
+        assert st["cache"]["promoted_incremental"] >= 1
+        # a captured hit meters the ledger but never the WFQ pass
+        assert svc._admission.tenant("default").vpass == vpass_before
+        assert st["tenants"]["default"]["cached"] >= 2
+    ref = stream.query_batch([3], kind="bfs", backend="numpy")[0]
+    assert np.array_equal(out["value"], ref)
+
+
+def test_fastpath_jax_zero_retraces_after_warmup(rmat_edge_list):
+    stream, svc = make_service(rmat_edge_list, backend="jax", max_batch=4,
+                               fastpath=True)
+    with svc:
+        svc.warmup()
+        from repro.core.traversal import TRACES
+
+        before = TRACES.count
+        for src in (3, 5, 3, 9):
+            svc.query("bfs", source=src, timeout=30)
+        st = svc.stats()
+        assert st["lanes"]["bfs"]["retraces"] == 0
+        assert TRACES.count == before  # pow2=1 covered by the warmup ladder
+        assert st["lanes"]["bfs"]["fastpath_syncs"] >= 1
+        assert st["lanes"]["bfs"]["cache_hits"] >= 1
